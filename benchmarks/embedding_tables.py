@@ -1,0 +1,41 @@
+"""Paper Fig 15: SingleTable vs BatchedTable embedding-lookup throughput.
+
+THE paper §4.1 reproduction. SingleTable launches one gather per table;
+BatchedTable fuses all tables into one op (FBGEMM design). Sweeps number of
+tables, batch size, and vector width (the paper's three axes). Derived:
+launch-count ratio and effective-bandwidth model; the paper's claim
+(BatchedTable ≥1.5× at small batch, converging at large batch) is asserted
+by tests/test_benchmarks.py over these numbers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.embedding_api import (
+    batched_table_lookup, single_table_lookup)
+
+ROWS = 4_096
+
+
+def run(quick: bool = True) -> None:
+    key = jax.random.PRNGKey(0)
+    dims = [64] if quick else [16, 64, 128, 256]
+    tables_sweep = [4, 20] if quick else [1, 4, 10, 20, 40]
+    batch_sweep = [4, 64] if quick else [4, 16, 64, 256, 1024]
+    L = 20                                      # pooling factor (RM2)
+    single = jax.jit(single_table_lookup)
+    batched = jax.jit(batched_table_lookup)
+    for D in dims:
+        for T in tables_sweep:
+            big = jax.random.normal(key, (T * ROWS, D), jnp.float32)
+            offs = jnp.arange(T, dtype=jnp.int32) * ROWS
+            tabs = [big[t * ROWS:(t + 1) * ROWS] for t in range(T)]
+            for B in batch_sweep:
+                idx = jax.random.randint(key, (B, T, L), 0, ROWS)
+                us_s = time_fn(single, tabs, idx, iters=3)
+                us_b = time_fn(batched, big, offs, idx, iters=3)
+                speedup = us_s / max(us_b, 1e-9)
+                emit(f"embed_single_T{T}_B{B}_D{D}", us_s, f"launches={T}")
+                emit(f"embed_batched_T{T}_B{B}_D{D}", us_b,
+                     f"launches=1;speedup_vs_single={speedup:.2f}")

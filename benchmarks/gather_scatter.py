@@ -1,0 +1,37 @@
+"""Paper Fig 9: GUPS-style random vector gather/scatter, vector-size sweep.
+
+The paper's finding: Gaudi's 256 B minimum access granularity wastes
+bandwidth for small vectors (15% util ≤128 B vs A100's 36%). The TPU
+analogue: a (1, D) row DMA moves at least one (8,128)-lane tile; derived
+`tpu_bw_util` applies exactly that waste model. Wall time uses the jnp path
+(XLA gather) — the Pallas kernel is validated in tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.gather_scatter.ref import gather_ref, scatter_ref
+from repro.roofline.analysis import HW
+
+_HW = HW()
+TILE_BYTES = 128 * 4          # one f32 lane row
+
+
+def run(quick: bool = True) -> None:
+    R = 65_536 if quick else 4_000_000
+    N = 8_192 if quick else 1_000_000
+    key = jax.random.PRNGKey(0)
+    idx = jax.random.randint(key, (N,), 0, R)
+    g = jax.jit(gather_ref)
+    s = jax.jit(scatter_ref)
+    for vec_bytes in [16, 64, 128, 256, 512, 2048]:
+        D = max(vec_bytes // 4, 1)
+        table = jax.random.normal(key, (R, D), jnp.float32)
+        src = jax.random.normal(key, (N, D), jnp.float32)
+        us_g = time_fn(g, table, idx)
+        us_s = time_fn(s, table, idx, src)
+        waste = vec_bytes / (max(-(-vec_bytes // TILE_BYTES), 1) * TILE_BYTES)
+        util = 0.85 * waste          # 0.85 = random-access ceiling
+        emit(f"gather_{vec_bytes}B", us_g, f"tpu_bw_util={util:.2f}")
+        emit(f"scatter_{vec_bytes}B", us_s, f"tpu_bw_util={util:.2f}")

@@ -1,0 +1,61 @@
+"""Paper Fig 12 + 17 d/e: end-to-end LLM serving — prefill/decode latency
+breakdown across output lengths, TTFT/TPOT from the continuous-batching
+engine (Dynamic-Sonnet-style variable lengths)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.config import ServeConfig, get_config
+from repro.models.api import build_model
+from repro.serving.engine import Request, ServingEngine
+
+
+def run(quick: bool = True) -> None:
+    cfg = get_config("smollm-360m").reduced(dtype="float32")
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # prefill vs decode latency breakdown (Fig 12b)
+    import jax.numpy as jnp
+    B, in_len = (2, 64) if quick else (16, 100)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, in_len), 0,
+                              cfg.vocab_size)
+    prefill = jax.jit(lambda p, t: model.forward(p, t, last_only=True)[0])
+    us_prefill = time_fn(prefill, params, toks, iters=3)
+    cache = model.init_decode_cache(B, in_len + 64)
+    step = jax.jit(model.decode_step)
+    one = jnp.zeros((B,), jnp.int32)
+    us_decode = time_fn(lambda p, c, t: step(p, c, t)[0], params, cache, one,
+                        iters=3)
+    for out_len in [25, 100, 400]:
+        total = us_prefill + out_len * us_decode
+        emit(f"llm_breakdown_out{out_len}", total,
+             f"prefill_frac={us_prefill/total:.2f};"
+             f"decode_frac={out_len*us_decode/total:.2f}")
+
+    # continuous batching TTFT/TPOT with variable lengths (Fig 17 d/e)
+    n_req = 3 if quick else 16
+    rng = np.random.default_rng(0)
+    for max_batch in ([2] if quick else [2, 8, 32]):
+        serve = ServeConfig(model=cfg.name, kv_block_size=8,
+                            max_batch=max_batch)
+        engine = ServingEngine(model, params, cfg, serve, num_blocks=256)
+        for i in range(n_req):
+            plen = int(rng.integers(4, 12))
+            engine.submit(Request(
+                req_id=i,
+                prompt=rng.integers(0, cfg.vocab_size, (plen,),
+                                    dtype=np.int32),
+                max_new_tokens=int(rng.integers(3, 8))))
+        t0 = time.time()
+        engine.run_until_done()
+        dt = time.time() - t0
+        m = engine.metrics()
+        emit(f"llm_engine_maxbatch{max_batch}", dt * 1e6,
+             f"ttft_ms={m['mean_ttft_s']*1e3:.1f};"
+             f"tpot_ms={m['mean_tpot_s']*1e3:.1f};"
+             f"tok_s={m['output_tokens']/dt:.1f}")

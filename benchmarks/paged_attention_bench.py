@@ -1,0 +1,78 @@
+"""Paper Fig 17 a–c: PagedAttention — vLLM_base (padded BlockTable) vs
+vLLM_opt (flat BlockList), with the zero-padding-fraction sweep.
+
+THE paper §4.2 reproduction. The padded baseline gathers every BlockTable
+entry including zero-pads; the BlockList path touches only effectual blocks.
+Measured: wall time of both. Derived: the HLO gather-bytes ratio (from
+cost_analysis of both jitted programs) — the hardware-independent form of
+the paper's 7.4×/55.7× result. tests/test_benchmarks.py asserts the
+speedup grows with the padding fraction."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.attention_api import (
+    paged_attention_base, paged_attention_opt)
+from repro.core.paged_kv import BlockAllocator
+
+
+def _setup(B, seq_lens, max_blocks, NB, BS, KV, HD, H, key):
+    al = BlockAllocator(num_blocks=NB, block_size=BS)
+    al._free = np.random.RandomState(0).permutation(NB).tolist()
+    for r, L in enumerate(seq_lens):
+        al.allocate(r, L)
+    tab, lens = al.build_block_table(list(range(B)), max_blocks=max_blocks)
+    tot = sum(-(-L // BS) for L in seq_lens)
+    bl, br, bp, lens2 = al.build_block_list(list(range(B)), max_total=tot)
+    ks = jax.random.split(key, 3)
+    pool_k = jax.random.normal(ks[0], (NB, BS, KV, HD), jnp.float32)
+    pool_v = jax.random.normal(ks[1], (NB, BS, KV, HD), jnp.float32)
+    q = jax.random.normal(ks[2], (B, H, HD), jnp.float32)
+    return (q, pool_k, pool_v, jnp.asarray(tab), jnp.asarray(lens),
+            jnp.asarray(bl), jnp.asarray(br), jnp.asarray(bp),
+            jnp.asarray(lens2))
+
+
+def _hlo_bytes(fn, *args) -> float:
+    c = jax.jit(fn).lower(*args).compile()
+    ca = c.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else ca
+    return float(ca.get("bytes accessed", 0.0))
+
+
+def run(quick: bool = True) -> None:
+    key = jax.random.PRNGKey(0)
+    B, BS, KV, HD, H = (16, 16, 4, 64, 16) if quick else (32, 16, 8, 128, 32)
+    full_blocks = 16 if quick else 64
+    base_j = jax.jit(paged_attention_base)
+    opt_j = jax.jit(paged_attention_opt)
+    # padding fraction sweep (Fig 17b): all requests at (1-frac)·max length
+    for frac in [0.0, 0.3, 0.6, 0.9]:
+        eff_blocks = max(1, int(round(full_blocks * (1 - frac))))
+        seq_lens = [eff_blocks * BS] * B
+        NB = B * full_blocks + 8
+        (q, pk, pv, tab, lens, bl, br, bp, lens2) = _setup(
+            B, seq_lens, full_blocks, NB, BS, KV, HD, H, key)
+        us_base = time_fn(base_j, q, pk, pv, tab, lens, iters=3)
+        us_opt = time_fn(opt_j, q, pk, pv, bl, br, bp, lens2, iters=3)
+        by_base = _hlo_bytes(paged_attention_base, q, pk, pv, tab, lens)
+        by_opt = _hlo_bytes(paged_attention_opt, q, pk, pv, bl, br, bp, lens2)
+        emit(f"paged_base_pad{int(frac*100)}", us_base,
+             f"hlo_bytes={by_base:.0f}")
+        emit(f"paged_opt_pad{int(frac*100)}", us_opt,
+             f"hlo_bytes={by_opt:.0f};speedup={us_base/max(us_opt,1e-9):.2f};"
+             f"bytes_ratio={by_base/max(by_opt,1):.2f}")
+    # batch/seq sweep at 0% padding (Fig 17a)
+    for B2, blocks in ([(8, 8), (32, 16)] if quick else
+                       [(8, 8), (32, 16), (64, 32), (128, 64)]):
+        seq_lens = [blocks * BS] * B2
+        NB = B2 * blocks + 8
+        (q, pk, pv, tab, lens, bl, br, bp, lens2) = _setup(
+            B2, seq_lens, blocks, NB, BS, KV, HD, H, key)
+        us_base = time_fn(base_j, q, pk, pv, tab, lens, iters=3)
+        us_opt = time_fn(opt_j, q, pk, pv, bl, br, bp, lens2, iters=3)
+        emit(f"paged_opt_B{B2}_S{blocks*BS}", us_opt,
+             f"speedup_vs_base={us_base/max(us_opt,1e-9):.2f}")

@@ -1,0 +1,44 @@
+"""Paper Fig 11 / Table 3: end-to-end RecSys (RM1 compute-bound, RM2
+memory-bound) serving latency + energy model.
+
+Derived: the roofline energy model replaces the paper's hl-smi/nvidia-smi
+power rails (documented in DESIGN.md): J = flops·0.3pJ + bytes·60pJ (TPU-
+class constants), reported per inference."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.config import get_config
+from repro.data.pipeline import SyntheticRecSysDataset
+from repro.models.api import build_model
+
+PJ_FLOP = 0.3e-12
+PJ_BYTE = 60e-12
+
+
+def run(quick: bool = True) -> None:
+    rows = 10_000 if quick else 1_000_000
+    for name in ("rm1", "rm2"):
+        cfg = dataclasses.replace(get_config(name), num_embeddings=rows)
+        for use_batched in (True, False):
+            model = build_model(cfg, use_batched=use_batched)
+            params = model.init(jax.random.PRNGKey(0))
+            fwd = jax.jit(model.forward)
+            for B in ([64] if quick else [16, 64, 256, 1024, 4096]):
+                ds = SyntheticRecSysDataset(cfg, B)
+                batch = {k: jnp.asarray(v)
+                         for k, v in ds.batch_at(0).items()}
+                us = time_fn(fwd, params, batch, iters=3)
+                c = jax.jit(model.forward).lower(params, batch).compile()
+                ca = c.cost_analysis()
+                ca = ca[0] if isinstance(ca, list) else ca
+                fl, by = ca.get("flops", 0.0), ca.get("bytes accessed", 0.0)
+                joules = fl * PJ_FLOP + by * PJ_BYTE
+                tag = "batched" if use_batched else "single"
+                emit(f"recsys_{name}_{tag}_B{B}", us,
+                     f"flops={fl:.3g};bytes={by:.3g};"
+                     f"energy_uJ_per_inf={joules/B*1e6:.2f}")

@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--full`` widens sweeps.
+
+| module                 | paper figure/table |
+|------------------------|--------------------|
+| gemm_roofline          | Fig 4, 5, 7        |
+| stream                 | Fig 8 / Alg 1      |
+| gather_scatter         | Fig 9              |
+| collectives            | Fig 10             |
+| embedding_tables       | Fig 15 (S4.1)      |
+| paged_attention_bench  | Fig 17 a-c (S4.2)  |
+| recsys_e2e             | Fig 11 / Table 3   |
+| llm_e2e                | Fig 12, 17 d-e     |
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "gemm_roofline",
+    "stream",
+    "gather_scatter",
+    "collectives",
+    "embedding_tables",
+    "paged_attention_bench",
+    "recsys_e2e",
+    "llm_e2e",
+]
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None, help="comma-separated module list")
+    p.add_argument("--full", action="store_true")
+    args = p.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for m in mods:
+        mod = __import__(f"benchmarks.{m}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            mod.run(quick=not args.full)
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+        print(f"# {m} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

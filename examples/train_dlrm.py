@@ -1,0 +1,49 @@
+"""Train DLRM-DCNv2 (RM2) end-to-end with the BatchedTable embedding path —
+the paper's §4.1 technique inside a full training loop.
+
+    PYTHONPATH=src python examples/train_dlrm.py
+"""
+import dataclasses
+import time
+
+import jax
+
+from repro.config import get_config
+from repro.data.pipeline import DataPipeline, SyntheticRecSysDataset
+from repro.models.api import build_model
+from repro.optim import adamw
+from repro.optim.optimizer import apply_updates
+
+
+def main() -> None:
+    cfg = dataclasses.replace(get_config("rm2"), num_embeddings=5_000)
+    model = build_model(cfg, use_batched=True)   # the paper's technique
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw(weight_decay=0.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        upd, state, _ = opt.update(grads, state, params, 1e-3)
+        return apply_updates(params, upd), state, loss
+
+    pipe = DataPipeline(SyntheticRecSysDataset(cfg, 256))
+    t0 = time.time()
+    first = last = None
+    for i in range(30):
+        _, batch = next(pipe)
+        batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        params, state, loss = step(params, state, batch)
+        if i == 0:
+            first = float(loss)
+        last = float(loss)
+        if i % 10 == 0:
+            print(f"step {i:3d}  bce {float(loss):.4f}")
+    pipe.close()
+    print(f"30 steps in {time.time()-t0:.1f}s; loss {first:.4f} -> {last:.4f}")
+    assert last < first
+
+
+if __name__ == "__main__":
+    main()

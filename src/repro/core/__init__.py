@@ -1,0 +1,9 @@
+"""The paper's contribution as first-class framework features.
+
+* :mod:`repro.core.paged_kv` — paged KV-cache pool + block allocator
+* :mod:`repro.core.attention_api` — PagedAttention: padded ``BlockTable``
+  baseline (vLLM_base) vs flat ``BlockList`` optimized path (vLLM_opt)
+* :mod:`repro.core.embedding_api` — embedding lookups: ``SingleTable``
+  baseline vs fused ``BatchedTable`` (FBGEMM-style)
+"""
+from repro.core import attention_api, embedding_api, paged_kv  # noqa: F401

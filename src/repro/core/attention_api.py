@@ -1,0 +1,135 @@
+"""PagedAttention: baseline padded BlockTable vs optimized flat BlockList.
+
+Reproduces the paper's §4.2 vLLM case study as a TPU-native op pair:
+
+* :func:`paged_attention_base` — vLLM_base analogue. Gathers **every** entry
+  of the padded (B, max_blocks) BlockTable, including zero-pad blocks, then
+  masks. The redundant gathers are real HLO bytes (visible in cost analysis),
+  exactly the waste the paper measures (Fig 17b).
+* :func:`paged_attention_opt` — vLLM_opt analogue. A flat BlockList of only
+  effectual blocks drives a *batched GEMM* over (total_blocks, block_size)
+  tiles with a segment-softmax across each request's blocks. This is the
+  MXU-friendly restructuring the paper performs at the PyTorch level; here it
+  is also the exact math of the Pallas kernel in
+  ``repro.kernels.paged_attention`` (scalar-prefetched index_map).
+* :func:`paged_attention_sharded` — beyond-paper: flash-decoding combine of
+  the opt path across a mesh axis (sequence-sharded KV pool), used by the
+  multi-pod ``serve_step``.
+
+All math: q (B, H, HD) single decode token; pool (NB, BS, KV, HD).
+GQA handled by grouping H into KV groups. f32 softmax accumulation.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _q_grouped(q, num_kv: int):
+    B, H, HD = q.shape
+    return q.reshape(B, num_kv, H // num_kv, HD)
+
+
+def paged_attention_base(q, pool_k, pool_v, block_table, seq_lens,
+                         *, sm_scale: Optional[float] = None):
+    """Baseline: padded BlockTable (B, MAXB). Gathers pad blocks too."""
+    B, H, HD = q.shape
+    NB, BS, KV, _ = pool_k.shape
+    MAXB = block_table.shape[1]
+    scale = sm_scale if sm_scale is not None else HD ** -0.5
+
+    # Redundant gather: (B, MAXB, BS, KV, HD) — pads included, as in vLLM_base.
+    k = jnp.take(pool_k, block_table.reshape(-1), axis=0).reshape(
+        B, MAXB, BS, KV, HD)
+    v = jnp.take(pool_v, block_table.reshape(-1), axis=0).reshape(
+        B, MAXB, BS, KV, HD)
+    qg = _q_grouped(q, KV)
+    scores = jnp.einsum("bkgd,bmskd->bkgms", qg, k).astype(jnp.float32) * scale
+    pos = (jnp.arange(MAXB)[:, None] * BS + jnp.arange(BS)[None, :])  # (MAXB,BS)
+    mask = pos[None] < seq_lens[:, None, None]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores.reshape(B, KV, qg.shape[2], -1), axis=-1)
+    w = w.reshape(scores.shape).astype(v.dtype)
+    out = jnp.einsum("bkgms,bmskd->bkgd", w, v)
+    return out.reshape(B, H, HD)
+
+
+def _opt_partials(q, pool_k, pool_v, block_list, block_req, block_pos,
+                  seq_lens, num_reqs: int, scale: float):
+    """Per-request (max, sumexp, weighted-V) from a flat BlockList segment."""
+    B, H, HD = q.shape
+    NB, BS, KV, _ = pool_k.shape
+    T = block_list.shape[0]
+    G = H // KV
+
+    k = jnp.take(pool_k, block_list, axis=0)              # (T, BS, KV, HD)
+    v = jnp.take(pool_v, block_list, axis=0)
+    req = jnp.clip(block_req, 0, B - 1)
+    qg = _q_grouped(q, KV)[req]                           # (T, KV, G, HD)
+    scores = jnp.einsum("tkgd,tskd->tkgs", qg, k).astype(jnp.float32) * scale
+    pos = block_pos[:, None] * BS + jnp.arange(BS)[None]  # (T, BS)
+    valid = (pos < seq_lens[jnp.clip(block_req, 0, B - 1)][:, None]) & (
+        block_req[:, None] < num_reqs)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+
+    seg = jnp.where(block_req < num_reqs, block_req, B)   # pad -> dropped
+    m_t = scores.max(axis=-1)                             # (T, KV, G)
+    m = jax.ops.segment_max(m_t, seg, num_segments=B + 1)[:B]
+    m = jnp.maximum(m, -1e30)
+    p = jnp.exp(scores - m[jnp.clip(seg, 0, B - 1)][:, :, :, None])
+    p = jnp.where(valid[:, None, None], p, 0.0)
+    l_t = p.sum(axis=-1)                                  # (T, KV, G)
+    l = jax.ops.segment_sum(l_t, seg, num_segments=B + 1)[:B]
+    o_t = jnp.einsum("tkgs,tskd->tkgd", p.astype(v.dtype), v).astype(jnp.float32)
+    o = jax.ops.segment_sum(o_t, seg, num_segments=B + 1)[:B]
+    return m, l, o                                        # (B,KV,G),(B,KV,G),(B,KV,G,HD)
+
+
+def paged_attention_opt(q, pool_k, pool_v, block_list, block_req, block_pos,
+                        seq_lens, *, sm_scale: Optional[float] = None):
+    """Optimized: flat BlockList — only effectual blocks are touched."""
+    B, H, HD = q.shape
+    KV = pool_k.shape[2]
+    scale = sm_scale if sm_scale is not None else HD ** -0.5
+    m, l, o = _opt_partials(q, pool_k, pool_v, block_list, block_req,
+                            block_pos, seq_lens, B, scale)
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, H, HD).astype(q.dtype)
+
+
+def paged_attention_sharded(q, pool_k, pool_v, block_list, block_req,
+                            block_pos, seq_lens, *, axis: str,
+                            sm_scale: Optional[float] = None):
+    """Flash-decoding combine across mesh axis ``axis`` (inside shard_map).
+
+    Each rank holds a shard of the pool and ITS OWN BlockList slice (built by
+    ``BlockAllocator.build_sharded_block_lists``). Partials are combined with
+    small (B,H)-sized collectives — the sequence dimension never moves.
+    """
+    B, H, HD = q.shape
+    scale = sm_scale if sm_scale is not None else HD ** -0.5
+    m_r, l_r, o_r = _opt_partials(q, pool_k, pool_v, block_list, block_req,
+                                  block_pos, seq_lens, B, scale)
+    m = jax.lax.pmax(m_r, axis)
+    corr = jnp.exp(m_r - m)
+    l = jax.lax.psum(l_r * corr, axis)
+    o = jax.lax.psum(o_r * corr[..., None], axis)
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, H, HD).astype(q.dtype)
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def paged_attention(q, pool_k, pool_v, block_list, block_req, block_pos,
+                    seq_lens, backend: str = "ref"):
+    """Dispatch: 'ref' (jnp, any device) or 'pallas' (TPU kernel)."""
+    if backend == "pallas":
+        from repro.kernels.paged_attention.ops import paged_attention_kernel_op
+        return paged_attention_kernel_op(
+            q, pool_k, pool_v, block_list, block_req, block_pos, seq_lens)
+    return paged_attention_opt(q, pool_k, pool_v, block_list, block_req,
+                               block_pos, seq_lens)

@@ -1,0 +1,85 @@
+"""Embedding-bag lookups: SingleTable baseline vs fused BatchedTable.
+
+Reproduces the paper's §4.1 FBGEMM/DLRM case study:
+
+* :func:`single_table_lookup` — one op launch **per table** (Gaudi-SDK
+  SingleTable analogue). N tables ⇒ N gathers over small index sets; at low
+  batch each launch underutilizes memory bandwidth (paper Fig 15a).
+* :func:`batched_table_lookup` — the paper's BatchedTable: all tables are
+  concatenated into ONE tall table, per-table start offsets translate local
+  row ids to global rows, and a single fused gather+pool op serves every
+  (table, bag) pair. One launch, maximal memory-level parallelism.
+
+Bags are fixed-size (pooling factor L, as in the paper's RM configs).
+``batched_table_lookup`` math is identical to the Pallas kernel in
+``repro.kernels.batched_embedding``.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def concat_tables(tables: Sequence[jnp.ndarray]):
+    """Stack per-table (rows_t, dim) arrays -> (Σrows, dim) + offsets (T,)."""
+    offs = np.cumsum([0] + [t.shape[0] for t in tables[:-1]]).astype(np.int32)
+    return jnp.concatenate(tables, axis=0), jnp.asarray(offs)
+
+
+def single_table_lookup(tables: Sequence[jnp.ndarray], indices: jnp.ndarray):
+    """Baseline: per-table gathers (T separate ops).
+
+    indices (B, T, L) local row ids. Returns pooled (B, T, D).
+    """
+    outs: List[jnp.ndarray] = []
+    B, T, L = indices.shape
+    for t in range(T):  # one "kernel launch" per table — the baseline cost
+        rows = jnp.take(tables[t], indices[:, t].reshape(-1), axis=0)
+        outs.append(rows.reshape(B, L, -1).sum(axis=1))
+    return jnp.stack(outs, axis=1)
+
+
+def batched_table_lookup(big_table: jnp.ndarray, table_offsets: jnp.ndarray,
+                         indices: jnp.ndarray):
+    """Fused: ONE gather over the concatenated table (paper's BatchedTable).
+
+    big_table (ΣR, D); table_offsets (T,); indices (B, T, L) local row ids.
+    Returns pooled (B, T, D).
+    """
+    B, T, L = indices.shape
+    global_idx = indices + table_offsets[None, :, None]
+    rows = jnp.take(big_table, global_idx.reshape(-1), axis=0)
+    return rows.reshape(B, T, L, -1).sum(axis=2)
+
+
+def batched_table_lookup_sharded(big_table, table_offsets, indices, *,
+                                 axis: str):
+    """Beyond-paper: row-sharded tables inside shard_map.
+
+    Rows are sharded over ``axis`` (size A); each rank gathers rows it owns
+    (others → 0) and a psum combines — the standard TorchRec row-wise
+    parallel embedding, expressed with jax collectives.
+    """
+    A = jax.lax.psum(1, axis)
+    rank = jax.lax.axis_index(axis)
+    rows_per = big_table.shape[0]                # local rows
+    global_idx = indices + table_offsets[None, :, None]
+    local = global_idx - rank * rows_per
+    in_range = (local >= 0) & (local < rows_per)
+    safe = jnp.clip(local, 0, rows_per - 1)
+    rows = jnp.take(big_table, safe.reshape(-1), axis=0)
+    rows = jnp.where(in_range.reshape(-1)[:, None], rows, 0)
+    B, T, L = indices.shape
+    pooled = rows.reshape(B, T, L, -1).sum(axis=2)
+    return jax.lax.psum(pooled, axis)
+
+
+def embedding_bag(big_table, table_offsets, indices, backend: str = "ref"):
+    """Dispatch: 'ref' (jnp) or 'pallas' (TPU kernel, interpret on CPU)."""
+    if backend == "pallas":
+        from repro.kernels.batched_embedding.ops import batched_embedding_op
+        return batched_embedding_op(big_table, table_offsets, indices)
+    return batched_table_lookup(big_table, table_offsets, indices)

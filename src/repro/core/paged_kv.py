@@ -1,0 +1,207 @@
+"""Paged KV-cache pool and block allocator.
+
+Host side (`BlockAllocator`): a free-list allocator over a fixed pool of
+KV blocks, exactly vLLM's memory manager. Produces, per scheduling step,
+either
+  * a padded 2D **BlockTable** (B, max_blocks)  — the baseline layout whose
+    zero-padding induces redundant gathers (paper Fig 16a), or
+  * a flat 1D **BlockList** of only *effectual* blocks plus per-block request
+    ids / positions — the paper's optimized layout (Fig 16b).
+
+Device side: the pool is a dense array (num_blocks, block_size, KV, HD) per
+layer (stacked over layers for scan). ``append_to_pool`` writes one new token
+per active request into its current block/offset.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class OutOfBlocksError(RuntimeError):
+    pass
+
+
+@dataclass
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` KV blocks of ``block_size`` tokens."""
+
+    num_blocks: int
+    block_size: int
+    num_shards: int = 1          # model-axis shards for round-robin placement
+    _free: List[int] = field(default_factory=list)
+    _tables: Dict[int, List[int]] = field(default_factory=dict)
+    _lens: Dict[int, int] = field(default_factory=dict)
+
+    def __post_init__(self):
+        self._free = list(range(self.num_blocks - 1, -1, -1))
+
+    # -- lifecycle ----------------------------------------------------------
+    def allocate(self, req_id: int, num_tokens: int) -> List[int]:
+        assert req_id not in self._tables, req_id
+        n = max(1, -(-num_tokens // self.block_size))
+        if len(self._free) < n:
+            raise OutOfBlocksError(f"need {n} blocks, have {len(self._free)}")
+        blocks = [self._free.pop() for _ in range(n)]
+        self._tables[req_id] = blocks
+        self._lens[req_id] = num_tokens
+        return blocks
+
+    def reserve_slot(self, req_id: int) -> Tuple[int, int]:
+        """Ensure a block exists for the NEXT token; return (block, offset).
+
+        Does not advance the sequence — call :meth:`commit_token` after the
+        decode step has written the KV entry.
+        """
+        pos = self._lens[req_id]
+        need = pos // self.block_size + 1
+        while len(self._tables[req_id]) < need:
+            if not self._free:
+                raise OutOfBlocksError("pool exhausted")
+            self._tables[req_id].append(self._free.pop())
+        blk = self._tables[req_id][pos // self.block_size]
+        return blk, pos % self.block_size
+
+    def commit_token(self, req_id: int) -> None:
+        self._lens[req_id] += 1
+
+    def append_token(self, req_id: int) -> Tuple[int, int]:
+        """reserve + commit in one call (single-step convenience)."""
+        slot = self.reserve_slot(req_id)
+        self.commit_token(req_id)
+        return slot
+
+    def free(self, req_id: int) -> None:
+        self._free.extend(reversed(self._tables.pop(req_id)))
+        del self._lens[req_id]
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def seq_len(self, req_id: int) -> int:
+        return self._lens[req_id]
+
+    def table(self, req_id: int) -> List[int]:
+        return list(self._tables[req_id])
+
+    # -- device-layout builders ----------------------------------------------
+    def build_block_table(self, req_ids: List[int], max_blocks: int,
+                          pad_block: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+        """Baseline padded layout (vLLM_base): (B, max_blocks) + seq_lens (B,).
+
+        Padding entries point at ``pad_block`` — they are *gathered anyway* by
+        the baseline kernel, reproducing the paper's redundant-gather cost.
+        """
+        B = len(req_ids)
+        tab = np.full((B, max_blocks), pad_block, np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, r in enumerate(req_ids):
+            t = self._tables[r]
+            assert len(t) <= max_blocks, (len(t), max_blocks)
+            tab[i, :len(t)] = t
+            lens[i] = self._lens[r]
+        return tab, lens
+
+    def build_block_list(self, req_ids: List[int], max_total: Optional[int] = None
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Optimized flat layout (vLLM_opt / this framework).
+
+        Returns (block_list, block_req, block_pos, seq_lens):
+          block_list (T,) pool indices of ONLY effectual blocks
+          block_req  (T,) owning request index in [0,B)
+          block_pos  (T,) block's ordinal position within its request
+          seq_lens   (B,)
+        Padded (if max_total given) with req = B (out-of-range ⇒ dropped by
+        segment ops) so the array shape is static for jit.
+        """
+        lists, reqs, poss = [], [], []
+        lens = np.zeros((len(req_ids),), np.int32)
+        for i, r in enumerate(req_ids):
+            t = self._tables[r]
+            lists.extend(t)
+            reqs.extend([i] * len(t))
+            poss.extend(range(len(t)))
+            lens[i] = self._lens[r]
+        T = len(lists)
+        if max_total is not None:
+            assert T <= max_total, (T, max_total)
+            pad = max_total - T
+            lists.extend([0] * pad)
+            reqs.extend([len(req_ids)] * pad)   # out-of-range segment id
+            poss.extend([0] * pad)
+        return (np.asarray(lists, np.int32), np.asarray(reqs, np.int32),
+                np.asarray(poss, np.int32), lens)
+
+    def build_sharded_block_lists(self, req_ids: List[int], max_per_shard: int
+                                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """BlockList split round-robin across ``num_shards`` model ranks.
+
+        Block k of request i goes to shard (k % num_shards); each shard's list
+        is padded to ``max_per_shard``. Used by the shard_map flash-decoding
+        paged attention (sequence sharded over the model axis).
+        Returns (block_list (S, M), block_req (S, M), block_pos (S, M), seq_lens).
+        """
+        S = self.num_shards
+        per: List[List[Tuple[int, int, int]]] = [[] for _ in range(S)]
+        lens = np.zeros((len(req_ids),), np.int32)
+        for i, r in enumerate(req_ids):
+            for k, b in enumerate(self._tables[r]):
+                per[k % S].append((b, i, k))
+            lens[i] = self._lens[r]
+        bl = np.zeros((S, max_per_shard), np.int32)
+        br = np.full((S, max_per_shard), len(req_ids), np.int32)
+        bp = np.zeros((S, max_per_shard), np.int32)
+        for s in range(S):
+            assert len(per[s]) <= max_per_shard, (len(per[s]), max_per_shard)
+            for j, (b, i, k) in enumerate(per[s]):
+                bl[s, j], br[s, j], bp[s, j] = b, i, k
+        return bl, br, bp, lens
+
+    def write_slots(self, req_ids: List[int]) -> np.ndarray:
+        """(B, 2) [block, offset] where the NEXT token of each request lands.
+
+        Reserves blocks on demand (call :meth:`commit_token` after the step).
+        """
+        out = np.zeros((len(req_ids), 2), np.int32)
+        for i, r in enumerate(req_ids):
+            out[i] = self.reserve_slot(r)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Device-side pool ops (pure jnp; shapes are jit-static)
+# ---------------------------------------------------------------------------
+def make_pool(num_layers: int, num_blocks: int, block_size: int,
+              num_kv: int, head_dim: int, dtype=jnp.bfloat16):
+    shape = (num_layers, num_blocks, block_size, num_kv, head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def append_to_pool(pool_layer, kv_new, slots):
+    """Write one token per request into a single layer's pool.
+
+    pool_layer (NB, BS, KV, HD); kv_new (B, KV, HD); slots (B, 2) [block, off].
+    Out-of-range slots (e.g. (NB, 0) on non-owning model ranks of a sharded
+    pool) are dropped — this is how sharded writes stay shard-local.
+    """
+    return pool_layer.at[slots[:, 0], slots[:, 1]].set(
+        kv_new.astype(pool_layer.dtype), mode="drop")
+
+
+def gather_prefill_into_pool(pool_layer, k_seq, block_table, seq_len: int,
+                             block_size: int):
+    """Scatter a prefilled (B, S, KV, HD) K (or V) into pool blocks.
+
+    block_table (B, nb) lists each request's blocks in order.
+    """
+    B, S = k_seq.shape[:2]
+    nb = block_table.shape[1]
+    assert nb * block_size >= S
+    k_blocks = k_seq.reshape(B, S // block_size, block_size, *k_seq.shape[2:])
+    flat_idx = block_table[:, :S // block_size].reshape(-1)
+    return pool_layer.at[flat_idx].set(
+        k_blocks.reshape((-1,) + k_blocks.shape[2:]).astype(pool_layer.dtype))

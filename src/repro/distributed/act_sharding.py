@@ -1,0 +1,60 @@
+"""Activation sharding constraints at layer boundaries.
+
+GSPMD loses the batch sharding of activations inside remat'd scan bodies
+(measured: (B,S,·) tensors with unsharded B all-reduced per layer). The
+standard fix (MaxText does the same) is re-anchoring activations with
+``with_sharding_constraint`` at every block entry. Models call
+:func:`constrain_batch`; the launcher scopes the axes with
+:func:`activation_sharding` so model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACT_AXES: contextvars.ContextVar[Optional[tuple]] = contextvars.ContextVar(
+    "repro_act_axes", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(dp_axes: Sequence[str]):
+    """Scope under which activations are batch-sharded over ``dp_axes``."""
+    tok = _ACT_AXES.set(tuple(dp_axes))
+    try:
+        yield
+    finally:
+        _ACT_AXES.reset(tok)
+
+
+def constrain_batch(x):
+    """Anchor dim0 of x to the scoped data axes (no-op outside the scope)."""
+    axes = _ACT_AXES.get()
+    if axes is None:
+        return x
+    if x.shape[0] % _axes_size(axes) != 0:
+        return x
+    spec = P(axes, *(None,) * (x.ndim - 1))
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+
+def current_data_axes():
+    """The data axes scoped by :func:`activation_sharding` (or None)."""
+    return _ACT_AXES.get()
+
+
+def _axes_size(axes) -> int:
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        n = 1
+        for a in axes:
+            n *= dict(zip(mesh.axis_names, mesh.axis_sizes)).get(a, 1)
+        return max(n, 1)
+    except Exception:
+        return 1

@@ -1,0 +1,64 @@
+"""Gradient compression: int8-quantized all-reduce with error feedback.
+
+For cross-pod (DCI) gradient reduction the wire bytes dominate; int8
+quantization cuts them 4× vs f32 (2× vs bf16) at negligible quality cost
+when residuals are fed back (1-bit Adam / PowerSGD lineage).
+
+``compressed_psum`` runs INSIDE shard_map over the reduction axis:
+    q, scale = quantize(g + residual);  s = psum(q);  g' = dequant(s)
+    residual' = (g + residual) - dequant(q)        (local error feedback)
+The GSPMD training path uses XLA's native all-reduce; this module serves the
+shard_map pipeline trainer and is unit/property-tested on its own.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grad: jnp.ndarray, residual: jnp.ndarray, axis: str
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """int8 all-reduce of one gradient leaf with error feedback.
+
+    Must run inside shard_map with ``axis``. Returns (reduced, new_residual).
+    Wire cost: N int8 + 1 f32 scale vs N f32 — 4× compression.
+    """
+    comp = grad.astype(jnp.float32) + residual
+    q, scale = quantize_int8(comp)
+    # max-scale so every rank dequantizes against the same grid
+    gscale = jax.lax.pmax(scale, axis)
+    q = jnp.clip(jnp.round(comp / gscale), -127, 127).astype(jnp.int8)
+    summed = jax.lax.psum(q.astype(jnp.int32), axis)  # int32 accumulation
+    n = jax.lax.psum(1, axis)
+    reduced = summed.astype(jnp.float32) * gscale / n
+    new_residual = comp - q.astype(jnp.float32) * gscale
+    return reduced.astype(grad.dtype), new_residual
+
+
+def compressed_psum_tree(grads: Any, residuals: Any, axis: str
+                         ) -> Tuple[Any, Any]:
+    pairs = jax.tree.map(
+        lambda g, r: compressed_psum(g, r, axis), grads, residuals)
+    reduced = jax.tree.map(lambda p: p[0], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda p: p[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return reduced, resid
+
+
+def init_residuals(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel subpackage has:
+  kernel.py — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (shape plumbing, dispatch, interpret flag)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels are validated with ``interpret=True`` on CPU; on TPU the same code
+compiles via Mosaic. The jnp reference path (not interpret mode) is what the
+dry-run lowers, so cost analysis reflects XLA's view of the same math.
+"""

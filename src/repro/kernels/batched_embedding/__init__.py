@@ -1,0 +1,1 @@
+from repro.kernels.batched_embedding.ops import batched_embedding_op  # noqa: F401

@@ -1,0 +1,24 @@
+"""Public jit'd wrapper for the BatchedTable embedding kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.batched_embedding.kernel import batched_embedding_pallas
+from repro.kernels.batched_embedding.ref import batched_embedding_ref
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def batched_embedding_op(big_table, table_offsets, indices,
+                         backend: str = "auto"):
+    """indices (B, T, L) local ids -> pooled (B, T, D)."""
+    if backend == "ref":
+        return batched_embedding_ref(big_table, table_offsets, indices)
+    B, T, L = indices.shape
+    global_ids = (indices + table_offsets[None, :, None]).reshape(-1)
+    interpret = jax.default_backend() != "tpu" or backend == "interpret"
+    out = batched_embedding_pallas(big_table, global_ids, L,
+                                   interpret=interpret)
+    return out.reshape(B, T, big_table.shape[1])

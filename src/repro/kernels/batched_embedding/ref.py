@@ -1,0 +1,2 @@
+"""Oracle: the jnp BatchedTable embedding bag."""
+from repro.core.embedding_api import batched_table_lookup as batched_embedding_ref  # noqa: F401

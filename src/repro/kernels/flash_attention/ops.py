@@ -1,0 +1,22 @@
+"""Public jit'd wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "backend", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, backend: str = "auto",
+                    bq: int = 512, bk: int = 512):
+    """Dispatch: pallas on TPU, pallas-interpret for validation, jnp ref else."""
+    if backend == "ref":
+        return flash_attention_ref(q, k, v, causal=causal)
+    interpret = jax.default_backend() != "tpu"
+    if backend == "interpret":
+        interpret = True
+    return flash_attention_pallas(q, k, v, causal=causal, bq=bq, bk=bk,
+                                  interpret=interpret)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash attention (GQA, causal optional)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, sm_scale=None):
+    """q (B,S,H,hd); k,v (B,S,KV,hd) -> (B,S,H,hd). f32 softmax."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    scale = sm_scale if sm_scale is not None else hd ** -0.5
+    qg = q.reshape(B, Sq, KV, H // KV, hd)
+    s = jnp.einsum("bikgd,bjkd->bkgij", qg, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgij,bjkd->bikgd", w, v)
+    return o.reshape(B, Sq, H, hd)

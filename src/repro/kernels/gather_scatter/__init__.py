@@ -1,0 +1,1 @@
+from repro.kernels.gather_scatter.ops import vector_gather, vector_scatter  # noqa: F401

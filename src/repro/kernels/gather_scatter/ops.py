@@ -1,0 +1,25 @@
+"""Public jit'd wrappers for random vector gather/scatter."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.gather_scatter.kernel import gather_pallas, scatter_pallas
+from repro.kernels.gather_scatter.ref import gather_ref, scatter_ref
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def vector_gather(table, idx, backend: str = "auto"):
+    if backend == "ref":
+        return gather_ref(table, idx)
+    interpret = jax.default_backend() != "tpu" or backend == "interpret"
+    return gather_pallas(table, idx, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def vector_scatter(table, idx, src, backend: str = "auto"):
+    if backend == "ref":
+        return scatter_ref(table, idx, src)
+    interpret = jax.default_backend() != "tpu" or backend == "interpret"
+    return scatter_pallas(table, idx, src, interpret=interpret)

@@ -1,0 +1,11 @@
+"""Oracles for GUPS-style random vector gather/scatter (paper Fig 9)."""
+import jax.numpy as jnp
+
+
+def gather_ref(table, idx):
+    return jnp.take(table, idx, axis=0)
+
+
+def scatter_ref(table, idx, src):
+    # duplicate indices: last write wins (matches sequential kernel order)
+    return table.at[idx].set(src, mode="drop")

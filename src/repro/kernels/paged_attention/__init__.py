@@ -1,0 +1,1 @@
+from repro.kernels.paged_attention.ops import paged_attention_kernel_op  # noqa: F401

@@ -1,0 +1,131 @@
+"""PagedAttention decode kernel — the paper's BlockList technique, TPU-native.
+
+The flat BlockList of *effectual* KV-block indices IS the Pallas grid: scalar
+prefetch (``pltpu.PrefetchScalarGridSpec``) feeds the block ids to the
+BlockSpec ``index_map``, so each grid step DMAs exactly one useful
+(block_size, KV, hd) tile from the HBM pool into VMEM. Zero-pad blocks never
+leave HBM — this is the TPU realization of vLLM_opt's "gather only effectual
+blocks" (paper Fig 16b), with the online-softmax accumulation replacing the
+separate Softmax launch.
+
+The BlockList is sorted by request (the allocator guarantees it), so per-
+request accumulators live in VMEM scratch across the blocks of one request;
+output rows are rewritten as the running normalized value and the final
+grid step for a request leaves the correct result.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    # scalar-prefetched
+    block_list, block_req, block_pos, seq_lens,
+    # blocked inputs
+    q_ref, k_ref, v_ref,
+    # output
+    o_ref,
+    # scratch
+    acc_ref, m_ref, l_ref,
+    *, bs: int, num_kv: int, num_reqs: int, sm_scale: float,
+):
+    t = pl.program_id(0)
+    req = block_req[t]
+    is_pad = req >= num_reqs
+    prev_req = block_req[jnp.maximum(t - 1, 0)]
+    first = jnp.logical_or(t == 0, req != prev_req)
+
+    @pl.when(jnp.logical_and(first, jnp.logical_not(is_pad)))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(jnp.logical_not(is_pad))
+    def _step():
+        H, hd = q_ref.shape[1], q_ref.shape[2]
+        G = H // num_kv
+        pos = block_pos[t] * bs + jax.lax.broadcasted_iota(
+            jnp.int32, (1, bs), 1)[0]
+        valid = pos < seq_lens[jnp.minimum(req, num_reqs - 1)]
+
+        for kv in range(num_kv):                       # static small loop
+            q = q_ref[0, kv * G:(kv + 1) * G, :]       # (G, hd)
+            k = k_ref[0, :, kv, :]                     # (bs, hd)
+            v = v_ref[0, :, kv, :]
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            s = s * sm_scale                           # (G, bs)
+            s = jnp.where(valid[None, :], s, NEG_INF)
+            m_prev = m_ref[kv, :G]
+            m_new = jnp.maximum(m_prev, s.max(axis=-1))
+            corr = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new[:, None])
+            p = jnp.where(valid[None, :], p, 0.0)
+            l_new = l_ref[kv, :G] * corr + p.sum(axis=-1)
+            pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                     (((1,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+            acc_ref[kv * G:(kv + 1) * G, :] = (
+                acc_ref[kv * G:(kv + 1) * G, :] * corr[:, None] + pv)
+            m_ref[kv, :G] = m_new
+            l_ref[kv, :G] = l_new
+
+        # Rewrite the running normalized output; the last block of this
+        # request leaves the final value.
+        l = jnp.maximum(l_ref[:, :G].reshape(H, 1), 1e-30)
+        o_ref[0, :, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, pool_k, pool_v, block_list, block_req,
+                           block_pos, seq_lens, *, sm_scale=None,
+                           interpret: bool = True):
+    """q (B,H,hd); pools (NB,BS,KV,hd); flat BlockList arrays (T,)."""
+    B, H, hd = q.shape
+    NB, BS, KV, _ = pool_k.shape
+    T = block_list.shape[0]
+    scale = float(sm_scale if sm_scale is not None else hd ** -0.5)
+
+    kernel = functools.partial(_paged_kernel, bs=BS, num_kv=KV, num_reqs=B,
+                               sm_scale=scale)
+
+    # index maps take (grid ids, *prefetched scalars)
+    def q_map(t, bl, br, bp, sl):
+        return (jnp.minimum(br[t], B - 1), 0, 0)
+
+    def kv_map(t, bl, br, bp, sl):
+        return (bl[t], 0, 0, 0)
+
+    def o_map(t, bl, br, bp, sl):
+        return (jnp.minimum(br[t], B - 1), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), q_map),
+            pl.BlockSpec((1, BS, KV, hd), kv_map),
+            pl.BlockSpec((1, BS, KV, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), o_map),
+        scratch_shapes=[
+            pltpu.VMEM((H, hd), jnp.float32),
+            pltpu.VMEM((KV, max(8, H // KV)), jnp.float32),
+            pltpu.VMEM((KV, max(8, H // KV)), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(block_list, block_req, block_pos, seq_lens, q, pool_k, pool_v)

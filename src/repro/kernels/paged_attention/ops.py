@@ -1,0 +1,20 @@
+"""Public jit'd wrapper for the BlockList PagedAttention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention_pallas
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def paged_attention_kernel_op(q, pool_k, pool_v, block_list, block_req,
+                              block_pos, seq_lens, backend: str = "auto"):
+    if backend == "ref":
+        return paged_attention_ref(q, pool_k, pool_v, block_list, block_req,
+                                   block_pos, seq_lens)
+    interpret = jax.default_backend() != "tpu" or backend == "interpret"
+    return paged_attention_pallas(q, pool_k, pool_v, block_list, block_req,
+                                  block_pos, seq_lens, interpret=interpret)

@@ -1,0 +1,2 @@
+"""Oracle: the jnp BlockList paged attention (same math as the kernel)."""
+from repro.core.attention_api import paged_attention_opt as paged_attention_ref  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.kernels.stream.ops import stream_add, stream_scale, stream_triad  # noqa: F401

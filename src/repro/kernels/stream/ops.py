@@ -1,0 +1,44 @@
+"""Public jit'd wrappers for the STREAM kernels (1D API, auto 2D tiling)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stream.kernel import (
+    LANES, add_pallas, scale_pallas, triad_pallas)
+from repro.kernels.stream.ref import add_ref, scale_ref, triad_ref
+
+
+def _to2d(x):
+    n = x.shape[0]
+    assert n % LANES == 0, n
+    return x.reshape(n // LANES, LANES)
+
+
+@partial(jax.jit, static_argnames=("block_rows", "backend"))
+def stream_add(a, b, block_rows: int = 256, backend: str = "auto"):
+    if backend == "ref":
+        return add_ref(a, b)
+    interpret = jax.default_backend() != "tpu" or backend == "interpret"
+    return add_pallas(_to2d(a), _to2d(b), block_rows=block_rows,
+                      interpret=interpret).reshape(a.shape)
+
+
+@partial(jax.jit, static_argnames=("block_rows", "backend"))
+def stream_scale(a, scalar, block_rows: int = 256, backend: str = "auto"):
+    if backend == "ref":
+        return scale_ref(a, scalar)
+    interpret = jax.default_backend() != "tpu" or backend == "interpret"
+    return scale_pallas(_to2d(a), scalar, block_rows=block_rows,
+                        interpret=interpret).reshape(a.shape)
+
+
+@partial(jax.jit, static_argnames=("block_rows", "backend"))
+def stream_triad(a, b, scalar, block_rows: int = 256, backend: str = "auto"):
+    if backend == "ref":
+        return triad_ref(a, b, scalar)
+    interpret = jax.default_backend() != "tpu" or backend == "interpret"
+    return triad_pallas(_to2d(a), _to2d(b), scalar, block_rows=block_rows,
+                        interpret=interpret).reshape(a.shape)

@@ -1,0 +1,13 @@
+"""Oracles for the STREAM microbenchmarks (paper Alg 1)."""
+
+
+def add_ref(a, b):
+    return a + b
+
+
+def scale_ref(a, scalar):
+    return scalar * a
+
+
+def triad_ref(a, b, scalar):
+    return scalar * a + b

@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_DRYRUN_XLA_FLAGS") or
+                           "--xla_force_host_platform_device_count=512")
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first init). REPRO_DRYRUN_XLA_FLAGS exists so tests can run
+# the same machinery with 8 host devices.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, print memory/cost analysis, and emit the roofline
+records consumed by EXPERIMENTS.md.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+    python -m repro.launch.dryrun --all                 # single-pod 16x16
+    python -m repro.launch.dryrun --all --multi-pod     # 2x16x16
+    python -m repro.launch.dryrun --all --probes        # + depth probes
+
+Roofline trip-count correction: XLA's cost_analysis counts a scan body ONCE,
+so for scan-over-layers programs we also compile UNROLLED depth-1 and depth-2
+probes (same width/mesh/batch) and extrapolate:
+    flops_total = flops(d2) + (depth_units - 2) * (flops(d2) - flops(d1))
+Collective bytes are parsed from the full program's HLO (trip-count scaled).
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.config import SHAPES, ModelConfig, get_config  # noqa: E402
+from repro.configs import ASSIGNED_LM_ARCHS  # noqa: E402
+from repro.distributed.sharding import ShardingRules  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.api import build_model, input_specs  # noqa: E402
+from repro.optim import adamw, cosine_warmup  # noqa: E402
+from repro.roofline.analysis import HW, RooflineReport, xla_costs  # noqa: E402
+from repro.roofline.model_flops import model_flops  # noqa: E402
+from repro.serving.steps import (  # noqa: E402
+    abstract_cache, jit_prefill_step, jit_serve_step)
+from repro.training.train_step import (  # noqa: E402
+    abstract_state, jit_train_step)
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+SKIP = {
+    # long_500k needs sub-quadratic attention (DESIGN.md §7)
+    ("qwen3-moe-235b-a22b", "long_500k"): "full attention O(S^2) — skipped",
+    ("granite-moe-1b-a400m", "long_500k"): "full attention O(S^2) — skipped",
+    ("qwen2-1.5b", "long_500k"): "full attention O(S^2) — skipped",
+    ("qwen3-32b", "long_500k"): "full attention O(S^2) — skipped",
+    ("internlm2-20b", "long_500k"): "full attention O(S^2) — skipped",
+    ("smollm-360m", "long_500k"): "full attention O(S^2) — skipped",
+    ("internvl2-26b", "long_500k"): "full attention O(S^2) — skipped",
+    ("whisper-tiny", "long_500k"): "full attention O(S^2) — skipped",
+}
+
+
+def _lower_compile(cfg: ModelConfig, cell, mesh, *, scan_layers=True,
+                   remat=None, q_chunk=512):
+    """Build + lower + compile one cell's step. Returns compiled exe."""
+    from repro.distributed.act_sharding import activation_sharding
+    from repro.launch.mesh import data_axes
+
+    if remat is None:
+        # §Perf C1: 'dots' saves matmul outputs (−17 % recompute FLOPs,
+        # measured) for dense archs; MoE keeps full remat — saving the
+        # (G,E,C,F) expert activations would cost ~24 GB/device at 235B.
+        remat = "full" if cfg.moe is not None else "dots"
+    rules = ShardingRules(mesh)
+    import numpy as _np
+    kw = {}
+    if cfg.moe is not None:
+        kw["shard_moe"] = True
+        # §Perf B1: per-data-shard grouped MoE dispatch (shard-local gathers)
+        kw["moe_groups"] = int(_np.prod(
+            [mesh.shape[a] for a in data_axes(mesh)]))
+    if not scan_layers:
+        # cost probe: unroll the attention q-chunk scan too, so HLO FLOPs
+        # count every chunk (XLA cost analysis visits scan bodies once)
+        kw["unroll_attn"] = True
+    model = build_model(cfg, scan_layers=scan_layers, remat=remat,
+                        q_chunk=q_chunk, **kw)
+    specs = input_specs(cfg, cell)
+    with activation_sharding(data_axes(mesh)):
+        if cell.kind == "train":
+            opt = adamw()
+            state = abstract_state(model, opt)
+            step = jit_train_step(model, opt, cosine_warmup(3e-4, 100, 1000),
+                                  mesh, rules, state, specs)
+            with mesh:
+                return step.lower(state, specs).compile()
+        if cell.kind == "prefill":
+            params = model.init_abstract()
+            step = jit_prefill_step(model, mesh, rules, params, specs)
+            with mesh:
+                return step.lower(params, specs).compile()
+        # decode — §Perf iteration A3: donate the cache so the per-layer
+        # update is in-place (no full-cache copy per step)
+        params = model.init_abstract()
+        cache = abstract_cache(model, cell.global_batch, cell.seq_len)
+        step = jit_serve_step(model, mesh, rules, params, cache,
+                              specs["tokens"], donate=True)
+        with mesh:
+            return step.lower(params, cache, specs["tokens"]).compile()
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, probes: bool,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "status": "ok", "ts": time.time()}
+    if (arch, shape) in SKIP:
+        rec["status"] = "skipped"
+        rec["reason"] = SKIP[(arch, shape)]
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    compiled = _lower_compile(cfg, cell, mesh)
+    rec["compile_s"] = time.time() - t0
+    costs = xla_costs(compiled)
+    rec["full"] = costs
+    if verbose:
+        print(f"--- {arch} × {shape} × {mesh_name} "
+              f"(compile {rec['compile_s']:.1f}s)")
+        print(compiled.memory_analysis())
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, list) else ca
+        print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+        print("collectives:", costs["collectives"])
+
+    # cost_analysis is PER-DEVICE (verified in tests); globalize by chips.
+    flops, byts = costs["flops"] * chips, costs["bytes"] * chips
+    if probes:
+        try:
+            c1 = _lower_compile(cfg.with_depth(1), cell, mesh,
+                                scan_layers=False)
+            c2 = _lower_compile(cfg.with_depth(2), cell, mesh,
+                                scan_layers=False)
+            x1, x2 = xla_costs(c1), xla_costs(c2)
+            units = cfg.depth_units
+            flops = (x2["flops"] + (units - 2)
+                     * (x2["flops"] - x1["flops"])) * chips
+            byts = (x2["bytes"] + (units - 2)
+                    * (x2["bytes"] - x1["bytes"])) * chips
+            rec["probe_d1"] = {"flops": x1["flops"], "bytes": x1["bytes"]}
+            rec["probe_d2"] = {"flops": x2["flops"], "bytes": x2["bytes"]}
+        except Exception as e:  # probes are best-effort
+            rec["probe_error"] = f"{type(e).__name__}: {e}"
+
+    report = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts,
+        # parser returns per-device bytes; globalize like flops/bytes
+        collective_bytes=costs["collectives"].get("total", 0.0) * chips,
+        collectives=costs["collectives"],
+        model_flops=model_flops(cfg, cell),
+        memory_per_device=costs.get("peak_memory", 0.0), hw=HW())
+    rec["roofline"] = report.to_dict()
+    if verbose:
+        r = report
+        print(f"roofline: compute {r.t_compute*1e3:.3f} ms | memory "
+              f"{r.t_memory*1e3:.3f} ms | collective {r.t_collective*1e3:.3f}"
+              f" ms | bottleneck={r.bottleneck} | useful={r.useful_flops_ratio:.2f}"
+              f" | MFU={r.mfu:.3f}")
+    return rec
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None, choices=list(SHAPES))
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--probes", action="store_true")
+    p.add_argument("--out", default=str(OUT_DIR))
+    args = p.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_LM_ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        mesh_name = "2x16x16" if args.multi_pod else "16x16"
+        out = out_dir / f"{arch}__{shape}__{mesh_name}.json"
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                           probes=args.probes)
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                   "status": "error", "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        out.write_text(json.dumps(rec, indent=2, default=float))
+    print(f"\n{len(cells) - failures}/{len(cells)} cells OK")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.layers import attention, embedding, mlp, moe, norm, rope, rwkv, ssm  # noqa: F401

@@ -1,0 +1,166 @@
+"""GQA multi-head attention (qk-norm / bias variants), MXU-friendly.
+
+Three attention cores:
+  * ``full_attention``      O(S^2) reference (tests, tiny shapes)
+  * ``chunked_attention``   scan over query chunks — bounded memory; this is
+    the form lowered in train/prefill dry-runs (remat-friendly)
+  * decode goes through ``repro.core.attention_api`` (paged, paper technique)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AttentionConfig
+from repro.layers.norm import rmsnorm, rmsnorm_init
+from repro.layers.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def _dense_init(key, d_in, d_out, dtype):
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * d_in ** -0.5).astype(dtype)
+
+
+def attention_init(key, d_model: int, a: AttentionConfig, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(kq, d_model, a.num_heads * a.head_dim, dtype),
+        "wk": _dense_init(kk, d_model, a.num_kv_heads * a.head_dim, dtype),
+        "wv": _dense_init(kv, d_model, a.num_kv_heads * a.head_dim, dtype),
+        "wo": _dense_init(ko, a.num_heads * a.head_dim, d_model, dtype),
+    }
+    if a.qkv_bias:
+        p["bq"] = jnp.zeros((a.num_heads * a.head_dim,), dtype)
+        p["bk"] = jnp.zeros((a.num_kv_heads * a.head_dim,), dtype)
+        p["bv"] = jnp.zeros((a.num_kv_heads * a.head_dim,), dtype)
+    if a.qk_norm:
+        p["q_norm"] = rmsnorm_init(a.head_dim, dtype)
+        p["k_norm"] = rmsnorm_init(a.head_dim, dtype)
+    return p
+
+
+def project_qkv(params, x, a: AttentionConfig, positions):
+    """x (B,S,D) -> q (B,S,H,hd), k/v (B,S,KV,hd), rope applied."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, params["wq"])
+    k = jnp.einsum("bsd,de->bse", x, params["wk"])
+    v = jnp.einsum("bsd,de->bse", x, params["wv"])
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, a.num_heads, a.head_dim)
+    k = k.reshape(B, S, a.num_kv_heads, a.head_dim)
+    v = v.reshape(B, S, a.num_kv_heads, a.head_dim)
+    if "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    q = apply_rope(q, positions, a.rope_theta)
+    k = apply_rope(k, positions, a.rope_theta)
+    return q, k, v
+
+
+def _group(q, num_kv: int):
+    """(B,S,H,hd) -> (B,S,KV,G,hd) grouped by kv head."""
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, num_kv, H // num_kv, hd)
+
+
+def full_attention(q, k, v, *, causal: bool = True,
+                   q_positions=None, kv_positions=None) -> jnp.ndarray:
+    """Reference attention. q (B,Sq,H,hd); k,v (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    qg = _group(q, KV)
+    scores = jnp.einsum("bikgd,bjkd->bkgij", qg, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    if causal:
+        qi = q_positions if q_positions is not None else jnp.arange(Sq)
+        kj = kv_positions if kv_positions is not None else jnp.arange(k.shape[1])
+        mask = qi[:, None] >= kj[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgij,bjkd->bikgd", w, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      chunk: int = 512, unroll: bool = False) -> jnp.ndarray:
+    """Query-chunked attention: scan over q chunks, full KV per step.
+
+    Memory per step is (B, KV, G, chunk, Sk) f32 — bounded; with scan remat
+    this keeps prefill_32k compilable on every mesh. (Pallas flash kernel is
+    the TPU runtime path; this is the lowering-equivalent jnp form.)
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    if Sq <= chunk:
+        return full_attention(q, k, v, causal=causal)
+    if Sq % chunk != 0:  # largest divisor of Sq ≤ chunk (e.g. whisper's 1500)
+        c = chunk
+        while Sq % c != 0:
+            c -= 1
+        if c < 32:
+            return full_attention(q, k, v, causal=causal)
+        chunk = c
+    n = Sq // chunk
+    qg = _group(q, KV).reshape(B, n, chunk, KV, H // KV, hd)
+    kj = jnp.arange(Sk)
+
+    def step(_, qc_i):
+        qc, i = qc_i                                     # (B,chunk,KV,G,hd)
+        scores = jnp.einsum("bikgd,bjkd->bkgij", qc, k).astype(jnp.float32)
+        scores = scores * (hd ** -0.5)
+        if causal:
+            qi = i * chunk + jnp.arange(chunk)
+            mask = qi[:, None] >= kj[None, :]
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkgij,bjkd->bikgd", w, v)
+        return None, out
+
+    if unroll:  # cost probes: XLA cost analysis counts scan bodies once
+        outs = [step(None, (qg[:, i], jnp.asarray(i)))[1] for i in range(n)]
+        out = jnp.stack(outs, axis=1)                    # (B,n,chunk,KV,G,hd)
+        return out.reshape(B, Sq, H, hd)
+    _, outs = jax.lax.scan(step, None,
+                           (jnp.moveaxis(qg, 1, 0), jnp.arange(n)))
+    out = jnp.moveaxis(outs, 0, 1)                       # (B,n,chunk,KV,G,hd)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention_block(params, x, positions, a: AttentionConfig, *,
+                    causal: Optional[bool] = None, chunk: int = 512,
+                    unroll: bool = False):
+    """Full attention block for train/prefill. Returns (out, (k, v))."""
+    causal = a.causal if causal is None else causal
+    q, k, v = project_qkv(params, x, a, positions)
+    ctx = chunked_attention(q, k, v, causal=causal, chunk=chunk,
+                            unroll=unroll)
+    B, S = x.shape[:2]
+    out = jnp.einsum("bse,ed->bsd", ctx.reshape(B, S, -1), params["wo"])
+    return out, (k, v)
+
+
+def cross_attention_block(params, x, kv_cache, a: AttentionConfig):
+    """Whisper decoder cross-attn: kv precomputed from encoder (no rope)."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    q = q.reshape(B, S, a.num_heads, a.head_dim)
+    k, v = kv_cache
+    ctx = full_attention(q, k, v, causal=False)
+    return jnp.einsum("bse,ed->bsd", ctx.reshape(B, S, -1), params["wo"])
+
+
+def encode_kv(params, enc, a: AttentionConfig):
+    """Project encoder output to cross-attention K/V once (cached)."""
+    B, S, _ = enc.shape
+    k = jnp.einsum("bsd,de->bse", enc, params["wk"])
+    v = jnp.einsum("bsd,de->bse", enc, params["wv"])
+    if "bk" in params:
+        k, v = k + params["bk"], v + params["bv"]
+    return (k.reshape(B, S, a.num_kv_heads, a.head_dim),
+            v.reshape(B, S, a.num_kv_heads, a.head_dim))

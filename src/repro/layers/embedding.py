@@ -1,0 +1,32 @@
+"""Token embedding / LM head (vocab-sharded friendly layouts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * d ** -0.5).astype(dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params_head, x):
+    """x (B,S,D) -> logits (B,S,V), f32 accumulation over bf16 operands.
+
+    §Perf iteration A1: the earlier ``.astype(f32)`` materialized an f32
+    COPY of the whole vocab table every step (2·V·D extra write + 2× read);
+    ``preferred_element_type`` keeps operands bf16 and accumulates f32 on
+    the MXU — same numerics, none of the traffic.
+    """
+    return jax.lax.dot_general(
+        x, params_head["table"],
+        (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def head_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return embedding_init(key, vocab, d, dtype)

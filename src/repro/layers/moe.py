@@ -1,0 +1,136 @@
+"""Token-choice top-k MoE with capacity-based expert-parallel dispatch.
+
+Dispatch strategy (MaxText-style "dropping" MoE, TPU/GSPMD friendly):
+  * router logits in f32; top-k gates per token
+  * each expert keeps its top-C tokens by gate weight (C = T*k/E * cf),
+    computed with ``lax.top_k`` over the (E, T) gate matrix — no (T,E,C)
+    one-hot dispatch tensor is ever materialized
+  * gathered (E, C, D) activations run a dense SwiGLU einsum per expert
+    (single MXU-friendly batched GEMM) and are scatter-added back
+  * sharding constraints put E on the expert axis and C on the data axes so
+    GSPMD lowers dispatch to all-to-all rather than all-gather
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import MoEConfig
+
+
+def moe_init(key, d_model: int, m: MoEConfig, dtype=jnp.float32):
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    E, F = m.num_experts, m.d_expert
+    s = d_model ** -0.5
+    p = {
+        "router": (jax.random.normal(kr, (d_model, E), jnp.float32) * s).astype(jnp.float32),
+        "w_gate": (jax.random.normal(kg, (E, d_model, F), jnp.float32) * s).astype(dtype),
+        "w_up": (jax.random.normal(ku, (E, d_model, F), jnp.float32) * s).astype(dtype),
+        "w_down": (jax.random.normal(kd, (E, F, d_model), jnp.float32) * F ** -0.5).astype(dtype),
+    }
+    if m.d_shared_expert:
+        from repro.layers.mlp import swiglu_init
+        p["shared"] = swiglu_init(ks, d_model, m.d_shared_expert, dtype)
+    return p
+
+
+def _constrain(x, spec: Optional[P]):
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x  # outside mesh context (unit tests)
+
+
+def _resolve_axes(data_axes):
+    """Use the activation_sharding scope's axes when available — constraints
+    built with axes missing from the mesh are silently dropped (measured:
+    the dispatched tensor replicated, +60 GB/dev collectives)."""
+    from repro.distributed.act_sharding import current_data_axes
+    scoped = current_data_axes()
+    return scoped if scoped is not None else data_axes
+
+
+def moe_apply(params, x, m: MoEConfig, *, data_axes=("pod", "data"),
+              expert_axis: Optional[str] = "model", shard: bool = False,
+              full_capacity: bool = False, groups: int = 1):
+    """x (B,S,D) -> (B,S,D). Capacity-dropped top-k routing.
+
+    ``full_capacity=True`` sets C = T so no token can ever be dropped — the
+    decode/serving mode (dropping is a training-throughput trade only).
+
+    ``groups`` (§Perf iteration B1): dispatch is performed independently per
+    token group, with the group dim sharded over the data axes. Global-index
+    gathers over a data-sharded token tensor lower to masked-gather +
+    ALL-REDUCE of the whole (E·C, D) dispatched tensor (measured 32 GB/dev
+    per layer at 235B scale); batched per-group gathers stay shard-local and
+    only the small routed tensor moves (all-to-all to the expert ranks).
+    Set groups = number of data shards.
+    """
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.num_experts, m.top_k
+    data_axes = _resolve_axes(data_axes)
+    G = max(1, min(groups, T))
+    while T % G != 0:
+        G -= 1
+    Tg = T // G
+    xg = x.reshape(G, Tg, D)
+    if shard:
+        xg = _constrain(xg, P(data_axes, None, None))
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"])
+    gates_all = jax.nn.softmax(logits, axis=-1)                  # (G,Tg,E) f32
+    topk_val, topk_idx = jax.lax.top_k(gates_all, K)             # (G,Tg,K)
+    # renormalize over selected experts (qwen/granite style)
+    topk_val = topk_val / jnp.maximum(topk_val.sum(-1, keepdims=True), 1e-9)
+    # (G,Tg,E) gate matrix restricted to selected experts
+    sel = jnp.zeros((G, Tg, E), jnp.float32)
+    sel = jax.vmap(jax.vmap(lambda row, idx, val: row.at[idx].set(val)))(
+        sel, topk_idx, topk_val)
+
+    if full_capacity:
+        C = Tg
+    else:
+        C = min(max(1, int(Tg * K / E * m.capacity_factor)), Tg)
+    # Each expert picks its top-C tokens per group (shard-local competition).
+    gate_ec, token_idx = jax.lax.top_k(jnp.swapaxes(sel, 1, 2), C)  # (G,E,C)
+    dispatched = jax.vmap(lambda xs, idx: jnp.take(xs, idx.reshape(-1),
+                                                   axis=0))(xg, token_idx)
+    dispatched = dispatched.reshape(G, E, C, D)
+    if shard:
+        dispatched = _constrain(dispatched,
+                                P(data_axes, expert_axis, None, None))
+
+    g = jnp.einsum("gecd,edf->gecf", dispatched, params["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", dispatched, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out_ec = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    out_ec = out_ec * gate_ec[..., None].astype(out_ec.dtype)
+    if shard:
+        out_ec = _constrain(out_ec, P(data_axes, expert_axis, None, None))
+
+    # Scatter-add back to token order (per group, shard-local). Dropped
+    # tokens get zero (residual keeps x).
+    out = jax.vmap(lambda o, idx, vals: o.at[idx.reshape(-1)].add(
+        vals.reshape(E * C, D), mode="drop"))(
+        jnp.zeros((G, Tg, D), out_ec.dtype), token_idx, out_ec)
+    if "shared" in params:
+        from repro.layers.mlp import swiglu
+        out = out + swiglu(params["shared"], xg)
+    return out.reshape(B, S, D), _aux_loss(
+        gates_all.reshape(T, E), topk_idx.reshape(T, K), E)
+
+
+def _aux_loss(gates_all, topk_idx, E: int):
+    """Switch-style load-balance aux loss (mean over tokens)."""
+    T, K = topk_idx.shape
+    counts = jnp.zeros((E,), jnp.float32).at[topk_idx.reshape(-1)].add(1.0)
+    frac_tokens = counts / (T * K)
+    frac_gates = gates_all.mean(0)
+    return E * jnp.sum(frac_tokens * frac_gates)

@@ -1,0 +1,158 @@
+"""RWKV6 "Finch" layers: time-mix with data-dependent decay + channel-mix.
+
+Recurrence (per head, head_size N):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+w_t is data-dependent (low-rank LoRA on the shifted input) — the defining
+RWKV6 feature. Chunked GLA-style form for training (matmul-heavy); masked
+decay differences are ≤ 0 before ``exp`` so the math is overflow-safe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RWKVConfig
+from repro.layers.norm import layernorm, layernorm_init
+
+CHUNK = 32
+
+
+def _dense(key, i, o, dtype, scale=None):
+    s = scale if scale is not None else i ** -0.5
+    return (jax.random.normal(key, (i, o), jnp.float32) * s).astype(dtype)
+
+
+def rwkv_time_mix_init(key, d: int, r: RWKVConfig, dtype=jnp.float32):
+    H = d // r.head_size
+    ks = jax.random.split(key, 8)
+    return {
+        "mix_r": jnp.full((d,), 0.5, dtype), "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype), "mix_w": jnp.full((d,), 0.5, dtype),
+        "wr": _dense(ks[0], d, d, dtype), "wk": _dense(ks[1], d, d, dtype),
+        "wv": _dense(ks[2], d, d, dtype), "wo": _dense(ks[3], d, d, dtype),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x W1) W2))
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w1": _dense(ks[4], d, r.decay_lora, jnp.float32),
+        "w2": _dense(ks[5], r.decay_lora, d, jnp.float32, scale=0.1),
+        "u": jnp.zeros((H, r.head_size), jnp.float32),     # per-head bonus
+        "ln_out": layernorm_init(d, dtype),
+    }
+
+
+def rwkv_channel_mix_init(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mix_k": jnp.full((d,), 0.5, dtype), "mix_r": jnp.full((d,), 0.5, dtype),
+        "wk": _dense(k1, d, d_ff, dtype),
+        "wv": _dense(k2, d_ff, d, dtype),
+        "wr": _dense(k3, d, d, dtype),
+    }
+
+
+def _token_shift(x, prev=None):
+    """x (B,S,D) -> x shifted right by one; prev (B,D) fills position 0."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _lerp(x, x_sh, mix):
+    return x + (x_sh - x) * mix
+
+
+def _decay(params, xw):
+    """log decay per channel, clamped ≤ ~0: (B,S,D) f32."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ params["w1"]) @ params["w2"]
+    return -jnp.exp(jnp.clip(params["w0"] + lora, -20.0, 8.0))
+
+
+def time_mix_chunked(params, x, r_cfg: RWKVConfig):
+    """Training/prefill form. x (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    N = r_cfg.head_size
+    H = D // N
+    x_sh = _token_shift(x)
+    rr = _lerp(x, x_sh, params["mix_r"]) @ params["wr"]
+    kk = _lerp(x, x_sh, params["mix_k"]) @ params["wk"]
+    vv = _lerp(x, x_sh, params["mix_v"]) @ params["wv"]
+    lw = _decay(params, _lerp(x, x_sh, params["mix_w"]))   # (B,S,D) log-decay
+
+    Lc = min(CHUNK, S)
+    assert S % Lc == 0, (S, Lc)
+    nc = S // Lc
+
+    def rs(t):
+        return t.reshape(B, nc, Lc, H, N)
+
+    r, k, v, lw = rs(rr), rs(kk), rs(vv), rs(lw)
+    la_incl = jnp.cumsum(lw, axis=2)                       # (B,nc,Lc,H,N)
+    la_excl = la_incl - lw
+    idx = jnp.arange(Lc)
+    mask_lt = idx[:, None] > idx[None, :]                  # j < i
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    # intra: A_ij = sum_n r_in k_jn exp(la_excl_i - la_incl_j), j<i; diag bonus u
+    ddiff = la_excl[:, :, :, None] - la_incl[:, :, None, :, :]  # (B,nc,i,j,H,N)
+    ddiff = jnp.where(mask_lt[None, None, :, :, None, None], ddiff, -jnp.inf)
+    A = jnp.einsum("bcihn,bcjhn,bcijhn->bcijh", rf, kf, jnp.exp(ddiff))
+    diag = jnp.einsum("bcihn,hn,bcihn->bcih", rf, params["u"], kf)
+    A = A + diag[:, :, :, None, :] * jnp.eye(Lc)[None, None, :, :, None]
+    y_intra = jnp.einsum("bcijh,bcjhn->bcihn", A, vf)
+
+    # inter-chunk state scan: h maps k-dim -> v-dim, (B,H,N,N)
+    dec_to_end = jnp.exp(la_incl[:, :, -1:] - la_incl)     # (B,nc,Lc,H,N)
+    chunk_state = jnp.einsum("bcjhn,bcjhm->bchnm", kf * dec_to_end, vf)
+    chunk_decay = jnp.exp(la_incl[:, :, -1])               # (B,nc,H,N)
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp
+        return h_prev * dec[..., None] + st, h_prev
+
+    h0 = jnp.zeros((B, H, N, N), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                  # (B,nc,H,N,N)
+
+    y_inter = jnp.einsum("bcihn,bchnm->bcihm", rf * jnp.exp(la_excl), h_prevs)
+    y = (y_intra + y_inter).reshape(B, S, D).astype(x.dtype)
+    y = layernorm(params["ln_out"], y)
+    return y @ params["wo"]
+
+
+def time_mix_step(params, x, state, r_cfg: RWKVConfig):
+    """Decode step. x (B,1,D); state {"shift": (B,D), "S": (B,H,N,N)}."""
+    B, _, D = x.shape
+    N = r_cfg.head_size
+    H = D // N
+    x_sh = state["shift"][:, None]
+    rr = (_lerp(x, x_sh, params["mix_r"]) @ params["wr"]).reshape(B, H, N)
+    kk = (_lerp(x, x_sh, params["mix_k"]) @ params["wk"]).reshape(B, H, N)
+    vv = (_lerp(x, x_sh, params["mix_v"]) @ params["wv"]).reshape(B, H, N)
+    lw = _decay(params, _lerp(x, x_sh, params["mix_w"])).reshape(B, H, N)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (rr, kk, vv))
+    S_prev = state["S"]
+    kv = jnp.einsum("bhn,bhm->bhnm", kf, vf)
+    out = jnp.einsum("bhn,bhnm->bhm", rf, S_prev + params["u"][..., None] * kv)
+    S_new = jnp.exp(lw)[..., None] * S_prev + kv
+    y = layernorm(params["ln_out"], out.reshape(B, 1, D).astype(x.dtype))
+    return y @ params["wo"], {"shift": x[:, 0], "S": S_new}
+
+
+def channel_mix(params, x, prev=None):
+    """x (B,S,D) -> (B,S,D). Returns (out, last_x) for decode chaining."""
+    x_sh = _token_shift(x, prev)
+    k = _lerp(x, x_sh, params["mix_k"]) @ params["wk"]
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid((_lerp(x, x_sh, params["mix_r"]) @ params["wr"]).astype(jnp.float32))
+    return (k @ params["wv"]) * r.astype(x.dtype), x[:, -1]
+
+
+def rwkv_init_state(batch: int, d: int, r: RWKVConfig, dtype=jnp.float32):
+    H = d // r.head_size
+    return {
+        "tm_shift": jnp.zeros((batch, d), dtype),
+        "cm_shift": jnp.zeros((batch, d), dtype),
+        "S": jnp.zeros((batch, H, r.head_size, r.head_size), jnp.float32),
+    }

@@ -1,0 +1,166 @@
+"""Mamba2-style SSD block (used by zamba2), chunked + single-step decode.
+
+Recurrence (per head h, head_dim P, state N):
+    h_t = a_t * h_{t-1} + (dt_t * x_t) ⊗ B_t        a_t scalar per head
+    y_t = h_t C_t + D * x_t
+Chunked form: intra-chunk is a masked (C·B) "attention" matmul; inter-chunk
+is a scan over chunk states. All decay exponents are ≤ 0 by construction so
+``exp`` is overflow-safe (masking happens before exponentiation).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SSMConfig
+from repro.layers.norm import rmsnorm, rmsnorm_init
+
+
+class SSMDims(NamedTuple):
+    d_inner: int
+    num_heads: int
+    conv_dim: int
+
+
+def ssm_dims(d_model: int, s: SSMConfig) -> SSMDims:
+    d_inner = s.expand * d_model
+    num_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.d_state
+    return SSMDims(d_inner, num_heads, conv_dim)
+
+
+def ssm_init(key, d_model: int, s: SSMConfig, dtype=jnp.float32):
+    dims = ssm_dims(d_model, s)
+    ki, kc, ko, kd = jax.random.split(key, 4)
+    in_dim = 2 * dims.d_inner + 2 * s.d_state + dims.num_heads  # z,x,B,C,dt
+    scale = d_model ** -0.5
+    return {
+        "in_proj": (jax.random.normal(ki, (d_model, in_dim), jnp.float32) * scale).astype(dtype),
+        "conv_w": (jax.random.normal(kc, (s.d_conv, dims.conv_dim), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((dims.conv_dim,), dtype),
+        "A_log": jnp.zeros((dims.num_heads,), jnp.float32),
+        "D": jnp.ones((dims.num_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((dims.num_heads,), jnp.float32),
+        "norm": rmsnorm_init(dims.d_inner, dtype),
+        "out_proj": (jax.random.normal(ko, (dims.d_inner, d_model), jnp.float32)
+                     * dims.d_inner ** -0.5).astype(dtype),
+    }
+
+
+def _split_in(proj, dims: SSMDims, s: SSMConfig):
+    z, xBC, dt = jnp.split(
+        proj, [dims.d_inner, dims.d_inner + dims.conv_dim], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, prev=None):
+    """Depthwise causal conv1d. xBC (B,S,C); w (K,C). prev (B,K-1,C) or None."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros(xBC.shape[:1] + (K - 1,) + xBC.shape[2:], xBC.dtype)
+    xp = jnp.concatenate([prev, xBC], axis=1)
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i] for i in range(K)) + b
+    new_prev = xp[:, -(K - 1):] if K > 1 else prev
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xBC.dtype), new_prev
+
+
+def ssm_chunked(params, x, s: SSMConfig, d_model: int):
+    """x (B,S,D) -> (B,S,D). Training / prefill form."""
+    dims = ssm_dims(d_model, s)
+    B, S, _ = x.shape
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xBC, dt_raw = _split_in(proj, dims, s)
+    xBC, _ = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xs, Bm, Cm = jnp.split(xBC, [dims.d_inner, dims.d_inner + s.d_state], axis=-1)
+    H, P, N = dims.num_heads, s.head_dim, s.d_state
+    xs = xs.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
+    la_step = -jnp.exp(params["A_log"]) * dt                               # log a_t ≤ 0
+
+    Lc = min(s.chunk_size, S)
+    assert S % Lc == 0, (S, Lc)
+    nc = S // Lc
+
+    def reshape_c(t):
+        return t.reshape((B, nc, Lc) + t.shape[2:])
+
+    xs_c, B_c, C_c = reshape_c(xs), reshape_c(Bm), reshape_c(Cm)
+    la_c = reshape_c(la_step)                                              # (B,nc,Lc,H)
+    dtx = xs_c * dt.reshape(B, nc, Lc, H)[..., None].astype(xs_c.dtype)    # dt*x
+
+    la_incl = jnp.cumsum(la_c, axis=2)                                     # (B,nc,Lc,H)
+    idx = jnp.arange(Lc)
+    mask = idx[:, None] >= idx[None, :]                                    # j<=i
+
+    # intra-chunk: A[b,c,h,i,j] = (C_i·B_j) exp(la_i - la_j), j<=i
+    cb = jnp.einsum("bcin,bcjn->bcij", C_c, B_c).astype(jnp.float32)       # (B,nc,Lc,Lc)
+    ddiff = la_incl[:, :, :, None, :] - la_incl[:, :, None, :, :]          # (B,nc,i,j,H)
+    ddiff = jnp.where(mask[None, None, :, :, None], ddiff, -jnp.inf)
+    A = cb[..., None] * jnp.exp(ddiff)                                     # (B,nc,i,j,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", A.astype(xs_c.dtype), dtx)
+
+    # inter-chunk state scan
+    #   state contribution of chunk: sum_j exp(la_end - la_j) dtx_j ⊗ B_j
+    dec_to_end = jnp.exp(la_incl[:, :, -1:, :] - la_incl)                  # (B,nc,Lc,H)
+    chunk_state = jnp.einsum(
+        "bcjh,bcjhp,bcjn->bchpn",
+        dec_to_end.astype(jnp.float32), dtx.astype(jnp.float32),
+        B_c.astype(jnp.float32))
+    chunk_decay = jnp.exp(la_incl[:, :, -1, :])                            # (B,nc,H)
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp                                                      # (B,H,P,N),(B,H)
+        h_new = h_prev * dec[:, :, None, None] + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                                  # (B,nc,H,P,N)
+
+    # inter-chunk output: y_i += (C_i exp(la_incl_i)) · h_prev_chunk
+    dec_from_start = jnp.exp(la_incl)                                      # (B,nc,Lc,H)
+    y_inter = jnp.einsum(
+        "bcin,bchpn,bcih->bcihp",
+        C_c.astype(jnp.float32), h_prevs, dec_from_start.astype(jnp.float32))
+
+    y = y_intra.astype(jnp.float32) + y_inter
+    y = y + xs_c.astype(jnp.float32) * params["D"][None, None, None, :, None]
+    y = y.reshape(B, S, dims.d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+
+
+def ssm_init_state(batch: int, d_model: int, s: SSMConfig, dtype=jnp.float32):
+    dims = ssm_dims(d_model, s)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, dims.conv_dim), dtype),
+        "h": jnp.zeros((batch, dims.num_heads, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def ssm_step(params, x, state, s: SSMConfig, d_model: int):
+    """Single decode step. x (B,1,D) -> (B,1,D), new state."""
+    dims = ssm_dims(d_model, s)
+    B = x.shape[0]
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xBC, dt_raw = _split_in(proj, dims, s)
+    xBC, new_conv = _causal_conv(xBC, params["conv_w"], params["conv_b"],
+                                 prev=state["conv"])
+    xs, Bm, Cm = jnp.split(xBC, [dims.d_inner, dims.d_inner + s.d_state], axis=-1)
+    H, P, N = dims.num_heads, s.head_dim, s.d_state
+    xs = xs.reshape(B, H, P)
+    Bm, Cm = Bm[:, 0], Cm[:, 0]                                            # (B,N)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(params["A_log"]) * dt)                            # (B,H)
+    dtx = xs.astype(jnp.float32) * dt[..., None]
+    h = state["h"] * a[:, :, None, None] + jnp.einsum("bhp,bn->bhpn", dtx, Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(B, 1, dims.d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, {"conv": new_conv, "h": h}

@@ -1,0 +1,76 @@
+"""Model factory + input_specs builder (ShapeDtypeStruct stand-ins).
+
+``build_model(cfg)`` dispatches on family. ``input_specs(cfg, shape, kind)``
+returns jax.ShapeDtypeStruct pytrees for every model input — weak-type
+correct, shardable, no device allocation — consumed by the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (
+    DLRMConfig, ModelConfig, ShapeCell, get_config)
+
+
+def build_model(cfg, **kw) -> Any:
+    if isinstance(cfg, str):
+        cfg = get_config(cfg)
+    if isinstance(cfg, DLRMConfig):
+        from repro.models.dlrm import DLRM
+        return DLRM(cfg, **kw)
+    assert isinstance(cfg, ModelConfig)
+    if cfg.family == "ssm":
+        from repro.models.rwkv6 import RWKV6LM
+        kw.pop("q_chunk", None)  # attention-free
+        kw.pop("unroll_attn", None)
+        kw.pop("moe_groups", None)
+        return RWKV6LM(cfg, **kw)
+    if cfg.family == "hybrid":
+        from repro.models.zamba2 import Zamba2LM
+        return Zamba2LM(cfg, **kw)
+    if cfg.family == "audio":
+        from repro.models.whisper import WhisperEncDec
+        return WhisperEncDec(cfg, **kw)
+    from repro.models.transformer import TransformerLM
+    return TransformerLM(cfg, **kw)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """Model-input stand-ins for one (arch × shape) dry-run cell.
+
+    train/prefill: tokens (B, S) [+ stub frontend embeddings for vlm/audio —
+    the text sequence shrinks so total context == cell.seq_len].
+    decode: tokens (B,) one new token (KV cache shapes come from the model).
+    """
+    B, S = cell.global_batch, cell.seq_len
+    if cell.kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            n_img = cfg.vision_tokens
+            specs["extra_embeds"] = _sds((B, n_img, cfg.d_model), jnp.bfloat16)
+            specs["tokens"] = _sds((B, S - n_img), jnp.int32)
+        elif cfg.family == "audio":
+            specs["extra_embeds"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                                         jnp.bfloat16)
+            specs["tokens"] = _sds((B, S), jnp.int32)
+        else:
+            specs["tokens"] = _sds((B, S), jnp.int32)
+        return specs
+    # decode: one token per request
+    return {"tokens": _sds((B,), jnp.int32)}
+
+
+def dlrm_input_specs(cfg: DLRMConfig, batch: int) -> Dict[str, Any]:
+    return {
+        "dense": _sds((batch, cfg.dense_features), jnp.float32),
+        "indices": _sds((batch, cfg.num_tables, cfg.gathers_per_table),
+                        jnp.int32),
+        "label": _sds((batch,), jnp.int32),
+    }

@@ -1,0 +1,94 @@
+"""DLRM-DCNv2 (paper Table 3, RM1/RM2) with the paper's BatchedTable
+embedding technique as a first-class switch (`use_batched=True` default;
+False = SingleTable baseline, per-table launches)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import DLRMConfig
+from repro.core import embedding_api
+
+
+def _mlp_init(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": (jax.random.normal(k, (a, b), jnp.float32) * a ** -0.5).astype(dtype),
+             "b": jnp.zeros((b,), dtype)}
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def _mlp_apply(layers, x, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+class DLRM:
+    def __init__(self, cfg: DLRMConfig, *, use_batched: bool = True,
+                 backend: str = "ref"):
+        self.cfg = cfg
+        self.use_batched = use_batched
+        self.backend = backend
+        self.inter_dim = cfg.bottom_mlp[-1] + cfg.num_tables * cfg.embedding_dim
+
+    def init(self, key, dtype=jnp.float32):
+        cfg = self.cfg
+        ke, kb, kt, kc = jax.random.split(key, 4)
+        emb = (jax.random.normal(
+            ke, (cfg.num_tables * cfg.num_embeddings, cfg.embedding_dim),
+            jnp.float32) * cfg.embedding_dim ** -0.5).astype(dtype)
+        offsets = jnp.arange(cfg.num_tables, dtype=jnp.int32) * cfg.num_embeddings
+        cross_keys = jax.random.split(kc, cfg.cross_layers)
+        d, r = self.inter_dim, cfg.cross_rank
+        cross = [{
+            "u": (jax.random.normal(jax.random.fold_in(k, 0), (d, r), jnp.float32)
+                  * d ** -0.5).astype(dtype),
+            "v": (jax.random.normal(jax.random.fold_in(k, 1), (r, d), jnp.float32)
+                  * r ** -0.5).astype(dtype),
+            "b": jnp.zeros((d,), dtype),
+        } for k in cross_keys]
+        return {
+            "embedding": emb,
+            "table_offsets": offsets,
+            "bottom": _mlp_init(kb, (cfg.dense_features,) + cfg.bottom_mlp, dtype),
+            "cross": cross,
+            "top": _mlp_init(kt, (d,) + cfg.top_mlp, dtype),
+        }
+
+    def init_abstract(self, dtype=jnp.float32):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0), dtype))
+
+    def embedding_lookup(self, params, indices):
+        """indices (B, T, L) -> pooled (B, T, D)."""
+        if self.use_batched:  # the paper's BatchedTable: ONE fused lookup
+            return embedding_api.embedding_bag(
+                params["embedding"], params["table_offsets"], indices,
+                backend=self.backend)
+        # SingleTable baseline: per-table gathers (T separate ops)
+        tables = [
+            jax.lax.dynamic_slice_in_dim(
+                params["embedding"], t * self.cfg.num_embeddings,
+                self.cfg.num_embeddings, axis=0)
+            for t in range(self.cfg.num_tables)
+        ]
+        return embedding_api.single_table_lookup(tables, indices)
+
+    def forward(self, params, batch):
+        """batch: {"dense": (B, 13) f32, "indices": (B, T, L) i32}."""
+        dense = _mlp_apply(params["bottom"], batch["dense"], final_act=True)
+        pooled = self.embedding_lookup(params, batch["indices"])
+        B = dense.shape[0]
+        x0 = jnp.concatenate([dense, pooled.reshape(B, -1)], axis=-1)
+        x = x0
+        for l in params["cross"]:      # DCNv2 low-rank cross layers
+            x = x0 * ((x @ l["u"]) @ l["v"] + l["b"]) + x
+        return _mlp_apply(params["top"], x)[:, 0]   # (B,) logit
+
+    def loss(self, params, batch):
+        logit = self.forward(params, batch)
+        y = batch["label"].astype(jnp.float32)
+        z = logit.astype(jnp.float32)
+        # numerically stable BCE-with-logits
+        return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))

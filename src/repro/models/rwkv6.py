@@ -1,0 +1,125 @@
+"""RWKV6 "Finch" LM — attention-free; the paper's PagedAttention technique is
+inapplicable here (no KV cache to page; see DESIGN.md §Arch-applicability).
+Serving carries a constant-size recurrent state instead."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers import rwkv as rwkv_lib
+from repro.layers.embedding import embed, embedding_init, head_init, unembed
+from repro.layers.norm import layernorm, layernorm_init
+from repro.distributed.act_sharding import constrain_batch
+from repro.training import remat as remat_lib
+
+
+class RWKV6LM:
+    def __init__(self, cfg: ModelConfig, *, remat: bool = True,
+                 scan_layers: bool = True):
+        self.cfg = cfg
+        self.remat = remat
+        self.scan_layers = scan_layers
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    def _layer_init(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": layernorm_init(cfg.d_model, self.dtype),
+            "ln2": layernorm_init(cfg.d_model, self.dtype),
+            "tm": rwkv_lib.rwkv_time_mix_init(k1, cfg.d_model, cfg.rwkv, self.dtype),
+            "cm": rwkv_lib.rwkv_channel_mix_init(k2, cfg.d_model, cfg.d_ff, self.dtype),
+        }
+
+    def init(self, key):
+        cfg = self.cfg
+        ke, kl, kh = jax.random.split(key, 3)
+        return {
+            "embed": embedding_init(ke, cfg.vocab_size, cfg.d_model, self.dtype),
+            "ln0": layernorm_init(cfg.d_model, self.dtype),
+            "layers": jax.vmap(self._layer_init)(jax.random.split(kl, cfg.num_layers)),
+            "final_norm": layernorm_init(cfg.d_model, self.dtype),
+            "head": head_init(kh, cfg.vocab_size, cfg.d_model, self.dtype),
+        }
+
+    def init_abstract(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def forward(self, params, tokens, extra_embeds=None, *, last_only: bool = False):
+        cfg = self.cfg
+        x = layernorm(params["ln0"], embed(params["embed"], tokens))
+
+        def body(x, lp):
+            x = constrain_batch(x)
+            h = rwkv_lib.time_mix_chunked(
+                lp["tm"], layernorm(lp["ln1"], x, cfg.norm_eps), cfg.rwkv)
+            x = x + h
+            h, _ = rwkv_lib.channel_mix(
+                lp["cm"], layernorm(lp["ln2"], x, cfg.norm_eps))
+            return x + h, None
+
+        if self.scan_layers:
+            body_fn = remat_lib.wrap(body, self.remat)
+            x, _ = jax.lax.scan(body_fn, x, params["layers"])
+        else:
+            body_fn = remat_lib.wrap(body, self.remat)
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda t: t[i], params["layers"])
+                x, _ = body_fn(x, lp)
+        if last_only:
+            x = x[:, -1:]
+        x = layernorm(params["final_norm"], x, cfg.norm_eps)
+        return unembed(params["head"], x), jnp.zeros((), jnp.float32)
+
+    # ---------------------------------------------------------------- decode
+    def init_decode_cache(self, batch: int, max_seq: int = 0):
+        cfg = self.cfg
+        L, D = cfg.num_layers, cfg.d_model
+        H = D // cfg.rwkv.head_size
+        N = cfg.rwkv.head_size
+        return {
+            "tm_shift": jnp.zeros((L, batch, D), self.dtype),
+            "cm_shift": jnp.zeros((L, batch, D), self.dtype),
+            "S": jnp.zeros((L, batch, H, N, N), jnp.float32),
+            "seq_lens": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        x = layernorm(params["ln0"], embed(params["embed"], tokens))  # (B,D)
+
+        def body(x, inp):
+            lp, tm_sh, cm_sh, S = inp
+            x = constrain_batch(x)
+            h = layernorm(lp["ln1"], x[:, None], cfg.norm_eps)
+            o, st = rwkv_lib.time_mix_step(
+                lp["tm"], h, {"shift": tm_sh, "S": S}, cfg.rwkv)
+            x = x + o[:, 0]
+            new_tm_sh, new_S = h[:, 0], st["S"]
+            h = layernorm(lp["ln2"], x[:, None], cfg.norm_eps)
+            o, new_cm_sh = rwkv_lib.channel_mix(lp["cm"], h, cm_sh)
+            return x + o[:, 0], (new_tm_sh, new_cm_sh, new_S)
+
+        if self.scan_layers:
+            x, (tm_sh, cm_sh, S) = jax.lax.scan(
+                body, x, (params["layers"], cache["tm_shift"],
+                          cache["cm_shift"], cache["S"]))
+        else:
+            outs = []
+            for i in range(cfg.num_layers):
+                inp = jax.tree.map(
+                    lambda t: t[i], (params["layers"], cache["tm_shift"],
+                                     cache["cm_shift"], cache["S"]))
+                x, o = body(x, inp)
+                outs.append(o)
+            tm_sh, cm_sh, S = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        x = layernorm(params["final_norm"], x[:, None], cfg.norm_eps)
+        logits = unembed(params["head"], x)[:, 0]
+        return logits, {"tm_shift": tm_sh, "cm_shift": cm_sh, "S": S,
+                        "seq_lens": cache["seq_lens"] + 1}
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch["tokens"])
+        from repro.training.losses import next_token_loss
+        return next_token_loss(logits, batch["tokens"])

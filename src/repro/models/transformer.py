@@ -1,0 +1,285 @@
+"""Decoder-only transformer LM: dense + MoE + VLM variants, scan-over-layers.
+
+Covers qwen3-moe-235b, granite-moe-1b, qwen2-1.5b, qwen3-32b, internlm2-20b,
+smollm-360m, internvl2-26b (ViT-stub), llama31-8b/70b.
+
+Functional API:
+  init(key)                                -> params
+  forward(params, tokens, extra_embeds)    -> logits (train / prefill)
+  forward_with_kv(...)                     -> (logits, (k, v) stacked (L,...))
+  init_decode_cache(batch, max_seq)        -> contiguous cache pytree
+  decode_step(params, cache, tokens)       -> (logits, cache)       [pjit path]
+  decode_step_paged(params, pools, lists…) -> (logits, pools)       [paper path]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import attention_api, paged_kv
+from repro.distributed.act_sharding import constrain_batch
+from repro.training import remat as remat_lib
+from repro.layers import attention as attn_lib
+from repro.layers import moe as moe_lib
+from repro.layers.embedding import embed, embedding_init, head_init, unembed
+from repro.layers.mlp import mlp_apply, mlp_init
+from repro.layers.norm import rmsnorm, rmsnorm_init
+from repro.layers.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig, *, q_chunk: int = 512,
+                 shard_moe: bool = False, remat: bool = True,
+                 scan_layers: bool = True, unroll_attn: bool = False,
+                 moe_groups: int = 1):
+        self.cfg = cfg
+        self.q_chunk = q_chunk
+        self.shard_moe = shard_moe
+        self.remat = remat
+        self.scan_layers = scan_layers
+        self.unroll_attn = unroll_attn
+        self.moe_groups = moe_groups
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------------ init
+    def _layer_init(self, key):
+        cfg = self.cfg
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {
+            "ln1": rmsnorm_init(cfg.d_model, self.dtype),
+            "ln2": rmsnorm_init(cfg.d_model, self.dtype),
+            "attn": attn_lib.attention_init(k1, cfg.d_model, cfg.attention,
+                                            self.dtype),
+        }
+        if cfg.moe is not None:
+            p["moe"] = moe_lib.moe_init(k2, cfg.d_model, cfg.moe, self.dtype)
+        else:
+            p["mlp"] = mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.act, self.dtype)
+        return p
+
+    def init(self, key):
+        cfg = self.cfg
+        ke, kl, kh = jax.random.split(key, 3)
+        layer_keys = jax.random.split(kl, cfg.num_layers)
+        params = {
+            "embed": embedding_init(ke, cfg.vocab_size, cfg.d_model, self.dtype),
+            "layers": jax.vmap(self._layer_init)(layer_keys),
+            "final_norm": rmsnorm_init(cfg.d_model, self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = head_init(kh, cfg.vocab_size, cfg.d_model, self.dtype)
+        return params
+
+    def init_abstract(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # --------------------------------------------------------------- forward
+    def _block(self, lp, x, positions, *, collect_kv: bool):
+        cfg = self.cfg
+        x = constrain_batch(x)
+        h, kv = attn_lib.attention_block(
+            lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), positions,
+            cfg.attention, chunk=self.q_chunk, unroll=self.unroll_attn)
+        x = x + h
+        if cfg.moe is not None:
+            h, aux = moe_lib.moe_apply(
+                lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.moe,
+                shard=self.shard_moe, groups=self.moe_groups)
+        else:
+            h = mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.act)
+            aux = jnp.zeros((), jnp.float32)
+        return x + h, aux, kv
+
+    def _embed_inputs(self, params, tokens, extra_embeds):
+        x = embed(params["embed"], tokens)
+        if extra_embeds is not None:  # VLM: prepend vision-stub embeddings
+            x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        return x
+
+    def forward(self, params, tokens, extra_embeds=None, *,
+                return_kv: bool = False, last_only: bool = False):
+        cfg = self.cfg
+        x = self._embed_inputs(params, tokens, extra_embeds)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+        def body(carry, lp):
+            x, aux_sum = carry
+            x, aux, kv = self._block(lp, x, positions, collect_kv=return_kv)
+            return (x, aux_sum + aux), (kv if return_kv else None)
+
+        if self.scan_layers:
+            body_fn = remat_lib.wrap(body, self.remat)
+            (x, aux), kvs = jax.lax.scan(
+                body_fn, (x, jnp.zeros((), jnp.float32)), params["layers"])
+        else:  # unrolled (cost probes / scan-vs-unroll experiments)
+            body_fn = remat_lib.wrap(body, self.remat)
+            carry = (x, jnp.zeros((), jnp.float32))
+            kv_list = []
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda t: t[i], params["layers"])
+                carry, kv = body_fn(carry, lp)
+                if return_kv:
+                    kv_list.append(kv)
+            x, aux = carry
+            kvs = (jax.tree.map(lambda *xs: jnp.stack(xs), *kv_list)
+                   if return_kv else None)
+        if last_only:
+            x = x[:, -1:]
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params.get("head", params["embed"]), x)
+        if return_kv:
+            return logits, aux, kvs
+        return logits, aux
+
+    # ---------------------------------------------------------------- decode
+    def init_decode_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        a = cfg.attention
+        shape = (cfg.num_layers, batch, max_seq, a.num_kv_heads, a.head_dim)
+        return {
+            "k": jnp.zeros(shape, self.dtype),
+            "v": jnp.zeros(shape, self.dtype),
+            "seq_lens": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def _decode_attn(self, lp, x, k_cache, v_cache, seq_lens):
+        """One decode token against a contiguous cache.
+
+        §Perf A2 (revised): GSPMD splits the softmax over the model-sharded
+        seq dim into local partials + tiny stat all-reduces on its own, so
+        the dense form IS flash-decoding at the collective level; an
+        explicit KV-chunk scan (tried first) broke the seq sharding and
+        all-gathered every chunk. Scores use ``preferred_element_type`` so
+        no f32 copies of q/k/cache are materialized.
+        """
+        cfg = self.cfg
+        a = cfg.attention
+        B = x.shape[0]
+        q, k_new, v_new = attn_lib.project_qkv(
+            lp["attn"], x[:, None], a, seq_lens[:, None])
+        q = q[:, 0]                                       # (B,H,hd)
+        # append new kv at position seq_lens
+        k_cache = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+            c, n, i, axis=0))(k_cache, k_new, seq_lens)
+        v_cache = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+            c, n, i, axis=0))(v_cache, v_new, seq_lens)
+        S = k_cache.shape[1]
+        KV = a.num_kv_heads
+        qg = q.reshape(B, KV, a.num_heads // KV, a.head_dim)
+        scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                            preferred_element_type=jnp.float32)
+        scores = scores * a.head_dim ** -0.5
+        mask = jnp.arange(S)[None] <= seq_lens[:, None]   # includes new token
+        scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+        ctx = jnp.einsum("bkgs,bskd->bkgd", w, v_cache)
+        return ctx.reshape(B, -1), k_cache, v_cache
+
+    def decode_step(self, params, cache, tokens):
+        """tokens (B,) -> logits (B, V); contiguous cache (pjit path)."""
+        cfg = self.cfg
+        seq_lens = cache["seq_lens"]
+        x = embed(params["embed"], tokens)                # (B, D)
+
+        def body(x, inp):
+            lp, k_c, v_c = inp
+            x = constrain_batch(x)
+            h = rmsnorm(lp["ln1"], x[:, None], cfg.norm_eps)[:, 0]
+            ctx, k_c, v_c = self._decode_attn(lp, h, k_c, v_c, seq_lens)
+            x = x + jnp.einsum("be,ed->bd", ctx, lp["attn"]["wo"])
+            h = rmsnorm(lp["ln2"], x[:, None], cfg.norm_eps)
+            if cfg.moe is not None:
+                o, _ = moe_lib.moe_apply(lp["moe"], h, cfg.moe,
+                                         shard=self.shard_moe,
+                                         full_capacity=True,
+                                         groups=self.moe_groups)
+            else:
+                o = mlp_apply(lp["mlp"], h, cfg.act)
+            return x + o[:, 0], (k_c, v_c)
+
+        if self.scan_layers:
+            x, (k, v) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                               cache["v"]))
+        else:
+            ks, vs = [], []
+            for i in range(cfg.num_layers):
+                inp = jax.tree.map(lambda t: t[i],
+                                   (params["layers"], cache["k"], cache["v"]))
+                x, (k_i, v_i) = body(x, inp)
+                ks.append(k_i)
+                vs.append(v_i)
+            k, v = jnp.stack(ks), jnp.stack(vs)
+        x = rmsnorm(params["final_norm"], x[:, None], cfg.norm_eps)
+        logits = unembed(params.get("head", params["embed"]), x)[:, 0]
+        new_cache = {"k": k, "v": v, "seq_lens": seq_lens + 1}
+        return logits, new_cache
+
+    def decode_step_paged(self, params, pools, lists, tokens, *,
+                          axis: Optional[str] = None):
+        """Paged decode (the paper's technique).
+
+        pools: {"k","v"} (L, NB, BS, KV, HD); lists: dict with block_list /
+        block_req / block_pos (flat BlockList), seq_lens (B,), slots (B,2).
+        ``axis`` set ⇒ running inside shard_map with the pool sequence-sharded
+        over that mesh axis (flash-decoding combine).
+        """
+        cfg = self.cfg
+        a = cfg.attention
+        seq_lens = lists["seq_lens"]
+        x = embed(params["embed"], tokens)
+
+        def body(x, inp):
+            lp, pk, pv = inp
+            h = rmsnorm(lp["ln1"], x[:, None], cfg.norm_eps)
+            q, k_new, v_new = attn_lib.project_qkv(lp["attn"], h, a,
+                                                   seq_lens[:, None])
+            # Non-owning ranks carry out-of-bounds slots -> scatter drops them.
+            pk = paged_kv.append_to_pool(pk, k_new[:, 0], lists["slots"])
+            pv = paged_kv.append_to_pool(pv, v_new[:, 0], lists["slots"])
+            if axis is None:
+                ctx = attention_api.paged_attention_opt(
+                    q[:, 0], pk, pv, lists["block_list"], lists["block_req"],
+                    lists["block_pos"], seq_lens + 1)
+            else:
+                ctx = attention_api.paged_attention_sharded(
+                    q[:, 0], pk, pv, lists["block_list"], lists["block_req"],
+                    lists["block_pos"], seq_lens + 1, axis=axis)
+            x = x + jnp.einsum("be,ed->bd", ctx.reshape(x.shape[0], -1),
+                               lp["attn"]["wo"])
+            h = rmsnorm(lp["ln2"], x[:, None], cfg.norm_eps)
+            if cfg.moe is not None:
+                o, _ = moe_lib.moe_apply(lp["moe"], h, cfg.moe,
+                                         shard=self.shard_moe,
+                                         full_capacity=True,
+                                         groups=self.moe_groups)
+            else:
+                o = mlp_apply(lp["mlp"], h, cfg.act)
+            return x + o[:, 0], (pk, pv)
+
+        x, (pk, pv) = jax.lax.scan(body, x, (params["layers"], pools["k"],
+                                             pools["v"]))
+        x = rmsnorm(params["final_norm"], x[:, None], cfg.norm_eps)
+        logits = unembed(params.get("head", params["embed"]), x)[:, 0]
+        return logits, {"k": pk, "v": pv}
+
+    # ---------------------------------------------------------------- loss
+    def loss(self, params, batch):
+        """Next-token CE. batch: tokens (B,S) [+ extra_embeds, loss_mask]."""
+        logits, aux = self.forward(params, batch["tokens"],
+                                   batch.get("extra_embeds"))
+        V = logits.shape[-1]
+        # VLM: logits include vision positions; score text positions only.
+        n_extra = 0
+        if batch.get("extra_embeds") is not None:
+            n_extra = batch["extra_embeds"].shape[1]
+            logits = logits[:, n_extra:]
+        from repro.training.losses import next_token_loss
+        return next_token_loss(logits, batch["tokens"],
+                               batch.get("loss_mask")) + 0.01 * aux

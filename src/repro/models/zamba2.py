@@ -1,0 +1,201 @@
+"""Zamba2 hybrid: Mamba2 backbone + ONE weight-shared attention block applied
+every ``hybrid_attn_every`` layers (zamba-style). Sub-quadratic: runs the
+long_500k cell. Shared-attention KV is paged (the paper's technique applies
+to the attention applications only; Mamba state is O(1))."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers import attention as attn_lib
+from repro.layers import ssm as ssm_lib
+from repro.layers.embedding import embed, embedding_init, head_init, unembed
+from repro.layers.mlp import mlp_apply, mlp_init
+from repro.layers.norm import rmsnorm, rmsnorm_init
+from repro.distributed.act_sharding import constrain_batch
+from repro.training import remat as remat_lib
+
+NEG_INF = -1e30
+
+
+class Zamba2LM:
+    def __init__(self, cfg: ModelConfig, *, q_chunk: int = 512,
+                 remat: bool = True, scan_layers: bool = True,
+                 unroll_attn: bool = False):
+        self.cfg = cfg
+        self.q_chunk = q_chunk
+        self.remat = remat
+        self.scan_layers = scan_layers
+        self.unroll_attn = unroll_attn
+        self.dtype = jnp.dtype(cfg.dtype)
+        assert cfg.num_layers % cfg.hybrid_attn_every == 0
+        self.n_groups = cfg.num_layers // cfg.hybrid_attn_every
+        self.per_group = cfg.hybrid_attn_every
+
+    def _mamba_init(self, key):
+        return {
+            "ln": rmsnorm_init(self.cfg.d_model, self.dtype),
+            "ssm": ssm_lib.ssm_init(key, self.cfg.d_model, self.cfg.ssm, self.dtype),
+        }
+
+    def init(self, key):
+        cfg = self.cfg
+        ke, km, ka, kf, kh = jax.random.split(key, 5)
+        mamba_keys = jax.random.split(km, cfg.num_layers).reshape(
+            self.n_groups, self.per_group, 2)
+        shared = {
+            "ln1": rmsnorm_init(cfg.d_model, self.dtype),
+            "attn": attn_lib.attention_init(ka, cfg.d_model, cfg.attention,
+                                            self.dtype),
+            "ln2": rmsnorm_init(cfg.d_model, self.dtype),
+            "mlp": mlp_init(kf, cfg.d_model, cfg.d_ff, cfg.act, self.dtype),
+        }
+        return {
+            "embed": embedding_init(ke, cfg.vocab_size, cfg.d_model, self.dtype),
+            "mamba": jax.vmap(jax.vmap(self._mamba_init))(mamba_keys),
+            "shared_attn": shared,
+            "final_norm": rmsnorm_init(cfg.d_model, self.dtype),
+            "head": head_init(kh, cfg.vocab_size, cfg.d_model, self.dtype),
+        }
+
+    def init_abstract(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def _attn_apply(self, shared, x, positions):
+        cfg = self.cfg
+        h, kv = attn_lib.attention_block(
+            shared["attn"], rmsnorm(shared["ln1"], x, cfg.norm_eps), positions,
+            cfg.attention, chunk=self.q_chunk, unroll=self.unroll_attn)
+        x = x + h
+        h = mlp_apply(shared["mlp"], rmsnorm(shared["ln2"], x, cfg.norm_eps),
+                      cfg.act)
+        return x + h
+
+    def forward(self, params, tokens, extra_embeds=None, *, last_only: bool = False):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+        def group_body(x, gp):
+            x = constrain_batch(x)
+            x = self._attn_apply(params["shared_attn"], x, positions)
+
+            def mamba_body(x, lp):
+                h = ssm_lib.ssm_chunked(
+                    lp["ssm"], rmsnorm(lp["ln"], x, cfg.norm_eps), cfg.ssm,
+                    cfg.d_model)
+                return x + h, None
+
+            if self.scan_layers:
+                x, _ = jax.lax.scan(mamba_body, x, gp)
+            else:
+                for j in range(self.per_group):
+                    x, _ = mamba_body(x, jax.tree.map(lambda t: t[j], gp))
+            return x, None
+
+        if self.scan_layers:
+            gb = remat_lib.wrap(group_body, self.remat)
+            x, _ = jax.lax.scan(gb, x, params["mamba"])
+        else:
+            gb = remat_lib.wrap(group_body, self.remat)
+            for i in range(self.n_groups):
+                x, _ = gb(x, jax.tree.map(lambda t: t[i], params["mamba"]))
+        if last_only:
+            x = x[:, -1:]
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return unembed(params["head"], x), jnp.zeros((), jnp.float32)
+
+    # ---------------------------------------------------------------- decode
+    def init_decode_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        a = cfg.attention
+        dims = ssm_lib.ssm_dims(cfg.d_model, cfg.ssm)
+        G, PG = self.n_groups, self.per_group
+        return {
+            "k": jnp.zeros((G, batch, max_seq, a.num_kv_heads, a.head_dim),
+                           self.dtype),
+            "v": jnp.zeros((G, batch, max_seq, a.num_kv_heads, a.head_dim),
+                           self.dtype),
+            "conv": jnp.zeros((G, PG, batch, cfg.ssm.d_conv - 1, dims.conv_dim),
+                              self.dtype),
+            "h": jnp.zeros((G, PG, batch, dims.num_heads, cfg.ssm.head_dim,
+                            cfg.ssm.d_state), jnp.float32),
+            "seq_lens": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        a = cfg.attention
+        seq_lens = cache["seq_lens"]
+        x = embed(params["embed"], tokens)           # (B,D)
+        shared = params["shared_attn"]
+
+        def group_body(x, inp):
+            gp, k_c, v_c, conv, hst = inp
+            x = constrain_batch(x)
+            # shared attention (contiguous cache per group application)
+            hx = rmsnorm(shared["ln1"], x[:, None], cfg.norm_eps)
+            q, k_new, v_new = attn_lib.project_qkv(shared["attn"], hx, a,
+                                                   seq_lens[:, None])
+            k_c = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+                c, n, i, axis=0))(k_c, k_new, seq_lens)
+            v_c = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+                c, n, i, axis=0))(v_c, v_new, seq_lens)
+            B = x.shape[0]
+            KV = a.num_kv_heads
+            qg = q[:, 0].reshape(B, KV, a.num_heads // KV, a.head_dim)
+            scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_c).astype(jnp.float32)
+            scores = scores * a.head_dim ** -0.5
+            mask = jnp.arange(k_c.shape[1])[None] <= seq_lens[:, None]
+            scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+            w = jax.nn.softmax(scores, axis=-1).astype(v_c.dtype)
+            ctx = jnp.einsum("bkgs,bskd->bkgd", w, v_c).reshape(B, -1)
+            x = x + jnp.einsum("be,ed->bd", ctx, shared["attn"]["wo"])
+            h = mlp_apply(shared["mlp"],
+                          rmsnorm(shared["ln2"], x[:, None], cfg.norm_eps),
+                          cfg.act)
+            x = x + h[:, 0]
+
+            def mamba_body(x, minp):
+                lp, cv, hs = minp
+                o, st = ssm_lib.ssm_step(
+                    lp["ssm"], rmsnorm(lp["ln"], x[:, None], cfg.norm_eps),
+                    {"conv": cv, "h": hs}, cfg.ssm, cfg.d_model)
+                return x + o[:, 0], (st["conv"], st["h"])
+
+            if self.scan_layers:
+                x, (conv, hst) = jax.lax.scan(mamba_body, x, (gp, conv, hst))
+            else:
+                outs = []
+                for j in range(self.per_group):
+                    x, o = mamba_body(
+                        x, jax.tree.map(lambda t: t[j], (gp, conv, hst)))
+                    outs.append(o)
+                conv, hst = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+            return x, (k_c, v_c, conv, hst)
+
+        if self.scan_layers:
+            x, (k, v, conv, hst) = jax.lax.scan(
+                group_body, x,
+                (params["mamba"], cache["k"], cache["v"], cache["conv"],
+                 cache["h"]))
+        else:
+            outs = []
+            for i in range(self.n_groups):
+                x, o = group_body(
+                    x, jax.tree.map(lambda t: t[i],
+                                    (params["mamba"], cache["k"], cache["v"],
+                                     cache["conv"], cache["h"])))
+                outs.append(o)
+            k, v, conv, hst = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        x = rmsnorm(params["final_norm"], x[:, None], cfg.norm_eps)
+        logits = unembed(params["head"], x)[:, 0]
+        return logits, {"k": k, "v": v, "conv": conv, "h": hst,
+                        "seq_lens": seq_lens + 1}
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch["tokens"])
+        from repro.training.losses import next_token_loss
+        return next_token_loss(logits, batch["tokens"])

@@ -1,0 +1,3 @@
+from repro.optim.adafactor import adafactor  # noqa: F401
+from repro.optim.optimizer import adamw, sgd_momentum  # noqa: F401
+from repro.optim.schedules import cosine_warmup  # noqa: F401

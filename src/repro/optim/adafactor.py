@@ -1,0 +1,85 @@
+"""Adafactor-lite: factored second moments for matrix params.
+
+At 235B params, Adam's f32 (m, v) costs 8 bytes/param (≈1.9 TB). Adafactor
+stores row/col second-moment factors for ≥2-D params — O(n+m) instead of
+O(n·m) — cutting optimizer HBM ≈2× (momentum-free variant). Standard
+Shazeer & Stern (2018) update with RMS-scaled steps and update clipping.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizer import Optimizer, clip_by_global_norm, global_norm
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any          # row factors (or full v for 1-D params)
+    vc: Any          # col factors (None marker: zeros(0,) for 1-D)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay_pow: float = 0.8, weight_decay: float = 0.0,
+              grad_clip: Optional[float] = 1.0) -> Optimizer:
+    def init(params):
+        def vr_init(p):
+            if _factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)   # reduce last
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc_init(p):
+            if _factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((0,), jnp.float32)
+
+        return AdafactorState(step=jnp.zeros((), jnp.int32),
+                              vr=jax.tree.map(vr_init, params),
+                              vc=jax.tree.map(vc_init, params))
+
+    def update(grads, state: AdafactorState, params, lr):
+        if grad_clip is not None:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            gnorm = global_norm(grads)
+        step = state.step + 1
+        beta2 = 1.0 - step.astype(jnp.float32) ** -decay_pow
+
+        def upd(g, vr, vc, p):
+            g2 = g * g + eps
+            if _factored(p):
+                vr_n = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+                vc_n = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+                denom = jnp.sqrt(
+                    vr_n[..., None] * vc_n[..., None, :]
+                    / jnp.maximum(vr_n.mean(-1, keepdims=True)[..., None],
+                                  eps))
+            else:
+                vr_n = beta2 * vr + (1 - beta2) * g2
+                vc_n = vc
+                denom = jnp.sqrt(vr_n)
+            u = g / jnp.maximum(denom, eps)
+            # update clipping: RMS(u) <= clip_threshold
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), vr_n, vc_n
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        vr = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        vc = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return updates, AdafactorState(step, vr, vc), gnorm
+
+    return Optimizer(init=init, update=update)

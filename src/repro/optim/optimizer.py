@@ -1,0 +1,103 @@
+"""Optimizers (native, no optax dependency): AdamW + SGD-momentum.
+
+Functional API mirroring optax: ``opt.init(params) -> state``,
+``opt.update(grads, state, params, lr) -> (updates, state)``. Moments are
+f32 regardless of param dtype (bf16 training with f32 optimizer state).
+Global-norm clipping is built in.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, grad_clip: Optional[float] = 1.0
+          ) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def update(grads, state: AdamWState, params, lr):
+        if grad_clip is not None:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            gnorm = global_norm(grads)
+        step = state.step + 1
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m, grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g,
+                         state.v, grads)
+
+        def upd(mm, vv, p):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, AdamWState(step, m, v), gnorm
+
+    return Optimizer(init=init, update=update)
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    mom: Any
+
+
+def sgd_momentum(momentum: float = 0.9, grad_clip: Optional[float] = None
+                 ) -> Optimizer:
+    def init(params):
+        return SGDState(step=jnp.zeros((), jnp.int32),
+                        mom=jax.tree.map(
+                            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(grads, state: SGDState, params, lr):
+        if grad_clip is not None:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            gnorm = global_norm(grads)
+        mom = jax.tree.map(lambda b, g: momentum * b + g, state.mom, grads)
+        updates = jax.tree.map(lambda b, p: (-lr * b).astype(p.dtype), mom,
+                               params)
+        return updates, SGDState(state.step + 1, mom), gnorm
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,23 @@
+"""LR schedules (pure functions of step, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(base_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = base_lr * step / max(1, warmup_steps)
+        progress = jnp.clip((step - warmup_steps) /
+                            max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * progress)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def constant(base_lr: float):
+    def lr(step):
+        return jnp.full((), base_lr, jnp.float32)
+    return lr

@@ -1,0 +1,278 @@
+"""Roofline analysis from compiled XLA artifacts (no hardware required).
+
+Three terms per (arch × shape × mesh), per the assignment:
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``. XLA's cost
+analysis DOES scale while-loop bodies by known trip counts (verified in
+tests/test_roofline.py — a scanned model reports ≈ the unrolled FLOPs), so
+scan-over-layers programs are counted correctly.
+
+collective_bytes is parsed from ``compiled.as_text()`` (post-SPMD): every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction's operand bytes are summed (via a name→shape map built from the
+instruction definitions). Collectives inside while loops are multiplied by
+the loop trip count when it is statically known.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+# ---------------------------------------------------------------------------
+# Hardware constants (assignment): TPU-class chip
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class HW:
+    peak_bf16: float = 197e12        # FLOP/s per chip
+    hbm_bw: float = 819e9            # B/s per chip
+    ici_bw: float = 50e9             # B/s per link
+    hbm_bytes: float = 32e9          # capacity (reporting only)
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+"
+                     r"([\w\-]+)\(", re.M)
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_CONVERT_RE = re.compile(
+    r"=\s*f32\[([\d,]*)\][^=]*?\bconvert\(%?([\w.\-]+)\)")
+
+
+def bf16_convert_penalty(hlo_text: str) -> float:
+    """Spurious traffic from the CPU backend's bf16→f32 float-normalization.
+
+    The CPU PJRT backend cannot compute in bf16, so every bf16 tensor is
+    materialized as f32 (convert: read N bf16 + write 2N f32; downstream
+    reads then move 2N instead of N). A TPU lowering has none of this. We
+    sum 4·N_bf16 per upcast convert — the before/after deltas in §Perf are
+    backend-consistent either way; this correction is reported alongside.
+    """
+    shapes: Dict[str, str] = {}
+    for m in re.finditer(
+            r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\S[^=]*?)\s+[\w\-]+\(",
+            hlo_text, re.M):
+        shapes[m.group(1)] = m.group(2)
+    penalty = 0.0
+    for m in _CONVERT_RE.finditer(hlo_text):
+        op = m.group(2)
+        src_type = shapes.get(op, "")
+        if src_type.strip().startswith("bf16"):
+            penalty += 4.0 * _shape_bytes(src_type)
+    return penalty
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective op, by op kind.
+
+    Handles while-loops with statically-known trip counts: collective bytes
+    inside a loop body computation are scaled by the trip count. (XLA's
+    post-optimization HLO annotates ``known_trip_count``.)
+    """
+    # name -> result type string (definitions)
+    shapes: Dict[str, str] = {}
+    for m in re.finditer(
+            r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}\/: ]+?))\s+[\w\-]+\(",
+            hlo_text, re.M):
+        shapes[m.group(1)] = m.group(2)
+
+    # computation -> trip count multiplier (from while ops calling body=...)
+    comp_mult: Dict[str, int] = {}
+    for m in re.finditer(
+            r"while\([^)]*\).*?body=%?([\w.\-]+).*?$", hlo_text, re.M):
+        line = m.group(0)
+        t = _TRIP_RE.search(line)
+        comp_mult[m.group(1)] = int(t.group(1)) if t else 1
+
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    current_comp = None
+    current_mult = 1
+    for line in hlo_text.splitlines():
+        cm = re.match(r"^\s*%?([\w.\-]+)\s+\([^)]*\)\s*->", line)
+        if line.startswith("%") or (cm and "{" in line):
+            pass
+        comp_hdr = re.match(
+            r"^(?:ENTRY\s+)?(?:ROOT\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{",
+            line.strip())
+        if comp_hdr:
+            current_comp = comp_hdr.group(1)
+            current_mult = comp_mult.get(current_comp, 1)
+            continue
+        for kind in _COLLECTIVES:
+            if re.search(rf"\s{kind}(?:-start|-done)?\(", line):
+                if f" {kind}-done(" in line:
+                    continue  # counted at -start
+                # operand names
+                call = re.search(rf"{kind}(?:-start)?\((.*?)\)", line)
+                if not call:
+                    continue
+                operands = re.findall(r"%?([\w.\-]+)", call.group(1))
+                b = 0
+                for op in operands:
+                    if op in shapes:
+                        b += _shape_bytes(shapes[op])
+                if b == 0:  # fall back to result type on the lhs
+                    lhs = line.split("=", 1)
+                    if len(lhs) == 2:
+                        b = _shape_bytes(lhs[1])
+                out[kind] += b * current_mult
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collectives: Dict[str, float] = field(default_factory=dict)
+    model_flops: float = 0.0
+    memory_per_device: float = 0.0
+    hw: HW = field(default_factory=HW)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * self.hw.peak_bf16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * self.hw.hbm_bw)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * self.hw.ici_bw)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time = max of the three overlappable terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs / (chips × peak × roofline step time)."""
+        t = self.step_time
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * self.hw.peak_bf16 * t)
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collectives": self.collectives,
+            "model_flops": self.model_flops,
+            "memory_per_device": self.memory_per_device,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu": self.mfu,
+        }
+
+
+def xla_costs(compiled) -> dict:
+    """flops / bytes / per-kind collective bytes / peak memory of one
+    compiled executable. NOTE: XLA cost analysis counts while-loop bodies
+    ONCE (no trip-count scaling) — callers doing scan-over-layers must apply
+    the depth-probe extrapolation (see launch/dryrun.py). Collective bytes
+    ARE trip-count scaled (parsed from HLO with known_trip_count)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    out = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+    }
+    try:
+        txt = compiled.as_text()
+        out["collectives"] = collective_bytes_from_hlo(txt)
+        out["bf16_convert_penalty"] = bf16_convert_penalty(txt)
+    except Exception:
+        out["collectives"] = {"total": 0.0}
+        out["bf16_convert_penalty"] = 0.0
+    try:
+        ma = compiled.memory_analysis()
+        out["peak_memory"] = float(getattr(ma, "peak_memory_in_bytes", 0) or (
+            ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes))
+        out["argument_bytes"] = float(ma.argument_size_in_bytes)
+        out["output_bytes"] = float(ma.output_size_in_bytes)
+        out["temp_bytes"] = float(ma.temp_size_in_bytes)
+    except Exception:
+        out["peak_memory"] = 0.0
+    return out
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     chips: int, model_flops: float,
+                     hw: Optional[HW] = None) -> RooflineReport:
+    """Build a RooflineReport from a compiled executable."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+        coll = collective_bytes_from_hlo(hlo)
+    except Exception:
+        coll = {"total": 0.0}
+    mem = 0.0
+    try:
+        ma = compiled.memory_analysis()
+        mem = (getattr(ma, "argument_size_in_bytes", 0)
+               + getattr(ma, "output_size_in_bytes", 0)
+               + getattr(ma, "temp_size_in_bytes", 0)
+               + getattr(ma, "generated_code_size_in_bytes", 0))
+    except Exception:
+        pass
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts,
+        collective_bytes=coll.get("total", 0.0), collectives=coll,
+        model_flops=model_flops, memory_per_device=mem,
+        hw=hw or HW())

@@ -1,0 +1,2 @@
+from repro.serving.steps import (  # noqa: F401
+    jit_prefill_step, jit_serve_step, make_prefill_step, make_serve_step)

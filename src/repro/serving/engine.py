@@ -1,0 +1,210 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+The runtime realization of the paper's §4.2 vLLM case study:
+  * requests arrive with a prompt; the scheduler admits them when the
+    BlockAllocator has room (paged, on-demand — no pre-allocation);
+  * every engine step runs ONE fused decode for all active requests through
+    ``decode_step_paged`` with the flat **BlockList** — the paper's
+    optimization, end-to-end;
+  * slot-stable batching: the decode program is compiled ONCE for
+    (max_batch, max_total_blocks); requests map onto fixed slots, inactive
+    slots carry zero-length sequences (dropped by the segment ops) — no
+    retrace, no recompile, exactly vLLM's persistent-batch trick;
+  * prefill is a single teacher-forced forward whose per-layer K/V are
+    scattered into the request's pool blocks in bulk (block-aligned pad);
+  * finished requests free their blocks immediately (dynamic reuse);
+  * TTFT / TPOT per request (paper Fig 17e metrics).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ServeConfig
+from repro.core.paged_kv import (
+    BlockAllocator, gather_prefill_into_pool, make_pool)
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray                  # (prompt_len,) int32
+    max_new_tokens: int
+    arrival: float = field(default_factory=time.time)
+    first_token_at: Optional[float] = None
+    done_at: Optional[float] = None
+    output: List[int] = field(default_factory=list)
+    slot: int = -1
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return (self.first_token_at - self.arrival
+                if self.first_token_at else None)
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.done_at is None or self.first_token_at is None:
+            return None
+        n = max(len(self.output) - 1, 1)
+        return (self.done_at - self.first_token_at) / n
+
+
+class ServingEngine:
+    def __init__(self, model, params, cfg: ModelConfig, serve: ServeConfig,
+                 *, num_blocks: Optional[int] = None, eos_id: int = -1):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.serve = serve
+        self.eos_id = eos_id
+        bs = serve.kv_block_size
+        nb = num_blocks or serve.max_blocks or serve.max_batch * 64
+        a = cfg.attention
+        self.alloc = BlockAllocator(num_blocks=nb, block_size=bs)
+        pk, pv = make_pool(cfg.num_layers, nb, bs, a.num_kv_heads, a.head_dim,
+                           jnp.dtype(cfg.dtype))
+        self.pools = {"k": pk, "v": pv}
+        self.waiting: List[Request] = []
+        self.active: Dict[int, Request] = {}
+        self.finished: List[Request] = []
+        self.B = serve.max_batch
+        self.max_total = nb
+        self._free_slots = list(range(self.B - 1, -1, -1))
+        self._decode = jax.jit(model.decode_step_paged)
+        self._prefill_fwd = jax.jit(
+            lambda p, t: model.forward(p, t, return_kv=True, last_only=True))
+
+    # ------------------------------------------------------------- lifecycle
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def _try_admit(self) -> None:
+        admitted = []
+        for req in self.waiting:
+            need = -(-len(req.prompt) // self.alloc.block_size) + 1
+            if not self._free_slots or self.alloc.num_free < need:
+                break  # FCFS
+            req.slot = self._free_slots.pop()
+            self.alloc.allocate(req.req_id, len(req.prompt))
+            self._bulk_prefill(req)
+            self.active[req.req_id] = req
+            admitted.append(req)
+        for req in admitted:
+            self.waiting.remove(req)
+
+    def _bulk_prefill(self, req: Request) -> None:
+        """One forward pass; scatter per-layer K/V into the pool blocks."""
+        bs = self.alloc.block_size
+        P = len(req.prompt)
+        S_pad = -(-P // bs) * bs
+        toks = np.zeros((1, S_pad), np.int32)
+        toks[0, :P] = req.prompt
+        logits, _, kvs = self._prefill_fwd(self.params, jnp.asarray(toks))
+        # NOTE: last_only logits are at padded pos -1; recompute next token
+        # from position P-1 via the decode path would cost a step — instead
+        # prefill uses exact-length last position: take logits of pos P-1
+        # by re-running unembed is avoided: we pad on the RIGHT, so use the
+        # stacked kvs (valid for :P) and compute the first token by a decode
+        # step over the cached prompt (standard chunked-prefill handoff).
+        k_seq, v_seq = kvs                      # (L, 1, S_pad, KV, HD)
+        table = np.asarray(self.alloc.table(req.req_id), np.int32)[None]
+        pk, pv = self.pools["k"], self.pools["v"]
+        scatter = jax.vmap(
+            lambda pool_l, seq_l: gather_prefill_into_pool(
+                pool_l, seq_l, jnp.asarray(table), S_pad, bs))
+        self.pools = {"k": scatter(pk, k_seq), "v": scatter(pv, v_seq)}
+        # overwrite allocator length to the true prompt length
+        self.alloc._lens[req.req_id] = P
+        # first output token via one decode step on this request alone
+        nxt = self._single_decode(req, int(req.prompt[-1]))
+        req.first_token_at = time.time()
+        req.output.append(nxt)
+
+    def _single_decode(self, req: Request, token: int) -> int:
+        """Used only at the prefill→decode handoff (batch of 1 slot)."""
+        # rewind length by one so the last prompt token is 're-decoded'
+        self.alloc._lens[req.req_id] -= 1
+        lists, tokens = self._build_lists({req.req_id: req}, {req.req_id: token})
+        logits, self.pools = self._decode(self.params, self.pools, lists,
+                                          tokens)
+        self.alloc.commit_token(req.req_id)
+        return int(jnp.argmax(logits[req.slot]))
+
+    def _build_lists(self, reqs: Dict[int, Request],
+                     tokens_by_rid: Dict[int, int]):
+        B = self.B
+        slots = np.full((B, 2), [self.alloc.num_blocks, 0], np.int32)
+        seq_lens = np.zeros((B,), np.int32)
+        tokens = np.zeros((B,), np.int32)
+        bl = np.zeros((self.max_total,), np.int32)
+        br = np.full((self.max_total,), B, np.int32)
+        bp = np.zeros((self.max_total,), np.int32)
+        cursor = 0
+        for rid, req in sorted(reqs.items()):
+            blk, off = self.alloc.reserve_slot(rid)
+            slots[req.slot] = (blk, off)
+            seq_lens[req.slot] = self.alloc.seq_len(rid)
+            tokens[req.slot] = tokens_by_rid[rid]
+            table = self.alloc.table(rid)
+            n = len(table)
+            bl[cursor:cursor + n] = table
+            br[cursor:cursor + n] = req.slot
+            bp[cursor:cursor + n] = np.arange(n)
+            cursor += n
+        lists = {
+            "block_list": jnp.asarray(bl), "block_req": jnp.asarray(br),
+            "block_pos": jnp.asarray(bp), "seq_lens": jnp.asarray(seq_lens),
+            "slots": jnp.asarray(slots),
+        }
+        return lists, jnp.asarray(tokens)
+
+    # ------------------------------------------------------------- main loop
+    def step(self) -> int:
+        """One engine iteration: admit + fused batched decode."""
+        self._try_admit()
+        if not self.active:
+            return 0
+        toks = {rid: r.output[-1] for rid, r in self.active.items()}
+        lists, tokens = self._build_lists(self.active, toks)
+        logits, self.pools = self._decode(self.params, self.pools, lists,
+                                          tokens)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        now = time.time()
+        stepped = len(self.active)
+        for rid in list(self.active):
+            req = self.active[rid]
+            self.alloc.commit_token(rid)
+            tok = int(nxt[req.slot])
+            req.output.append(tok)
+            if (len(req.output) >= req.max_new_tokens or tok == self.eos_id):
+                req.done_at = now
+                self.alloc.free(rid)
+                self._free_slots.append(req.slot)
+                del self.active[rid]
+                self.finished.append(req)
+        return stepped
+
+    def run_until_done(self, max_steps: int = 100_000) -> None:
+        for _ in range(max_steps):
+            if not self.waiting and not self.active:
+                return
+            self.step()
+        raise RuntimeError("serving did not converge")
+
+    # --------------------------------------------------------------- metrics
+    def metrics(self) -> Dict[str, float]:
+        ttfts = [r.ttft for r in self.finished if r.ttft is not None]
+        tpots = [r.tpot for r in self.finished if r.tpot is not None]
+        toks = sum(len(r.output) for r in self.finished)
+        return {
+            "finished": len(self.finished),
+            "output_tokens": toks,
+            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
+            "mean_tpot_s": float(np.mean(tpots)) if tpots else 0.0,
+            "blocks_free": self.alloc.num_free,
+        }

@@ -1,0 +1,32 @@
+"""Serving SLO metrics: streaming percentile tracker for TTFT/TPOT
+(paper Fig 17e's axes) without storing every sample."""
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass
+class LatencyTracker:
+    """Exact percentiles via sorted insertion (fine for ≤1e6 samples)."""
+
+    samples: List[float] = field(default_factory=list)
+
+    def record(self, v: float) -> None:
+        bisect.insort(self.samples, v)
+
+    def percentile(self, p: float) -> float:
+        if not self.samples:
+            return 0.0
+        i = min(int(p / 100.0 * len(self.samples)), len(self.samples) - 1)
+        return self.samples[i]
+
+    @property
+    def mean(self) -> float:
+        return sum(self.samples) / len(self.samples) if self.samples else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {"mean": self.mean, "p50": self.percentile(50),
+                "p90": self.percentile(90), "p99": self.percentile(99),
+                "n": float(len(self.samples))}

@@ -1,0 +1,33 @@
+"""Activation-checkpoint (remat) policies.
+
+§Perf iteration C1: ``full`` remat recomputes the whole layer in backward
+(≈2× forward memory traffic); ``dots`` saves matmul outputs and recomputes
+only cheap elementwise ops — the standard MaxText-style trade of HBM
+capacity for bandwidth. ``none`` disables checkpointing (smoke tests).
+"""
+from __future__ import annotations
+
+from typing import Callable, Union
+
+import jax
+
+Mode = Union[bool, str]
+
+
+def resolve(mode: Mode) -> str:
+    if mode is True:
+        return "full"
+    if mode is False:
+        return "none"
+    assert mode in ("full", "dots", "none"), mode
+    return mode
+
+
+def wrap(fn: Callable, mode: Mode) -> Callable:
+    mode = resolve(mode)
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)

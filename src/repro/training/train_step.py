@@ -1,0 +1,88 @@
+"""pjit train step: loss → grads → AdamW update, fully sharded (GSPMD).
+
+One step function serves every architecture; sharding comes from
+``ShardingRules`` (FSDP over data, TP/EP over model, DP over pod).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizer import Optimizer, apply_updates
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jnp.ndarray
+
+
+def init_state(model, key, optimizer: Optimizer) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def abstract_state(model, optimizer: Optimizer) -> TrainState:
+    """eval_shape'd TrainState — dry-run input without allocation."""
+    return jax.eval_shape(
+        lambda: init_state(model, jax.random.PRNGKey(0), optimizer))
+
+
+def make_train_step(model, optimizer: Optimizer,
+                    lr_fn: Callable[[jnp.ndarray], jnp.ndarray]):
+    """Returns step(state, batch) -> (state, metrics)."""
+
+    def step(state: TrainState, batch) -> tuple:
+        loss, grads = jax.value_and_grad(model.loss)(state.params, batch)
+        lr = lr_fn(state.step)
+        updates, opt_state, gnorm = optimizer.update(
+            grads, state.opt, state.params, lr)
+        params = apply_updates(state.params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return step
+
+
+def state_specs(rules, state_shape: TrainState):
+    """PartitionSpec TrainState matching an abstract state."""
+    from jax.sharding import PartitionSpec as P
+    p_spec = rules.params_tree(state_shape.params)
+    opt_spec = _opt_specs(rules, state_shape)
+    return TrainState(params=p_spec, opt=opt_spec, step=P())
+
+
+def _opt_specs(rules, state_shape: TrainState):
+    """Moments share the param spec; step counters replicate."""
+    from jax.sharding import PartitionSpec as P
+    p_spec = rules.params_tree(state_shape.params)
+    opt = state_shape.opt
+    # NamedTuple (AdamWState / SGDState): first field is step
+    fields = opt._fields
+    new = {}
+    for f in fields:
+        v = getattr(opt, f)
+        if f == "step":
+            new[f] = P()
+        else:
+            new[f] = p_spec
+    return type(opt)(**new)
+
+
+def jit_train_step(model, optimizer, lr_fn, mesh, rules, state_shape,
+                   batch_shape, donate: bool = True):
+    """Fully-specified pjit train step ready to lower/compile."""
+    from jax.sharding import NamedSharding
+
+    step = make_train_step(model, optimizer, lr_fn)
+    s_spec = state_specs(rules, state_shape)
+    b_spec = jax.tree.map(lambda s: rules.batch_spec(s.shape), batch_shape)
+    named = partial(jax.tree.map, lambda sp: NamedSharding(mesh, sp))
+    in_sh = (named(s_spec), named(b_spec))
+    out_sh = (named(s_spec), None)
+    return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=(0,) if donate else ())

@@ -1,0 +1,33 @@
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+for p in (str(ROOT / "src"), str(ROOT)):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+# NOTE: tests run with the real device count (1 CPU). Multi-device tests go
+# through run_multidevice() in a subprocess so the 512-device dry-run env
+# never leaks into smoke tests (see dryrun.py step 0).
+
+
+def run_multidevice(snippet: str, n_devices: int = 8, timeout: int = 600
+                    ) -> subprocess.CompletedProcess:
+    """Run a python snippet in a subprocess with n host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = f"{ROOT / 'src'}:{ROOT}"
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(snippet)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+    return jax.random.PRNGKey(0)

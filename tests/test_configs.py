@@ -1,0 +1,59 @@
+"""Config registry + parameter-count sanity vs published sizes."""
+import pytest
+
+from repro.config import SHAPES, get_config, list_configs
+from repro.configs import ASSIGNED_LM_ARCHS, PAPER_ARCHS
+
+EXPECTED_PARAMS_B = {
+    "qwen3-moe-235b-a22b": (235, 0.05),
+    "qwen3-32b": (32.8, 0.05),
+    "internlm2-20b": (19.9, 0.08),
+    "llama31-8b": (8.0, 0.05),
+    "llama31-70b": (70.6, 0.05),
+    "qwen2-1.5b": (1.54, 0.08),
+    "smollm-360m": (0.36, 0.10),
+    "rwkv6-1.6b": (1.6, 0.15),
+    "zamba2-2.7b": (2.7, 0.20),
+    "granite-moe-1b-a400m": (1.33, 0.10),
+}
+
+
+def test_all_assigned_registered():
+    known = set(list_configs())
+    for a in ASSIGNED_LM_ARCHS + PAPER_ARCHS:
+        assert a in known, a
+
+
+@pytest.mark.parametrize("arch,expected", sorted(EXPECTED_PARAMS_B.items()))
+def test_param_counts(arch, expected):
+    target, tol = expected
+    n = get_config(arch).num_params() / 1e9
+    assert abs(n - target) / target < tol, (arch, n, target)
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    active = cfg.num_active_params() / 1e9
+    assert 20 < active < 24, active  # A22B
+
+
+def test_shapes_cells():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"}
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["long_500k"].seq_len == 524_288
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_LM_ARCHS)
+def test_reduced_and_depth(arch):
+    cfg = get_config(arch)
+    r = cfg.reduced()
+    assert r.num_layers <= 4 and r.d_model <= 128
+    d1 = cfg.with_depth(1)
+    assert d1.depth_units == 1
+    assert d1.d_model == cfg.d_model  # width preserved
+
+
+def test_json_roundtrip():
+    s = get_config("qwen3-32b").to_json()
+    assert "151936" in s

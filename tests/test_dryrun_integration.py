@@ -1,0 +1,77 @@
+"""Integration: the dry-run machinery end-to-end on an 8-device host mesh —
+the same code path the 16×16 / 2×16×16 production runs use."""
+import json
+
+import pytest
+
+from conftest import run_multidevice
+
+_RUNNER = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import jax, warnings
+warnings.filterwarnings('ignore')
+import repro.launch.dryrun as dr
+from repro.config import ShapeCell
+
+def make_small(*, multi_pod=False):
+    if multi_pod:
+        return jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
+    return jax.make_mesh((4, 2), ('data', 'model'))
+
+dr.make_production_mesh = make_small
+dr.SHAPES = dict(dr.SHAPES)
+dr.SHAPES['train_4k'] = ShapeCell('train_4k', 256, 8, 'train')
+dr.SHAPES['decode_32k'] = ShapeCell('decode_32k', 1024, 8, 'decode')
+dr.SHAPES['prefill_32k'] = ShapeCell('prefill_32k', 1024, 4, 'prefill')
+"""
+
+
+@pytest.mark.parametrize("arch,shape,multi", [
+    ("smollm-360m", "train_4k", False),
+    ("smollm-360m", "train_4k", True),
+    ("granite-moe-1b-a400m", "decode_32k", True),
+    ("rwkv6-1.6b", "prefill_32k", False),
+])
+def test_dryrun_cell(arch, shape, multi):
+    snippet = _RUNNER + f"""
+rec = dr.run_cell({arch!r}, {shape!r}, multi_pod={multi}, probes=False,
+                  verbose=False)
+assert rec['status'] == 'ok', rec
+rl = rec['roofline']
+assert rl['hlo_flops'] > 0 and rl['hlo_bytes'] > 0
+assert rl['bottleneck'] in ('compute', 'memory', 'collective')
+import json
+print('REC', json.dumps({{'flops': rl['hlo_flops'],
+                          'coll': rl['collective_bytes']}}))
+print('OK')
+"""
+    r = run_multidevice(snippet, timeout=900)
+    assert "OK" in r.stdout, (r.stdout[-500:], r.stderr[-3000:])
+
+
+def test_dryrun_probe_extrapolation_close_to_model_flops():
+    """Probed HLO FLOPs within 2× of analytic 6·N·D for a dense arch."""
+    snippet = _RUNNER + """
+from repro.roofline.model_flops import model_flops
+from repro.config import get_config
+rec = dr.run_cell('smollm-360m', 'train_4k', multi_pod=False, probes=True,
+                  verbose=False)
+assert rec['status'] == 'ok', rec
+assert 'probe_error' not in rec, rec.get('probe_error')
+ratio = rec['roofline']['useful_flops_ratio']
+assert 0.5 < ratio <= 1.2, ratio
+print('OK', ratio)
+"""
+    r = run_multidevice(snippet, timeout=900)
+    assert "OK" in r.stdout, (r.stdout[-500:], r.stderr[-3000:])
+
+
+def test_long500k_skip_policy():
+    snippet = _RUNNER + """
+rec = dr.run_cell('qwen3-32b', 'long_500k', multi_pod=False, probes=False)
+assert rec['status'] == 'skipped'
+print('OK')
+"""
+    r = run_multidevice(snippet, timeout=300)
+    assert "OK" in r.stdout, r.stderr[-2000:]

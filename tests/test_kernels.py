@@ -1,0 +1,113 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.paged_kv import BlockAllocator
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,causal,dtype", [
+    (2, 128, 4, 2, 64, True, jnp.float32),
+    (1, 256, 6, 6, 64, False, jnp.float32),
+    (2, 64, 8, 2, 128, True, jnp.float32),
+    (1, 128, 4, 4, 64, True, jnp.bfloat16),
+])
+def test_flash_attention_sweep(B, S, H, KV, hd, causal, dtype):
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, bq=64, bk=64,
+                                 interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("NB,BS,KV,hd,H,B,lens", [
+    (24, 8, 2, 64, 8, 3, [13, 8, 21]),
+    (40, 16, 4, 128, 8, 4, [40, 1, 64, 17]),
+    (16, 8, 6, 64, 6, 2, [5, 9]),
+    (16, 8, 1, 64, 4, 2, [8, 16]),
+])
+def test_paged_attention_kernel_sweep(NB, BS, KV, hd, H, B, lens):
+    from repro.kernels.paged_attention.kernel import paged_attention_pallas
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+    ks = jax.random.split(KEY, 3)
+    pk = jax.random.normal(ks[0], (NB, BS, KV, hd), jnp.float32)
+    pv = jax.random.normal(ks[1], (NB, BS, KV, hd), jnp.float32)
+    q = jax.random.normal(ks[2], (B, H, hd), jnp.float32)
+    al = BlockAllocator(num_blocks=NB, block_size=BS)
+    al._free = np.random.RandomState(1).permutation(NB).tolist()
+    for r, L in enumerate(lens):
+        al.allocate(r, L)
+    tot = sum(-(-L // BS) for L in lens) + 3
+    args = [jnp.asarray(x) for x in
+            al.build_block_list(list(range(B)), max_total=tot)]
+    out = paged_attention_pallas(q, pk, pv, *args, interpret=True)
+    ref = paged_attention_ref(q, pk, pv, *args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("R,D,B,T,L,dtype", [
+    (64, 128, 3, 4, 5, jnp.float32),
+    (32, 256, 2, 10, 20, jnp.float32),
+    (64, 128, 2, 4, 1, jnp.bfloat16),
+])
+def test_batched_embedding_sweep(R, D, B, T, L, dtype):
+    from repro.kernels.batched_embedding.kernel import batched_embedding_pallas
+    from repro.kernels.batched_embedding.ref import batched_embedding_ref
+    tbl = jax.random.normal(KEY, (R * T, D), dtype)
+    offs = jnp.arange(T, dtype=jnp.int32) * R
+    idx = jax.random.randint(KEY, (B, T, L), 0, R)
+    gid = (idx + offs[None, :, None]).reshape(-1)
+    out = batched_embedding_pallas(tbl, gid, L, interpret=True)
+    ref = batched_embedding_ref(tbl, offs, idx).reshape(B * T, D)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("rows,block_rows,dtype", [
+    (512, 16, jnp.float32), (1024, 256, jnp.float32),
+    (512, 8, jnp.bfloat16),
+])
+def test_stream_sweep(rows, block_rows, dtype):
+    from repro.kernels.stream.ops import stream_add, stream_scale, stream_triad
+    n = rows * 128
+    a = jax.random.normal(KEY, (n,), dtype)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,), dtype)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(stream_add(a, b, block_rows), np.float32),
+        np.asarray(a + b, np.float32), **tol)
+    np.testing.assert_allclose(
+        np.asarray(stream_scale(a, 3.0, block_rows), np.float32),
+        np.asarray(3.0 * a, np.float32), **tol)
+    np.testing.assert_allclose(
+        np.asarray(stream_triad(a, b, 3.0, block_rows), np.float32),
+        np.asarray(3.0 * a + b, np.float32), **tol)
+
+
+@pytest.mark.parametrize("R,D,N", [(100, 128, 37), (64, 256, 64)])
+def test_gather_scatter_sweep(R, D, N):
+    from repro.kernels.gather_scatter.ops import vector_gather, vector_scatter
+    tbl = jax.random.normal(KEY, (R, D), jnp.float32)
+    ids = jax.random.randint(KEY, (N,), 0, R)
+    np.testing.assert_allclose(np.asarray(vector_gather(tbl, ids)),
+                               np.asarray(jnp.take(tbl, ids, 0)))
+    ids_u = jnp.asarray(np.random.RandomState(0).permutation(R)[:N])
+    src = jax.random.normal(jax.random.PRNGKey(2), (N, D), jnp.float32)
+    out = vector_scatter(tbl, ids_u, src)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(tbl.at[ids_u].set(src)))

@@ -1,0 +1,65 @@
+"""Adafactor + sampling + latency tracker tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adafactor import adafactor
+from repro.optim.optimizer import apply_updates
+from repro.serving.metrics import LatencyTracker
+from repro.serving.sampling import greedy, sample
+
+
+def test_adafactor_converges_and_is_factored():
+    opt = adafactor(grad_clip=None)
+    params = {"w": jnp.ones((8, 6)) * 3.0, "b": jnp.ones((6,)) * 2.0}
+    state = opt.init(params)
+    # factored state is O(n+m), not O(n*m)
+    assert state.vr["w"].shape == (8,)
+    assert state.vc["w"].shape == (6,)
+    assert state.vr["b"].shape == (6,)
+
+    def loss_fn(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss_fn)(params)
+        upd, state, _ = opt.update(g, state, params, 0.05)
+        params = apply_updates(params, upd)
+    assert float(loss_fn(params)) < 1.0
+
+
+def test_adafactor_memory_is_sublinear():
+    p = {"big": jnp.zeros((512, 256))}
+    st = adafactor().init(p)
+    n_state = sum(x.size for x in jax.tree.leaves((st.vr, st.vc)))
+    assert n_state == 512 + 256  # vs 2*512*256 for adam
+
+
+def test_sampling_modes():
+    key = jax.random.PRNGKey(0)
+    logits = jnp.asarray([[0.0, 5.0, 1.0, -2.0]] * 4)
+    np.testing.assert_array_equal(np.asarray(greedy(logits)), [1, 1, 1, 1])
+    # temperature 0 == greedy
+    np.testing.assert_array_equal(
+        np.asarray(sample(key, logits, temperature=0.0)), [1, 1, 1, 1])
+    # top_k=1 forces argmax even at high temperature
+    np.testing.assert_array_equal(
+        np.asarray(sample(key, logits, temperature=5.0, top_k=1)),
+        [1, 1, 1, 1])
+    # top_p tiny keeps only the argmax
+    np.testing.assert_array_equal(
+        np.asarray(sample(key, logits, temperature=2.0, top_p=0.01)),
+        [1, 1, 1, 1])
+    # unconstrained sampling covers >1 token across many draws
+    draws = [int(sample(jax.random.PRNGKey(i), logits[:1],
+                        temperature=3.0)[0]) for i in range(40)]
+    assert len(set(draws)) > 1
+
+
+def test_latency_tracker_percentiles():
+    t = LatencyTracker()
+    for v in reversed(range(100)):
+        t.record(float(v))
+    s = t.summary()
+    assert s["p50"] == 50.0 and s["p99"] == 99.0
+    assert abs(s["mean"] - 49.5) < 1e-9

@@ -1,0 +1,109 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import attention_api
+from repro.core.paged_kv import BlockAllocator
+from repro.distributed.compression import dequantize_int8, quantize_int8
+from repro.training.losses import softmax_cross_entropy
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "free", "append"]),
+                          st.integers(0, 5), st.integers(1, 30)),
+                min_size=1, max_size=40))
+def test_allocator_never_leaks_or_double_allocates(ops):
+    """Fuzz alloc/free/append: block conservation + no block owned twice."""
+    al = BlockAllocator(num_blocks=24, block_size=4)
+    live = set()
+    for op, rid, n in ops:
+        try:
+            if op == "alloc" and rid not in live:
+                al.allocate(rid, n)
+                live.add(rid)
+            elif op == "free" and rid in live:
+                al.free(rid)
+                live.remove(rid)
+            elif op == "append" and rid in live:
+                al.append_token(rid)
+        except Exception as e:
+            from repro.core.paged_kv import OutOfBlocksError
+            assert isinstance(e, OutOfBlocksError)
+        owned = [b for r in live for b in al.table(r)]
+        assert len(owned) == len(set(owned))          # no double ownership
+        assert len(owned) + al.num_free == 24          # conservation
+        for r in live:                                  # enough blocks
+            assert len(al.table(r)) * 4 >= al.seq_len(r)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 4), st.integers(1, 3), st.lists(
+    st.integers(1, 40), min_size=1, max_size=4))
+def test_paged_attention_layout_invariance(kv, g, lens):
+    """The result must not depend on WHICH pool blocks are used."""
+    B = len(lens)
+    H, HD, BS = kv * g, 16, 8
+    NB = sum(-(-L // BS) for L in lens) + 4
+    key = jax.random.PRNGKey(B * 97 + kv)
+    k_rows = jax.random.normal(key, (B, 48, kv, HD))
+    v_rows = jax.random.normal(jax.random.fold_in(key, 1), (B, 48, kv, HD))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (B, H, HD))
+
+    outs = []
+    for perm_seed in (0, 1):
+        al = BlockAllocator(num_blocks=NB, block_size=BS)
+        al._free = np.random.RandomState(perm_seed).permutation(NB).tolist()
+        pk = jnp.zeros((NB, BS, kv, HD))
+        pv = jnp.zeros((NB, BS, kv, HD))
+        for r, L in enumerate(lens):
+            al.allocate(r, L)
+            tab = al.table(r)
+            for pos in range(L):
+                pk = pk.at[tab[pos // BS], pos % BS].set(k_rows[r, pos])
+                pv = pv.at[tab[pos // BS], pos % BS].set(v_rows[r, pos])
+        bl, br, bp, ll = al.build_block_list(list(range(B)),
+                                             max_total=NB)
+        outs.append(attention_api.paged_attention_opt(
+            q, pk, pv, jnp.asarray(bl), jnp.asarray(br), jnp.asarray(bp),
+            jnp.asarray(ll)))
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 64), st.floats(0.01, 100.0))
+def test_quantization_error_bounded(n, scale):
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(n), (n,))) * scale
+    q, s = quantize_int8(jnp.asarray(x))
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - x)
+    assert err.max() <= float(s) * 0.5 + 1e-6 * scale
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 32), st.integers(2, 50))
+def test_vocab_parallel_ce_matches_naive(b, v):
+    key = jax.random.PRNGKey(b * 131 + v)
+    logits = jax.random.normal(key, (b, v)) * 3
+    targets = jax.random.randint(jax.random.fold_in(key, 1), (b,), 0, v)
+    ours = softmax_cross_entropy(logits, targets)
+    naive = -jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                 targets[:, None], axis=-1)[:, 0]
+    np.testing.assert_allclose(np.asarray(ours), np.asarray(naive),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 6), st.integers(1, 8))
+def test_plan_remesh_always_valid(pods_lost, data_min):
+    from repro.distributed.elastic import plan_remesh
+    total = 512 - pods_lost * 37
+    plan = plan_remesh(total, 256, model_parallel=16, min_data=data_min)
+    if plan is not None:
+        p, d, m = plan
+        assert p * d * m <= max(total, 0)
+        assert m == 16 and d >= data_min
