@@ -1,6 +1,16 @@
 """Paper Fig 12 + 17 d/e: end-to-end LLM serving — prefill/decode latency
-breakdown across output lengths, TTFT/TPOT from the continuous-batching
-engine (Dynamic-Sonnet-style variable lengths)."""
+breakdown across output lengths, plus scenario sweeps through the
+scheduler-driven engine (chunked prefill, prefix-cached paged KV,
+preemption):
+
+  * ``llm_engine_*``   continuous batching, Dynamic-Sonnet-style variable
+    lengths, p50/p99 TTFT/TPOT + tokens/sec;
+  * ``llm_burst_*``    bursty arrivals (whole wave at t0) vs trickle;
+  * ``llm_prefix_*``   shared-prefix workload — reports the prefix-cache hit
+    rate and fresh-block allocations vs independent prompts;
+  * ``llm_preempt_*``  memory-pressure preemption (pool sized below the
+    working set) — reports preemption count and completion.
+"""
 from __future__ import annotations
 
 import time
@@ -12,6 +22,24 @@ from benchmarks.common import emit, time_fn
 from repro.config import ServeConfig, get_config
 from repro.models.api import build_model
 from repro.serving.engine import Request, ServingEngine
+
+
+def _drain(engine) -> float:
+    t0 = time.time()
+    engine.run_until_done()
+    return time.time() - t0
+
+
+def _emit_engine(tag: str, engine, dt: float) -> None:
+    m = engine.metrics()
+    emit(tag, dt * 1e6,
+         f"ttft_p50_ms={m['p50_ttft_s']*1e3:.1f};"
+         f"ttft_p99_ms={m['p99_ttft_s']*1e3:.1f};"
+         f"tpot_p50_ms={m['p50_tpot_s']*1e3:.1f};"
+         f"tpot_p99_ms={m['p99_tpot_s']*1e3:.1f};"
+         f"tok_s={m['throughput_tok_s']:.1f};"
+         f"preempt={m['preemptions']};"
+         f"prefix_hit_rate={m['prefix_hit_rate']:.2f}")
 
 
 def run(quick: bool = True) -> None:
@@ -37,25 +65,70 @@ def run(quick: bool = True) -> None:
              f"prefill_frac={us_prefill/total:.2f};"
              f"decode_frac={out_len*us_decode/total:.2f}")
 
+    rng = np.random.default_rng(0)
+
+    def var_requests(n):
+        return [Request(
+            req_id=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                (int(rng.integers(4, 12)),), dtype=np.int32),
+            max_new_tokens=int(rng.integers(3, 8))) for i in range(n)]
+
     # continuous batching TTFT/TPOT with variable lengths (Fig 17 d/e)
     n_req = 3 if quick else 16
-    rng = np.random.default_rng(0)
     for max_batch in ([2] if quick else [2, 8, 32]):
         serve = ServeConfig(model=cfg.name, kv_block_size=8,
                             max_batch=max_batch)
         engine = ServingEngine(model, params, cfg, serve, num_blocks=256)
-        for i in range(n_req):
-            plen = int(rng.integers(4, 12))
-            engine.submit(Request(
-                req_id=i,
-                prompt=rng.integers(0, cfg.vocab_size, (plen,),
-                                    dtype=np.int32),
-                max_new_tokens=int(rng.integers(3, 8))))
-        t0 = time.time()
-        engine.run_until_done()
-        dt = time.time() - t0
-        m = engine.metrics()
-        emit(f"llm_engine_maxbatch{max_batch}", dt * 1e6,
-             f"ttft_ms={m['mean_ttft_s']*1e3:.1f};"
-             f"tpot_ms={m['mean_tpot_s']*1e3:.1f};"
-             f"tok_s={m['output_tokens']/dt:.1f}")
+        for r in var_requests(n_req):
+            engine.submit(r)
+        _emit_engine(f"llm_engine_maxbatch{max_batch}", engine, _drain(engine))
+
+    # bursty arrivals: the whole wave lands at t0 and queues behind max_batch
+    n_burst = 6 if quick else 32
+    serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=2)
+    engine = ServingEngine(model, params, cfg, serve, num_blocks=256)
+    for r in var_requests(n_burst):
+        engine.submit(r)
+    _emit_engine(f"llm_burst_n{n_burst}", engine, _drain(engine))
+
+    # shared-prefix workload: common system prompt, prefix cache reuses blocks
+    n_pfx = 6 if quick else 24
+    plen = 16
+    prefix = rng.integers(0, cfg.vocab_size, (plen,), dtype=np.int32)
+    serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=2)
+    eng_shared = ServingEngine(model, params, cfg, serve, num_blocks=256)
+    for i in range(n_pfx):
+        tail = rng.integers(0, cfg.vocab_size, (4,), dtype=np.int32)
+        eng_shared.submit(Request(req_id=i,
+                                  prompt=np.concatenate([prefix, tail]),
+                                  max_new_tokens=4))
+    dt = _drain(eng_shared)
+    eng_indep = ServingEngine(model, params, cfg, serve, num_blocks=256)
+    for i in range(n_pfx):
+        eng_indep.submit(Request(
+            req_id=i,
+            prompt=rng.integers(0, cfg.vocab_size, (plen + 4,),
+                                dtype=np.int32),
+            max_new_tokens=4))
+    dt_i = _drain(eng_indep)
+    m = eng_shared.metrics()
+    emit(f"llm_prefix_shared_n{n_pfx}", dt * 1e6,
+         f"prefix_hit_rate={m['prefix_hit_rate']:.2f};"
+         f"blocks_allocated={eng_shared.alloc.blocks_allocated};"
+         f"indep_blocks_allocated={eng_indep.alloc.blocks_allocated};"
+         f"speedup_vs_indep={dt_i/max(dt, 1e-9):.2f}")
+
+    # memory pressure: pool below the working set forces preemption
+    serve = ServeConfig(model=cfg.name, kv_block_size=4, max_batch=3)
+    engine = ServingEngine(model, params, cfg, serve, num_blocks=10)
+    for i in range(3):
+        engine.submit(Request(
+            req_id=i,
+            prompt=rng.integers(0, cfg.vocab_size, (6,), dtype=np.int32),
+            max_new_tokens=8))
+    dt = _drain(engine)
+    m = engine.metrics()
+    emit("llm_preempt_pressure", dt * 1e6,
+         f"preemptions={m['preemptions']};finished={m['finished']};"
+         f"tok_s={m['throughput_tok_s']:.1f}")

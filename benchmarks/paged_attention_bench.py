@@ -15,7 +15,7 @@ import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.core.attention_api import (
-    paged_attention_base, paged_attention_opt)
+    paged_attention_base, paged_attention_chunked, paged_attention_opt)
 from repro.core.paged_kv import BlockAllocator
 
 
@@ -76,3 +76,23 @@ def run(quick: bool = True) -> None:
         us_opt = time_fn(opt_j, q, pk, pv, bl, br, bp, lens2, iters=3)
         emit(f"paged_opt_B{B2}_S{blocks*BS}", us_opt,
              f"speedup_vs_base={us_base/max(us_opt,1e-9):.2f}")
+    # chunked-prefill sweep: one fused call prefills C prompt tokens against
+    # the paged pool (the serving engine's per-step shape). Per-token cost
+    # should FALL with C — that amortization is why chunked prefill can ride
+    # inside the decode step instead of stalling it.
+    chunk_j = jax.jit(paged_attention_chunked)
+    Bc, blocks_c = (4, 8) if quick else (16, 32)
+    S = blocks_c * BS
+    NB = Bc * blocks_c + 8
+    seq_lens = [S] * Bc
+    (q1, pk, pv, _, _, bl, br, bp, lens2) = _setup(
+        Bc, seq_lens, blocks_c, NB, BS, KV, HD, H, key)
+    for C in ([1, 4, 16] if quick else [1, 8, 64, 256]):
+        T = Bc * C
+        qs = jax.random.normal(key, (T, H, HD), jnp.float32)
+        token_req = jnp.repeat(jnp.arange(Bc, dtype=jnp.int32), C)
+        token_pos = jnp.tile(jnp.arange(S - C, S, dtype=jnp.int32), Bc)
+        us = time_fn(chunk_j, qs, pk, pv, bl, br, bp, lens2, token_req,
+                     token_pos, iters=3)
+        emit(f"paged_chunked_C{C}", us,
+             f"tokens={T};us_per_token={us/max(T,1):.2f}")

@@ -1,5 +1,6 @@
-"""End-to-end LLM serving with the paper's BlockList PagedAttention:
-continuous batching, paged KV pool, TTFT/TPOT metrics.
+"""End-to-end LLM serving with the scheduler-driven stack: chunked prefill
+fused into the decode step, prefix-cached paged KV (BlockList
+PagedAttention), per-request sampling, preemption under block pressure.
 
     PYTHONPATH=src python examples/serve_llm.py
 """
@@ -10,7 +11,7 @@ import numpy as np
 
 from repro.config import ServeConfig, get_config
 from repro.models.api import build_model
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Request, SamplingParams, ServingEngine
 
 
 def main() -> None:
@@ -21,22 +22,34 @@ def main() -> None:
     engine = ServingEngine(model, params, cfg, serve, num_blocks=128)
 
     rng = np.random.default_rng(0)
-    # Dynamic-Sonnet-style variable-length request mix (paper Fig 17 d/e)
+    # Dynamic-Sonnet-style mix: a shared "system prompt" prefix (prefix-cache
+    # hits after the first wave) + per-request tails of variable length, and
+    # a mix of greedy and stochastic sampling policies.
+    system_prompt = rng.integers(0, cfg.vocab_size, (16,), dtype=np.int32)
     for i in range(8):
+        tail = rng.integers(0, cfg.vocab_size,
+                            (int(rng.integers(2, 8)),), dtype=np.int32)
+        sampling = (SamplingParams() if i % 2 == 0 else
+                    SamplingParams(temperature=0.8, top_k=40, top_p=0.95))
         engine.submit(Request(
             req_id=i,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                (int(rng.integers(4, 20)),), dtype=np.int32),
-            max_new_tokens=int(rng.integers(4, 10))))
+            prompt=np.concatenate([system_prompt, tail]),
+            max_new_tokens=int(rng.integers(4, 10)),
+            sampling=sampling))
     t0 = time.time()
     engine.run_until_done()
     dt = time.time() - t0
     m = engine.metrics()
     print(f"served {m['finished']} requests / {m['output_tokens']} tokens "
-          f"in {dt:.1f}s")
-    print(f"TTFT {m['mean_ttft_s']*1e3:.0f} ms, TPOT {m['mean_tpot_s']*1e3:.0f}"
-          f" ms, pool leak check: {m['blocks_free']} == 128")
+          f"in {dt:.1f}s ({m['throughput_tok_s']:.1f} tok/s)")
+    print(f"TTFT p50/p99 {m['p50_ttft_s']*1e3:.0f}/{m['p99_ttft_s']*1e3:.0f} ms, "
+          f"TPOT p50/p99 {m['p50_tpot_s']*1e3:.0f}/{m['p99_tpot_s']*1e3:.0f} ms")
+    print(f"prefix hit rate {m['prefix_hit_rate']:.2f} "
+          f"({m['prefix_hits']} hits), preemptions {m['preemptions']}, "
+          f"CoW copies {m['cow_copies']}")
+    print(f"pool leak check: {m['blocks_free']} == 128")
     assert m["blocks_free"] == 128
+    assert m["prefix_hits"] > 0
 
 
 if __name__ == "__main__":

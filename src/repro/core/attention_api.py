@@ -15,9 +15,15 @@ Reproduces the paper's §4.2 vLLM case study as a TPU-native op pair:
 * :func:`paged_attention_sharded` — beyond-paper: flash-decoding combine of
   the opt path across a mesh axis (sequence-sharded KV pool), used by the
   multi-pod ``serve_step``.
+* :func:`paged_attention_chunked` — chunked-prefill generalization: a flat
+  batch of query *tokens* (decode tokens and prompt-chunk tokens mixed) each
+  attends causally to its request's pool blocks. With one token per request
+  it reduces to the opt path; with a chunk it is prefill-in-the-decode-step,
+  which is what lets the serving engine run ONE fused program per step.
 
-All math: q (B, H, HD) single decode token; pool (NB, BS, KV, HD).
-GQA handled by grouping H into KV groups. f32 softmax accumulation.
+All math: q (B, H, HD) single decode token (or (T, H, HD) flat token lanes
+for the chunked op); pool (NB, BS, KV, HD). GQA handled by grouping H into
+KV groups. f32 softmax accumulation.
 """
 from __future__ import annotations
 
@@ -121,6 +127,54 @@ def paged_attention_sharded(q, pool_k, pool_v, block_list, block_req,
     o = jax.lax.psum(o_r * corr[..., None], axis)
     out = o / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(B, H, HD).astype(q.dtype)
+
+
+def paged_attention_chunked(q, pool_k, pool_v, block_list, block_req,
+                            block_pos, kv_lens, token_req, token_pos,
+                            *, sm_scale: Optional[float] = None):
+    """Chunked-prefill paged attention over flat token lanes.
+
+    q         (T, H, HD)  queries — a mix of decode tokens (one per request)
+                          and prompt-chunk tokens (several per request)
+    block_*   (Tb,)       flat BlockList as in :func:`paged_attention_opt`,
+                          with ``block_req`` holding request/slot ids
+    kv_lens   (B,)        total valid KV per request AFTER this step's tokens
+                          were appended to the pool
+    token_req (T,)        owning request/slot of each query lane (>= B ⇒ pad)
+    token_pos (T,)        absolute sequence position of each query token
+
+    Each query attends to keys of its own request with ``key_pos <=
+    token_pos`` (causal within the chunk — the chunk's own KV is already in
+    the pool). Padding lanes produce zeros. With T == B and one token per
+    request this computes exactly :func:`paged_attention_opt`.
+    """
+    T, H, HD = q.shape
+    NB, BS, KV, _ = pool_k.shape
+    B = kv_lens.shape[0]
+    G = H // KV
+    scale = sm_scale if sm_scale is not None else HD ** -0.5
+
+    k = jnp.take(pool_k, block_list, axis=0)              # (Tb, BS, KV, HD)
+    v = jnp.take(pool_v, block_list, axis=0)
+    qg = q.reshape(T, KV, G, HD)
+    scores = jnp.einsum("tkgd,uskd->tkgus", qg, k).astype(jnp.float32) * scale
+    key_pos = block_pos[:, None] * BS + jnp.arange(BS)[None]    # (Tb, BS)
+    breq = jnp.clip(block_req, 0, B - 1)
+    valid = ((block_req[None, :] == token_req[:, None])         # (T, Tb)
+             & (block_req[None, :] < B)
+             & (token_req[:, None] < B))
+    valid = (valid[:, :, None]
+             & (key_pos[None] <= token_pos[:, None, None])      # causal
+             & (key_pos[None] < kv_lens[breq][None, :, None]))  # (T, Tb, BS)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    m = jnp.max(scores, axis=(-2, -1))                    # (T, KV, G)
+    m = jnp.maximum(m, -1e30)
+    p = jnp.exp(scores - m[:, :, :, None, None])
+    p = jnp.where(valid[:, None, None], p, 0.0)
+    l = p.sum(axis=(-2, -1))                              # (T, KV, G)
+    o = jnp.einsum("tkgus,uskd->tkgd", p.astype(v.dtype), v).astype(jnp.float32)
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(T, H, HD).astype(q.dtype)
 
 
 @partial(jax.jit, static_argnames=("backend",))

@@ -1,8 +1,24 @@
 """Paged KV-cache pool and block allocator.
 
-Host side (`BlockAllocator`): a free-list allocator over a fixed pool of
-KV blocks, exactly vLLM's memory manager. Produces, per scheduling step,
-either
+Host side (`BlockAllocator`): a refcounted free-list allocator over a fixed
+pool of KV blocks — vLLM's memory manager, including its two serving-side
+tricks:
+
+  * **Prefix caching** — every *full* block of a prompt is content-hashed
+    (chained over the prefix, so a block's key commits to everything before
+    it). Freed blocks whose content is hashed are parked in a cached-free LRU
+    instead of being scrubbed; a later prompt with the same prefix re-adopts
+    them with a refcount bump and skips recomputing their KV.
+  * **Copy-on-write** — a block shared by several requests (refcount > 1) is
+    never written in place; :meth:`reserve_tokens` transparently allocates a
+    private copy and records a (src, dst) pair for the engine to apply on the
+    device pool via :func:`copy_pool_blocks`.
+
+Sequence state is mutated ONLY through the public API — ``allocate`` /
+``allocate_prefix``, ``reserve_tokens`` + ``commit_tokens``, ``rewind`` /
+``truncate``, ``free`` — so engines never poke ``_lens`` directly.
+
+Per scheduling step the allocator also renders the device layouts:
   * a padded 2D **BlockTable** (B, max_blocks)  — the baseline layout whose
     zero-padding induces redundant gathers (paper Fig 16a), or
   * a flat 1D **BlockList** of only *effectual* blocks plus per-block request
@@ -14,6 +30,8 @@ per active request into its current block/offset.
 """
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -25,9 +43,15 @@ class OutOfBlocksError(RuntimeError):
     pass
 
 
+def _prefix_key(tokens: np.ndarray, n_tokens: int) -> bytes:
+    """Content hash of ``tokens[:n_tokens]`` (chained prefix hash)."""
+    buf = np.ascontiguousarray(tokens[:n_tokens], dtype=np.int32).tobytes()
+    return hashlib.blake2b(buf, digest_size=16).digest()
+
+
 @dataclass
 class BlockAllocator:
-    """Free-list allocator over ``num_blocks`` KV blocks of ``block_size`` tokens."""
+    """Refcounted free-list allocator over ``num_blocks`` KV blocks."""
 
     num_blocks: int
     block_size: int
@@ -35,38 +59,184 @@ class BlockAllocator:
     _free: List[int] = field(default_factory=list)
     _tables: Dict[int, List[int]] = field(default_factory=dict)
     _lens: Dict[int, int] = field(default_factory=dict)
+    # block -> refcount, for every live (allocated or cached-free) block
+    _ref: Dict[int, int] = field(default_factory=dict)
+    # prefix cache: content hash <-> block (only FULL prompt blocks)
+    _hash_of: Dict[int, bytes] = field(default_factory=dict)
+    _block_of: Dict[bytes, int] = field(default_factory=dict)
+    # refcount-0 blocks whose content is retained for prefix reuse (LRU)
+    _cached_free: "OrderedDict[int, None]" = field(default_factory=OrderedDict)
+    # (src, dst) copy-on-write pairs awaiting a device-pool copy
+    pending_copies: List[Tuple[int, int]] = field(default_factory=list)
+    # counters (surfaced by ServingEngine.metrics)
+    prefix_hits: int = 0
+    prefix_misses: int = 0
+    cow_copies: int = 0
+    cache_evictions: int = 0
+    blocks_allocated: int = 0    # total fresh-block grabs (prefix hits skip it)
 
     def __post_init__(self):
         self._free = list(range(self.num_blocks - 1, -1, -1))
+
+    # -- block bookkeeping --------------------------------------------------
+    def _pop_block(self) -> int:
+        """Take a block: plain free list first, then evict cached-free LRU."""
+        if self._free:
+            self.blocks_allocated += 1
+            return self._free.pop()
+        if self._cached_free:
+            blk, _ = self._cached_free.popitem(last=False)
+            self._unregister(blk)
+            self.cache_evictions += 1
+            self.blocks_allocated += 1
+            return blk
+        raise OutOfBlocksError("pool exhausted")
+
+    def _unregister(self, blk: int) -> None:
+        key = self._hash_of.pop(blk, None)
+        if key is not None and self._block_of.get(key) == blk:
+            del self._block_of[key]
+
+    def _decref(self, blk: int) -> None:
+        if blk not in self._ref:
+            raise RuntimeError(f"double free of block {blk}")
+        self._ref[blk] -= 1
+        if self._ref[blk] == 0:
+            del self._ref[blk]
+            if blk in self._hash_of:      # keep content for prefix reuse
+                self._cached_free[blk] = None
+            else:
+                self._free.append(blk)
 
     # -- lifecycle ----------------------------------------------------------
     def allocate(self, req_id: int, num_tokens: int) -> List[int]:
         assert req_id not in self._tables, req_id
         n = max(1, -(-num_tokens // self.block_size))
-        if len(self._free) < n:
-            raise OutOfBlocksError(f"need {n} blocks, have {len(self._free)}")
-        blocks = [self._free.pop() for _ in range(n)]
+        if self.num_free < n:
+            raise OutOfBlocksError(f"need {n} blocks, have {self.num_free}")
+        blocks = [self._pop_block() for _ in range(n)]
+        for b in blocks:
+            self._ref[b] = 1
         self._tables[req_id] = blocks
         self._lens[req_id] = num_tokens
         return blocks
 
-    def reserve_slot(self, req_id: int) -> Tuple[int, int]:
-        """Ensure a block exists for the NEXT token; return (block, offset).
+    def allocate_prefix(self, req_id: int, tokens: np.ndarray) -> int:
+        """Admit ``req_id`` reusing cached prefix blocks; return #cached tokens.
 
-        Does not advance the sequence — call :meth:`commit_token` after the
-        decode step has written the KV entry.
+        Every leading *full* block of ``tokens`` whose chained content hash is
+        in the prefix cache is adopted (refcount bump) instead of allocated.
+        The sequence length starts at the cached token count, so prefill can
+        skip straight to the first uncached token. At least one token is
+        always left to recompute (a fully-cached prompt still needs its final
+        logits), which makes the last shared block copy-on-write on first
+        append.
         """
-        pos = self._lens[req_id]
-        need = pos // self.block_size + 1
-        while len(self._tables[req_id]) < need:
-            if not self._free:
-                raise OutOfBlocksError("pool exhausted")
-            self._tables[req_id].append(self._free.pop())
-        blk = self._tables[req_id][pos // self.block_size]
-        return blk, pos % self.block_size
+        assert req_id not in self._tables, req_id
+        bs = self.block_size
+        blocks: List[int] = []
+        cached = 0
+        full = len(tokens) // bs
+        for i in range(full):
+            blk = self._block_of.get(_prefix_key(tokens, (i + 1) * bs))
+            if blk is None:
+                break
+            if blk in self._cached_free:
+                del self._cached_free[blk]
+                self._ref[blk] = 1
+            else:
+                self._ref[blk] += 1
+            blocks.append(blk)
+            cached += bs
+            self.prefix_hits += 1
+        self.prefix_misses += full - len(blocks)
+        if not blocks:                      # cold start: behave like allocate
+            blk = self._pop_block()
+            self._ref[blk] = 1
+            blocks.append(blk)
+        self._tables[req_id] = blocks
+        cached = min(cached, max(len(tokens) - 1, 0))
+        self._lens[req_id] = cached
+        return cached
+
+    def peek_prefix(self, tokens: np.ndarray) -> int:
+        """#tokens a prompt would get from the cache, without mutating it."""
+        bs = self.block_size
+        cached = 0
+        for i in range(len(tokens) // bs):
+            if _prefix_key(tokens, (i + 1) * bs) not in self._block_of:
+                break
+            cached += bs
+        return min(cached, max(len(tokens) - 1, 0))
+
+    def register_prefix(self, req_id: int, tokens: np.ndarray,
+                        num_valid: int, start: int = 0) -> None:
+        """Publish content hashes for full blocks covered by committed KV.
+
+        ``tokens[:num_valid]`` must have their KV written to the request's
+        blocks; ``start`` (a token count) skips blocks published by earlier
+        calls so incremental prefill commits hash each block once.
+        Shared-safe: an existing hash entry is never overwritten.
+        """
+        bs = self.block_size
+        table = self._tables[req_id]
+        for i in range(start // bs, num_valid // bs):
+            blk = table[i]
+            if blk in self._hash_of:
+                continue
+            key = _prefix_key(tokens, (i + 1) * bs)
+            if key in self._block_of:       # identical content already cached
+                continue
+            self._hash_of[blk] = key
+            self._block_of[key] = blk
+
+    def reserve_tokens(self, req_id: int, n: int) -> np.ndarray:
+        """Reserve write slots for the next ``n`` tokens; returns (n, 2).
+
+        Grows the block table on demand and performs copy-on-write for any
+        target block shared with another request (the (src, dst) pair lands
+        in :attr:`pending_copies` — apply with :func:`copy_pool_blocks`
+        before the step). Does not advance the sequence: call
+        :meth:`commit_tokens` once the KV entries are written.
+        """
+        pos0 = self._lens[req_id]
+        table = self._tables[req_id]
+        out = np.zeros((n, 2), np.int32)
+        for j in range(n):
+            pos = pos0 + j
+            bi = pos // self.block_size
+            if bi == len(table):
+                blk = self._pop_block()
+                self._ref[blk] = 1
+                table.append(blk)
+            blk = table[bi]
+            if self._ref[blk] > 1:          # shared: copy-on-write
+                new = self._pop_block()
+                self._ref[new] = 1
+                self._ref[blk] -= 1
+                table[bi] = new
+                self.pending_copies.append((blk, new))
+                self.cow_copies += 1
+                blk = new
+            elif blk in self._hash_of:      # private but published: invalidate
+                self._unregister(blk)
+            out[j] = (blk, pos % self.block_size)
+        return out
+
+    def commit_tokens(self, req_id: int, n: int) -> None:
+        self._lens[req_id] += n
+
+    def drain_copies(self) -> List[Tuple[int, int]]:
+        copies, self.pending_copies = self.pending_copies, []
+        return copies
+
+    # Single-token conveniences (legacy API, used by tests/benchmarks).
+    def reserve_slot(self, req_id: int) -> Tuple[int, int]:
+        blk, off = self.reserve_tokens(req_id, 1)[0]
+        return int(blk), int(off)
 
     def commit_token(self, req_id: int) -> None:
-        self._lens[req_id] += 1
+        self.commit_tokens(req_id, 1)
 
     def append_token(self, req_id: int) -> Tuple[int, int]:
         """reserve + commit in one call (single-step convenience)."""
@@ -74,13 +244,39 @@ class BlockAllocator:
         self.commit_token(req_id)
         return slot
 
+    def rewind(self, req_id: int, n: int = 1) -> None:
+        """Public rollback: drop the last ``n`` committed tokens.
+
+        Trailing blocks no longer covered are released (decref — shared
+        blocks survive for their other holders). The next
+        :meth:`reserve_tokens` re-reserves the rewound positions, with
+        copy-on-write if the block is still shared.
+        """
+        self.truncate(req_id, max(self._lens[req_id] - n, 0))
+
+    def truncate(self, req_id: int, new_len: int) -> None:
+        """Public truncation: keep only the first ``new_len`` tokens."""
+        assert 0 <= new_len <= self._lens[req_id], (new_len, self._lens[req_id])
+        table = self._tables[req_id]
+        keep = max(1, -(-new_len // self.block_size))
+        while len(table) > keep:
+            self._decref(table.pop())
+        self._lens[req_id] = new_len
+
     def free(self, req_id: int) -> None:
-        self._free.extend(reversed(self._tables.pop(req_id)))
+        if req_id not in self._tables:
+            raise KeyError(f"free of unknown request {req_id} (double free?)")
+        for blk in self._tables.pop(req_id):
+            self._decref(blk)
         del self._lens[req_id]
 
     @property
     def num_free(self) -> int:
-        return len(self._free)
+        """Allocatable blocks: truly free + evictable cached-free."""
+        return len(self._free) + len(self._cached_free)
+
+    def ref_count(self, block: int) -> int:
+        return self._ref.get(block, 0)
 
     def seq_len(self, req_id: int) -> int:
         return self._lens[req_id]
@@ -168,7 +364,7 @@ class BlockAllocator:
         """
         out = np.zeros((len(req_ids), 2), np.int32)
         for i, r in enumerate(req_ids):
-            out[i] = self.reserve_slot(r)
+            out[i] = self.reserve_tokens(r, 1)[0]
         return out
 
 
@@ -190,6 +386,14 @@ def append_to_pool(pool_layer, kv_new, slots):
     """
     return pool_layer.at[slots[:, 0], slots[:, 1]].set(
         kv_new.astype(pool_layer.dtype), mode="drop")
+
+
+def copy_pool_blocks(pool, srcs, dsts):
+    """Copy whole blocks across the layer-stacked pool (copy-on-write).
+
+    pool (L, NB, BS, KV, HD); srcs/dsts (n,) block indices.
+    """
+    return pool.at[:, dsts].set(pool[:, srcs])
 
 
 def gather_prefill_into_pool(pool_layer, k_seq, block_table, seq_len: int,

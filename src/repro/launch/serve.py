@@ -49,7 +49,11 @@ def main() -> None:
     m = engine.metrics()
     print(f"served {m['finished']} requests, {m['output_tokens']} tokens "
           f"in {dt:.2f}s ({m['output_tokens']/dt:.1f} tok/s)")
-    print(f"TTFT {m['mean_ttft_s']*1e3:.1f} ms  TPOT {m['mean_tpot_s']*1e3:.1f} ms")
+    print(f"TTFT p50 {m['p50_ttft_s']*1e3:.1f} / p99 {m['p99_ttft_s']*1e3:.1f} ms  "
+          f"TPOT p50 {m['p50_tpot_s']*1e3:.1f} / p99 {m['p99_tpot_s']*1e3:.1f} ms")
+    print(f"preemptions {m['preemptions']}  "
+          f"prefix hit rate {m['prefix_hit_rate']:.2f}  "
+          f"cow copies {m['cow_copies']}")
 
 
 if __name__ == "__main__":

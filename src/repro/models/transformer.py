@@ -10,6 +10,8 @@ Functional API:
   init_decode_cache(batch, max_seq)        -> contiguous cache pytree
   decode_step(params, cache, tokens)       -> (logits, cache)       [pjit path]
   decode_step_paged(params, pools, lists…) -> (logits, pools)       [paper path]
+  decode_tokens_paged(params, pools, …)    -> (logits, pools)  [chunked prefill
+                                               + decode fused in one program]
 """
 from __future__ import annotations
 
@@ -267,6 +269,63 @@ class TransformerLM:
                                              pools["v"]))
         x = rmsnorm(params["final_norm"], x[:, None], cfg.norm_eps)
         logits = unembed(params.get("head", params["embed"]), x)[:, 0]
+        return logits, {"k": pk, "v": pv}
+
+    def decode_tokens_paged(self, params, pools, lists, tokens):
+        """Fused chunked-prefill + decode over flat token lanes.
+
+        The serving engine's single compiled program: each lane of ``tokens``
+        (T,) is one token of some request — a decode token (one lane per
+        decoding request) or one token of a prompt chunk (several lanes per
+        prefilling request). Per layer the lane KV is appended to the paged
+        pool, then every lane attends causally to its request's blocks
+        (:func:`attention_api.paged_attention_chunked`).
+
+        lists:
+          block_list/block_req/block_pos   flat BlockList keyed by slot id
+          kv_lens   (B,)  valid KV per slot after this step's append
+          token_req (T,)  owning slot of each lane (>= B ⇒ padding lane)
+          token_pos (T,)  absolute position of each lane's token
+          slots     (T, 2) pool (block, offset) where each lane's KV lands
+          last_lane (B,)  lane index holding each slot's last valid token
+
+        Returns (logits (B, V) at each slot's ``last_lane``, new pools).
+        """
+        cfg = self.cfg
+        a = cfg.attention
+        token_pos = lists["token_pos"]
+        x = embed(params["embed"], tokens)                 # (T, D)
+
+        def body(x, inp):
+            lp, pk, pv = inp
+            h = rmsnorm(lp["ln1"], x[:, None], cfg.norm_eps)
+            q, k_new, v_new = attn_lib.project_qkv(lp["attn"], h, a,
+                                                   token_pos[:, None])
+            # Padding lanes carry out-of-bounds slots -> scatter drops them.
+            pk = paged_kv.append_to_pool(pk, k_new[:, 0], lists["slots"])
+            pv = paged_kv.append_to_pool(pv, v_new[:, 0], lists["slots"])
+            ctx = attention_api.paged_attention_chunked(
+                q[:, 0], pk, pv, lists["block_list"], lists["block_req"],
+                lists["block_pos"], lists["kv_lens"], lists["token_req"],
+                token_pos)
+            x = x + jnp.einsum("be,ed->bd", ctx.reshape(x.shape[0], -1),
+                               lp["attn"]["wo"])
+            h = rmsnorm(lp["ln2"], x[:, None], cfg.norm_eps)
+            if cfg.moe is not None:
+                o, _ = moe_lib.moe_apply(lp["moe"], h, cfg.moe,
+                                         shard=self.shard_moe,
+                                         full_capacity=True,
+                                         groups=self.moe_groups)
+            else:
+                o = mlp_apply(lp["mlp"], h, cfg.act)
+            return x + o[:, 0], (pk, pv)
+
+        x, (pk, pv) = jax.lax.scan(body, x, (params["layers"], pools["k"],
+                                             pools["v"]))
+        # Unembed only each slot's last valid lane: (B, D) -> (B, V).
+        x_last = jnp.take(x, lists["last_lane"], axis=0)
+        x_last = rmsnorm(params["final_norm"], x_last[:, None], cfg.norm_eps)
+        logits = unembed(params.get("head", params["embed"]), x_last)[:, 0]
         return logits, {"k": pk, "v": pv}
 
     # ---------------------------------------------------------------- loss

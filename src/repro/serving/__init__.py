@@ -1,2 +1,4 @@
+from repro.serving.request import (  # noqa: F401
+    Request, RequestState, SamplingParams)
 from repro.serving.steps import (  # noqa: F401
     jit_prefill_step, jit_serve_step, make_prefill_step, make_serve_step)

@@ -1,24 +1,39 @@
-"""Continuous-batching serving engine over the paged KV cache.
+"""Scheduler-driven serving engine over the paged KV cache.
 
-The runtime realization of the paper's §4.2 vLLM case study:
-  * requests arrive with a prompt; the scheduler admits them when the
-    BlockAllocator has room (paged, on-demand — no pre-allocation);
-  * every engine step runs ONE fused decode for all active requests through
-    ``decode_step_paged`` with the flat **BlockList** — the paper's
-    optimization, end-to-end;
-  * slot-stable batching: the decode program is compiled ONCE for
-    (max_batch, max_total_blocks); requests map onto fixed slots, inactive
-    slots carry zero-length sequences (dropped by the segment ops) — no
-    retrace, no recompile, exactly vLLM's persistent-batch trick;
-  * prefill is a single teacher-forced forward whose per-layer K/V are
-    scattered into the request's pool blocks in bulk (block-aligned pad);
-  * finished requests free their blocks immediately (dynamic reuse);
-  * TTFT / TPOT per request (paper Fig 17e metrics).
+The runtime realization of the paper's §4.2 vLLM case study, split into the
+three layers of a production serving stack:
+
+  * ``repro.serving.request``   — per-request state machine (WAITING ->
+    PREFILLING -> DECODING -> PREEMPTED -> FINISHED) + sampling params;
+  * ``repro.serving.scheduler`` — admission (FCFS, prefix-cache aware),
+    chunked-prefill token budgeting, preemption under block pressure;
+  * this module                 — the jit'd step driver: it renders each
+    :class:`StepPlan` into ONE fused device program
+    (``model.decode_tokens_paged`` + batched per-request sampling).
+
+Step anatomy (the paper's BlockList optimization, end-to-end):
+
+  * every step runs a single fused program over flat token lanes: one lane
+    per decoding request plus up to ``token_budget`` prompt-chunk lanes from
+    prefilling requests — chunked prefill never stalls the decode batch and
+    there is no separate prefill program;
+  * lane counts are bucketed to powers of two, so the engine compiles
+    O(log max_tokens) programs total (slot-stable shapes everywhere else:
+    block lists are padded to the pool size, sampling inputs to max_batch);
+  * prompt prefixes shared across requests reuse pool blocks via the
+    allocator's prefix cache (refcounted, copy-on-write on append) — a
+    shared-prefix workload allocates strictly fewer blocks than independent
+    prompts and skips recomputing the shared KV;
+  * under block pressure the scheduler preempts the latest-arrived request
+    (recompute-style: its blocks are freed, generation state survives);
+  * finished requests free their blocks immediately; hashed blocks are
+    parked in the cached-free LRU for future prefix hits;
+  * TTFT / TPOT percentiles, throughput, preemption and prefix-hit counters
+    via ``repro.serving.metrics`` (paper Fig 17e metrics).
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import jax
@@ -27,36 +42,27 @@ import numpy as np
 
 from repro.config import ModelConfig, ServeConfig
 from repro.core.paged_kv import (
-    BlockAllocator, gather_prefill_into_pool, make_pool)
+    BlockAllocator, copy_pool_blocks, make_pool)
+from repro.serving import sampling as sampling_lib
+from repro.serving.metrics import EngineMetrics
+from repro.serving.request import Request, RequestState, SamplingParams
+from repro.serving.scheduler import Scheduler, StepPlan
+
+__all__ = ["Request", "RequestState", "SamplingParams", "ServingEngine"]
 
 
-@dataclass
-class Request:
-    req_id: int
-    prompt: np.ndarray                  # (prompt_len,) int32
-    max_new_tokens: int
-    arrival: float = field(default_factory=time.time)
-    first_token_at: Optional[float] = None
-    done_at: Optional[float] = None
-    output: List[int] = field(default_factory=list)
-    slot: int = -1
-
-    @property
-    def ttft(self) -> Optional[float]:
-        return (self.first_token_at - self.arrival
-                if self.first_token_at else None)
-
-    @property
-    def tpot(self) -> Optional[float]:
-        if self.done_at is None or self.first_token_at is None:
-            return None
-        n = max(len(self.output) - 1, 1)
-        return (self.done_at - self.first_token_at) / n
+def _bucket(n: int, lo: int = 8) -> int:
+    """Round lane count up to a power of two (bounded jit-cache growth)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
 
 
 class ServingEngine:
     def __init__(self, model, params, cfg: ModelConfig, serve: ServeConfig,
-                 *, num_blocks: Optional[int] = None, eos_id: int = -1):
+                 *, num_blocks: Optional[int] = None, eos_id: int = -1,
+                 token_budget: Optional[int] = None, seed: int = 0):
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -69,88 +75,108 @@ class ServingEngine:
         pk, pv = make_pool(cfg.num_layers, nb, bs, a.num_kv_heads, a.head_dim,
                            jnp.dtype(cfg.dtype))
         self.pools = {"k": pk, "v": pv}
-        self.waiting: List[Request] = []
-        self.active: Dict[int, Request] = {}
-        self.finished: List[Request] = []
         self.B = serve.max_batch
         self.max_total = nb
-        self._free_slots = list(range(self.B - 1, -1, -1))
-        self._decode = jax.jit(model.decode_step_paged)
-        self._prefill_fwd = jax.jit(
-            lambda p, t: model.forward(p, t, return_kv=True, last_only=True))
+        self.scheduler = Scheduler(
+            self.alloc, max_batch=self.B,
+            token_budget=token_budget or serve.prefill_chunk)
+        self._free_slots = self.scheduler.free_slots    # shared list object
+        self.finished: List[Request] = []
+        self._metrics = EngineMetrics()
+        self._key = jax.random.PRNGKey(seed)
+        self._step_count = 0
 
-    # ------------------------------------------------------------- lifecycle
+        def fused(params, pools, lists, tokens, key, temps, top_ks, top_ps):
+            logits, pools = model.decode_tokens_paged(params, pools, lists,
+                                                      tokens)
+            nxt = sampling_lib.sample_batched(key, logits, temps, top_ks,
+                                              top_ps)
+            return nxt, pools
+
+        self._step_fn = jax.jit(fused)
+
+    # -------------------------------------------------------------- lifecycle
     def submit(self, req: Request) -> None:
-        self.waiting.append(req)
-
-    def _try_admit(self) -> None:
-        admitted = []
-        for req in self.waiting:
-            need = -(-len(req.prompt) // self.alloc.block_size) + 1
-            if not self._free_slots or self.alloc.num_free < need:
-                break  # FCFS
-            req.slot = self._free_slots.pop()
-            self.alloc.allocate(req.req_id, len(req.prompt))
-            self._bulk_prefill(req)
-            self.active[req.req_id] = req
-            admitted.append(req)
-        for req in admitted:
-            self.waiting.remove(req)
-
-    def _bulk_prefill(self, req: Request) -> None:
-        """One forward pass; scatter per-layer K/V into the pool blocks."""
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.req_id}: empty prompt")
+        # KV is written for the prompt and all generated tokens except the
+        # last (sampling it finishes the request before its KV lands); the
+        # scheduler additionally wants one slack block at admission.
         bs = self.alloc.block_size
-        P = len(req.prompt)
-        S_pad = -(-P // bs) * bs
-        toks = np.zeros((1, S_pad), np.int32)
-        toks[0, :P] = req.prompt
-        logits, _, kvs = self._prefill_fwd(self.params, jnp.asarray(toks))
-        # NOTE: last_only logits are at padded pos -1; recompute next token
-        # from position P-1 via the decode path would cost a step — instead
-        # prefill uses exact-length last position: take logits of pos P-1
-        # by re-running unembed is avoided: we pad on the RIGHT, so use the
-        # stacked kvs (valid for :P) and compute the first token by a decode
-        # step over the cached prompt (standard chunked-prefill handoff).
-        k_seq, v_seq = kvs                      # (L, 1, S_pad, KV, HD)
-        table = np.asarray(self.alloc.table(req.req_id), np.int32)[None]
-        pk, pv = self.pools["k"], self.pools["v"]
-        scatter = jax.vmap(
-            lambda pool_l, seq_l: gather_prefill_into_pool(
-                pool_l, seq_l, jnp.asarray(table), S_pad, bs))
-        self.pools = {"k": scatter(pk, k_seq), "v": scatter(pv, v_seq)}
-        # overwrite allocator length to the true prompt length
-        self.alloc._lens[req.req_id] = P
-        # first output token via one decode step on this request alone
-        nxt = self._single_decode(req, int(req.prompt[-1]))
-        req.first_token_at = time.time()
-        req.output.append(nxt)
+        positions = len(req.prompt) + max(req.max_new_tokens - 1, 0)
+        worst = max(-(-positions // bs), -(-len(req.prompt) // bs) + 1)
+        if worst > self.alloc.num_blocks:
+            raise ValueError(
+                f"request {req.req_id} can never fit: needs up to {worst} "
+                f"blocks, pool has {self.alloc.num_blocks}")
+        self.scheduler.submit(req)
 
-    def _single_decode(self, req: Request, token: int) -> int:
-        """Used only at the prefill→decode handoff (batch of 1 slot)."""
-        # rewind length by one so the last prompt token is 're-decoded'
-        self.alloc._lens[req.req_id] -= 1
-        lists, tokens = self._build_lists({req.req_id: req}, {req.req_id: token})
-        logits, self.pools = self._decode(self.params, self.pools, lists,
-                                          tokens)
-        self.alloc.commit_token(req.req_id)
-        return int(jnp.argmax(logits[req.slot]))
+    @property
+    def waiting(self) -> List[Request]:
+        return list(self.scheduler.waiting)
 
-    def _build_lists(self, reqs: Dict[int, Request],
-                     tokens_by_rid: Dict[int, int]):
-        B = self.B
-        slots = np.full((B, 2), [self.alloc.num_blocks, 0], np.int32)
-        seq_lens = np.zeros((B,), np.int32)
-        tokens = np.zeros((B,), np.int32)
-        bl = np.zeros((self.max_total,), np.int32)
-        br = np.full((self.max_total,), B, np.int32)
-        bp = np.zeros((self.max_total,), np.int32)
+    @property
+    def active(self) -> Dict[int, Request]:
+        return self.scheduler.running
+
+    # ------------------------------------------------------------- step build
+    def _render(self, plan: StepPlan):
+        """Render a StepPlan into the fused program's input arrays."""
+        alloc, B = self.alloc, self.B
+        T = _bucket(plan.num_tokens)
+        tokens = np.zeros((T,), np.int32)
+        token_req = np.full((T,), B, np.int32)          # B == padding lane
+        token_pos = np.zeros((T,), np.int32)
+        slots = np.full((T, 2), (self.max_total, 0), np.int32)  # dropped write
+        last_lane = np.zeros((B,), np.int32)
+        kv_lens = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        top_ks = np.zeros((B,), np.int32)
+        top_ps = np.ones((B,), np.float32)
+        lane = 0
+        committed: List[tuple] = []                     # (req, n_tokens)
+        for req in plan.decode:
+            rid = req.req_id
+            pos = alloc.seq_len(rid)
+            s = alloc.reserve_tokens(rid, 1)
+            tokens[lane] = req.output[-1]
+            token_req[lane] = req.slot
+            token_pos[lane] = pos
+            slots[lane] = s[0]
+            last_lane[req.slot] = lane
+            kv_lens[req.slot] = pos + 1
+            lane += 1
+            committed.append((req, 1))
+        for req, n in plan.prefill:
+            rid = req.req_id
+            pos0 = alloc.seq_len(rid)
+            ss = alloc.reserve_tokens(rid, n)
+            chunk = req.active_prompt[pos0:pos0 + n]
+            tokens[lane:lane + n] = chunk
+            token_req[lane:lane + n] = req.slot
+            token_pos[lane:lane + n] = pos0 + np.arange(n)
+            slots[lane:lane + n] = ss
+            last_lane[req.slot] = lane + n - 1
+            kv_lens[req.slot] = pos0 + n
+            lane += n
+            committed.append((req, n))
+        for req, _ in committed:
+            temps[req.slot] = req.sampling.temperature
+            top_ks[req.slot] = req.sampling.top_k
+            top_ps[req.slot] = req.sampling.top_p
+        # Block lists AFTER reservations (tables may have grown / CoW'd).
+        # A prefix-shared block is effectual for EVERY holder, so the entry
+        # count can exceed the pool size — bucket the capacity like T.
+        tables = {req.req_id: alloc.table(req.req_id) for req, _ in committed}
+        needed = sum(len(t) for t in tables.values())
+        cap = (self.max_total if needed <= self.max_total
+               else _bucket(needed, lo=self.max_total))
+        bl = np.zeros((cap,), np.int32)
+        br = np.full((cap,), B, np.int32)
+        bp = np.zeros((cap,), np.int32)
         cursor = 0
-        for rid, req in sorted(reqs.items()):
-            blk, off = self.alloc.reserve_slot(rid)
-            slots[req.slot] = (blk, off)
-            seq_lens[req.slot] = self.alloc.seq_len(rid)
-            tokens[req.slot] = tokens_by_rid[rid]
-            table = self.alloc.table(rid)
+        for req, _ in committed:
+            table = tables[req.req_id]
             n = len(table)
             bl[cursor:cursor + n] = table
             br[cursor:cursor + n] = req.slot
@@ -158,53 +184,84 @@ class ServingEngine:
             cursor += n
         lists = {
             "block_list": jnp.asarray(bl), "block_req": jnp.asarray(br),
-            "block_pos": jnp.asarray(bp), "seq_lens": jnp.asarray(seq_lens),
+            "block_pos": jnp.asarray(bp), "kv_lens": jnp.asarray(kv_lens),
+            "token_req": jnp.asarray(token_req),
+            "token_pos": jnp.asarray(token_pos),
             "slots": jnp.asarray(slots),
+            "last_lane": jnp.asarray(last_lane),
         }
-        return lists, jnp.asarray(tokens)
+        sample_args = (jnp.asarray(temps), jnp.asarray(top_ks),
+                       jnp.asarray(top_ps))
+        return lists, jnp.asarray(tokens), sample_args, committed
 
-    # ------------------------------------------------------------- main loop
+    # -------------------------------------------------------------- main loop
     def step(self) -> int:
-        """One engine iteration: admit + fused batched decode."""
-        self._try_admit()
-        if not self.active:
+        """One engine iteration: schedule + ONE fused chunked-prefill/decode
+        program + host-side lifecycle updates. Returns #tokens processed."""
+        plan = self.scheduler.schedule()
+        if plan.num_tokens == 0:
             return 0
-        toks = {rid: r.output[-1] for rid, r in self.active.items()}
-        lists, tokens = self._build_lists(self.active, toks)
-        logits, self.pools = self._decode(self.params, self.pools, lists,
-                                          tokens)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        lists, tokens, sample_args, committed = self._render(plan)
+        # apply copy-on-write block copies before the step touches the pool
+        copies = self.alloc.drain_copies()
+        if copies:
+            srcs = jnp.asarray([s for s, _ in copies], jnp.int32)
+            dsts = jnp.asarray([d for _, d in copies], jnp.int32)
+            self.pools = {k: copy_pool_blocks(p, srcs, dsts)
+                          for k, p in self.pools.items()}
+        self._step_count += 1
+        key = jax.random.fold_in(self._key, self._step_count)
+        nxt, self.pools = self._step_fn(self.params, self.pools, lists,
+                                        tokens, key, *sample_args)
+        nxt = np.asarray(nxt)
         now = time.time()
-        stepped = len(self.active)
-        for rid in list(self.active):
-            req = self.active[rid]
-            self.alloc.commit_token(rid)
-            tok = int(nxt[req.slot])
-            req.output.append(tok)
-            if (len(req.output) >= req.max_new_tokens or tok == self.eos_id):
-                req.done_at = now
-                self.alloc.free(rid)
-                self._free_slots.append(req.slot)
-                del self.active[rid]
-                self.finished.append(req)
-        return stepped
+        for req, n in committed:
+            self.alloc.commit_tokens(req.req_id, n)
+        for req, n in committed:
+            if req.state is RequestState.DECODING:
+                self._append_token(req, int(nxt[req.slot]), now)
+            else:                                       # prefill chunk
+                start = req.prefill_pos
+                req.prefill_pos += n
+                self.alloc.register_prefix(req.req_id, req.active_prompt,
+                                           req.prefill_pos, start=start)
+                if req.prefill_remaining == 0:
+                    req.to_state(RequestState.DECODING)
+                    if req.first_token_at is None:
+                        req.first_token_at = now
+                    self._append_token(req, int(nxt[req.slot]), now)
+        return plan.num_tokens
+
+    def _append_token(self, req: Request, tok: int, now: float) -> None:
+        req.output.append(tok)
+        if len(req.output) >= req.max_new_tokens or tok == self.eos_id:
+            self._finish(req, now)
+
+    def _finish(self, req: Request, now: float) -> None:
+        self.scheduler.release(req)
+        req.finish(now)
+        self.finished.append(req)
+        self._metrics.record_finished(
+            ttft=req.ttft, tpot=req.tpot, num_output_tokens=len(req.output),
+            arrival=req.arrival, done_at=now)
 
     def run_until_done(self, max_steps: int = 100_000) -> None:
         for _ in range(max_steps):
-            if not self.waiting and not self.active:
+            if not self.scheduler.has_work():
                 return
             self.step()
         raise RuntimeError("serving did not converge")
 
     # --------------------------------------------------------------- metrics
     def metrics(self) -> Dict[str, float]:
-        ttfts = [r.ttft for r in self.finished if r.ttft is not None]
-        tpots = [r.tpot for r in self.finished if r.tpot is not None]
-        toks = sum(len(r.output) for r in self.finished)
-        return {
-            "finished": len(self.finished),
-            "output_tokens": toks,
-            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
-            "mean_tpot_s": float(np.mean(tpots)) if tpots else 0.0,
+        m = self._metrics.summary()
+        hits, misses = self.alloc.prefix_hits, self.alloc.prefix_misses
+        m.update({
             "blocks_free": self.alloc.num_free,
-        }
+            "preemptions": self.scheduler.num_preemptions,
+            "prefix_hits": hits,
+            "prefix_misses": misses,
+            "prefix_hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+            "cow_copies": self.alloc.cow_copies,
+        })
+        return m

@@ -1,10 +1,12 @@
 """Serving SLO metrics: streaming percentile tracker for TTFT/TPOT
-(paper Fig 17e's axes) without storing every sample."""
+(paper Fig 17e's axes) without storing every sample, plus the engine-level
+aggregate (:class:`EngineMetrics`) covering the scheduler-driven lifecycle:
+latency percentiles, throughput, preemption and prefix-cache counters."""
 from __future__ import annotations
 
 import bisect
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 
 @dataclass
@@ -17,10 +19,12 @@ class LatencyTracker:
         bisect.insort(self.samples, v)
 
     def percentile(self, p: float) -> float:
+        """Nearest-rank percentile: smallest sample with rank >= ceil(pn)."""
         if not self.samples:
             return 0.0
-        i = min(int(p / 100.0 * len(self.samples)), len(self.samples) - 1)
-        return self.samples[i]
+        n = len(self.samples)
+        i = max(-(-int(p * n) // 100) - 1, 0)     # ceil(p/100 * n) - 1
+        return self.samples[min(i, n - 1)]
 
     @property
     def mean(self) -> float:
@@ -30,3 +34,55 @@ class LatencyTracker:
         return {"mean": self.mean, "p50": self.percentile(50),
                 "p90": self.percentile(90), "p99": self.percentile(99),
                 "n": float(len(self.samples))}
+
+
+@dataclass
+class EngineMetrics:
+    """Rollup for one serving-engine run.
+
+    The engine records each finished request here; ``summary`` flattens to
+    the dict exposed by ``ServingEngine.metrics()``. Wall-clock spans from
+    the first recorded request's arrival to the last finish, so tokens/sec
+    reflects the whole run, not just decode steps.
+    """
+
+    ttft: LatencyTracker = field(default_factory=LatencyTracker)
+    tpot: LatencyTracker = field(default_factory=LatencyTracker)
+    finished: int = 0
+    output_tokens: int = 0
+    first_arrival: Optional[float] = None
+    last_done: Optional[float] = None
+
+    def record_finished(self, *, ttft: Optional[float],
+                        tpot: Optional[float], num_output_tokens: int,
+                        arrival: float, done_at: float) -> None:
+        if ttft is not None:
+            self.ttft.record(ttft)
+        if tpot is not None:
+            self.tpot.record(tpot)
+        self.finished += 1
+        self.output_tokens += num_output_tokens
+        self.first_arrival = (arrival if self.first_arrival is None
+                              else min(self.first_arrival, arrival))
+        self.last_done = (done_at if self.last_done is None
+                          else max(self.last_done, done_at))
+
+    @property
+    def elapsed_s(self) -> float:
+        if self.first_arrival is None or self.last_done is None:
+            return 0.0
+        return max(self.last_done - self.first_arrival, 0.0)
+
+    def summary(self) -> Dict[str, float]:
+        dt = self.elapsed_s
+        return {
+            "finished": self.finished,
+            "output_tokens": self.output_tokens,
+            "mean_ttft_s": self.ttft.mean,
+            "p50_ttft_s": self.ttft.percentile(50),
+            "p99_ttft_s": self.ttft.percentile(99),
+            "mean_tpot_s": self.tpot.mean,
+            "p50_tpot_s": self.tpot.percentile(50),
+            "p99_tpot_s": self.tpot.percentile(99),
+            "throughput_tok_s": self.output_tokens / dt if dt > 0 else 0.0,
+        }

@@ -1,4 +1,11 @@
-"""Token sampling: greedy / temperature / top-k / top-p (jit-safe)."""
+"""Token sampling: greedy / temperature / top-k / top-p (jit-safe).
+
+:func:`sample` takes scalar (compile-time) knobs — the single-policy path.
+:func:`sample_batched` takes PER-REQUEST knobs as arrays, so one compiled
+program serves a batch mixing greedy and stochastic requests (the serving
+engine's pluggable-sampling path): lanes with ``temperature <= 0`` reduce to
+argmax; ``top_k <= 0`` / ``top_p >= 1`` disable the respective filters.
+"""
 from __future__ import annotations
 
 import jax
@@ -27,3 +34,35 @@ def sample(key, logits, *, temperature: float = 1.0, top_k: int = 0,
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_batched(key, logits, temperatures, top_ks, top_ps):
+    """Per-request sampling under ONE jit: logits (B, V) -> tokens (B,).
+
+    temperatures / top_ps are float (B,), top_ks int (B,). All knobs are
+    traced values (not static), so heterogeneous batches share a compiled
+    program — no retrace when the request mix changes.
+    """
+    B, V = logits.shape
+    keys = jax.random.split(key, B)
+
+    def one(k, lg, temp, kk, pp):
+        lg32 = lg.astype(jnp.float32)
+        scaled = lg32 / jnp.maximum(temp, 1e-6)
+        sorted_desc = jnp.sort(scaled)[::-1]
+        # top-k: keep logits >= the kth largest (kk <= 0 disables)
+        kth = jnp.where(kk > 0,
+                        sorted_desc[jnp.clip(kk, 1, V) - 1], -jnp.inf)
+        masked = jnp.where(scaled < kth, -jnp.inf, scaled)
+        # top-p AFTER top-k (same order as :func:`sample`): smallest prefix
+        # of the surviving probs with mass >= pp
+        sorted_m = jnp.sort(masked)[::-1]
+        probs = jax.nn.softmax(sorted_m)
+        cum = jnp.cumsum(probs)
+        cutoff_idx = jnp.sum(cum < pp)
+        cutoff = sorted_m[jnp.clip(cutoff_idx, 0, V - 1)]
+        masked = jnp.where(masked < cutoff, -jnp.inf, masked)
+        tok = jax.random.categorical(k, masked)
+        return jnp.where(temp <= 0.0, jnp.argmax(lg32), tok).astype(jnp.int32)
+
+    return jax.vmap(one)(keys, logits, temperatures, top_ks, top_ps)

@@ -1,0 +1,169 @@
+"""Serving scheduler: admission, chunked-prefill budgeting, preemption.
+
+The policy half of the serving stack (the engine is the mechanism half —
+it renders the scheduler's :class:`StepPlan` into one fused device step).
+
+Per engine step the scheduler:
+
+  1. **Admits** waiting requests FCFS while a batch slot is free and the
+     allocator can hold the whole prompt (prefix-cached blocks are adopted
+     at admission and don't count against free space).
+  2. **Budgets prefill**: every DECODING request always gets its one decode
+     lane; PREFILLING requests share a per-step token budget
+     (``token_budget``, vLLM's ``max_num_batched_tokens`` analogue) so long
+     prompts are chunked across steps instead of stalling the decode batch.
+  3. **Preempts under block pressure**: if the step's block demand (new
+     decode blocks + prefill-chunk blocks + copy-on-write copies) exceeds
+     the pool, the latest-arrived running request is evicted — its blocks
+     are released and it re-queues at the FRONT of the wait queue for
+     recompute-style resume (see ``repro.serving.request``).
+
+The scheduler owns the request queues and the slot free-list; it never
+touches device state.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.core.paged_kv import BlockAllocator, OutOfBlocksError
+from repro.serving.request import Request, RequestState
+
+
+@dataclass
+class StepPlan:
+    """What the engine should run this step."""
+
+    decode: List[Request] = field(default_factory=list)
+    prefill: List[Tuple[Request, int]] = field(default_factory=list)  # (req, n)
+
+    @property
+    def num_tokens(self) -> int:
+        return len(self.decode) + sum(n for _, n in self.prefill)
+
+
+class Scheduler:
+    def __init__(self, alloc: BlockAllocator, *, max_batch: int,
+                 token_budget: int):
+        self.alloc = alloc
+        self.max_batch = max_batch
+        self.token_budget = max(1, token_budget)
+        self.waiting: Deque[Request] = deque()
+        self.running: Dict[int, Request] = {}
+        self.free_slots: List[int] = list(range(max_batch - 1, -1, -1))
+        self.num_preemptions = 0
+
+    # ------------------------------------------------------------------ queue
+    def submit(self, req: Request) -> None:
+        assert req.state is RequestState.WAITING, req.state
+        self.waiting.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # -------------------------------------------------------------- admission
+    def _admit(self) -> None:
+        while self.waiting and self.free_slots:
+            req = self.waiting[0]
+            # resume prompt includes generated tokens (recompute preemption)
+            active = req.resume_tokens()
+            bs = self.alloc.block_size
+            cached = self.alloc.peek_prefix(active)
+            total_blocks = max(1, -(-len(active) // bs))
+            fresh = max(total_blocks - cached // bs, 0) + 1  # +1 decode slack
+            if self.alloc.num_free < fresh:
+                # Livelock breaker: the whole pool is free and still too
+                # small — this request (e.g. one whose resume prompt grew
+                # past the pool after preemption) will NEVER be admittable,
+                # and as FCFS head-of-line it would starve everyone behind
+                # it. Fail loudly instead of spinning.
+                if (not self.running
+                        and self.alloc.num_free == self.alloc.num_blocks):
+                    raise OutOfBlocksError(
+                        f"request {req.req_id} needs {fresh} blocks but the "
+                        f"whole pool is only {self.alloc.num_blocks}")
+                break                                        # FCFS head-of-line
+            self.waiting.popleft()
+            slot = self.free_slots.pop()
+            cached = self.alloc.allocate_prefix(req.req_id, active)
+            req.begin_prefill(slot, cached, active_prompt=active)
+            self.running[req.req_id] = req
+
+    # -------------------------------------------------------------- capacity
+    def _blocks_needed(self, plan: StepPlan) -> int:
+        """Exact pool demand of the plan: new blocks + copy-on-write copies.
+
+        A shared physical block written by several plan members costs
+        ``min(#writers, refcount - 1)`` copies, not one per writer: each CoW
+        drops the refcount, and the last writer at refcount 1 writes in
+        place.
+        """
+        bs = self.alloc.block_size
+        need = 0
+        cow_writers: Dict[int, int] = {}     # physical block -> plan writers
+        for req in plan.decode:
+            pos = self.alloc.seq_len(req.req_id)
+            table = self.alloc.table(req.req_id)
+            bi = pos // bs
+            if bi >= len(table):
+                need += 1
+            elif self.alloc.ref_count(table[bi]) > 1:
+                cow_writers[table[bi]] = cow_writers.get(table[bi], 0) + 1
+        for req, n in plan.prefill:
+            pos = self.alloc.seq_len(req.req_id)
+            table = self.alloc.table(req.req_id)
+            last_bi = (pos + n - 1) // bs
+            need += max(last_bi + 1 - len(table), 0)         # new blocks
+            for bi in range(pos // bs, min(last_bi, len(table) - 1) + 1):
+                if self.alloc.ref_count(table[bi]) > 1:
+                    cow_writers[table[bi]] = cow_writers.get(table[bi], 0) + 1
+        for blk, writers in cow_writers.items():
+            need += min(writers, self.alloc.ref_count(blk) - 1)
+        return need
+
+    def _pick_victim(self, protect: Optional[Request]) -> Optional[Request]:
+        """Latest-arrived running request (lowest priority under FCFS)."""
+        victims = [r for r in self.running.values() if r is not protect]
+        if not victims:
+            return None
+        return max(victims, key=lambda r: (r.arrival, r.req_id))
+
+    def release(self, req: Request) -> None:
+        """Return a running request's blocks and slot (finish or preempt)."""
+        self.alloc.free(req.req_id)
+        del self.running[req.req_id]
+        self.free_slots.append(req.slot)
+
+    def _preempt(self, req: Request) -> None:
+        self.release(req)
+        req.preempt()
+        self.waiting.appendleft(req)
+        self.num_preemptions += 1
+
+    # ------------------------------------------------------------------- plan
+    def schedule(self) -> StepPlan:
+        """Admit, budget prefill chunks, and preempt until the plan fits."""
+        self._admit()
+        while True:
+            plan = StepPlan()
+            budget = self.token_budget
+            for req in self.running.values():
+                if req.state is RequestState.DECODING:
+                    plan.decode.append(req)
+            for req in self.running.values():
+                if req.state is RequestState.PREFILLING and budget > 0:
+                    n = min(req.prefill_remaining, budget)
+                    if n > 0:
+                        plan.prefill.append((req, n))
+                        budget -= n
+            if self._blocks_needed(plan) <= self.alloc.num_free:
+                return plan
+            oldest = min(self.running.values(),
+                         key=lambda r: (r.arrival, r.req_id))
+            victim = self._pick_victim(protect=oldest)
+            if victim is None:
+                raise OutOfBlocksError(
+                    "a single request exceeds the KV pool; cannot preempt "
+                    "further")
+            self._preempt(victim)

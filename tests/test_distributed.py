@@ -11,6 +11,9 @@ from repro.distributed.compression import dequantize_int8, quantize_int8
 from repro.distributed.elastic import (
     HeartbeatMonitor, StragglerWatchdog, plan_remesh)
 
+# multi-device subprocess paths: excluded from the fast tier
+pytestmark = pytest.mark.slow
+
 
 # ------------------------------------------------------------------ sharding
 def test_sharding_rules_divisibility_fallback():

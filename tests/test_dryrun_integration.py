@@ -6,6 +6,9 @@ import pytest
 
 from conftest import run_multidevice
 
+# 8-device subprocess integration: multi-minute -> excluded from the fast tier
+pytestmark = pytest.mark.slow
+
 _RUNNER = """
 import os
 os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'

@@ -1,10 +1,17 @@
-"""Pallas kernel sweeps vs the pure-jnp oracles (interpret=True on CPU)."""
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret=True on CPU).
+
+Interpret-mode Pallas is orders of magnitude slower than compiled jnp, so
+the whole module is marked ``slow`` — the fast CI tier (tools/ci_fast.sh)
+skips it; the full tier still runs everything.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.paged_kv import BlockAllocator
+
+pytestmark = pytest.mark.slow
 
 KEY = jax.random.PRNGKey(0)
 

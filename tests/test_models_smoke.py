@@ -12,6 +12,9 @@ from repro.config import get_config
 from repro.configs import ASSIGNED_LM_ARCHS
 from repro.models.api import build_model
 
+# the full per-arch sweep is multi-minute -> excluded from the fast tier
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -61,5 +61,10 @@ def test_latency_tracker_percentiles():
     for v in reversed(range(100)):
         t.record(float(v))
     s = t.summary()
-    assert s["p50"] == 50.0 and s["p99"] == 99.0
+    # nearest-rank: p-th percentile of 0..99 is the ceil(p)-th sample
+    assert s["p50"] == 49.0 and s["p99"] == 98.0
     assert abs(s["mean"] - 49.5) < 1e-9
+    t2 = LatencyTracker()
+    t2.record(0.010)
+    t2.record(0.100)
+    assert t2.percentile(50) == 0.010           # p50 of 2 samples is the 1st

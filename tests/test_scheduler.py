@@ -1,0 +1,263 @@
+"""Scheduler-driven serving stack: allocator refcount/prefix/CoW edge cases,
+request state machine, chunked-prefill equivalence, preemption round trip,
+shared-prefix block savings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig, get_config
+from repro.core.paged_kv import BlockAllocator, OutOfBlocksError, make_pool
+from repro.models.api import build_model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.request import RequestState, SamplingParams
+from repro.serving.sampling import sample_batched
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------- allocator
+def test_allocator_double_free_protection():
+    al = BlockAllocator(num_blocks=8, block_size=4)
+    al.allocate(0, 6)
+    al.free(0)
+    with pytest.raises(KeyError):
+        al.free(0)
+    assert al.num_free == 8
+
+
+def test_allocator_refcount_shared_prefix_and_free_order():
+    al = BlockAllocator(num_blocks=8, block_size=4)
+    p = np.arange(8, dtype=np.int32)
+    al.allocate_prefix(0, p)
+    al.reserve_tokens(0, 8)
+    al.commit_tokens(0, 8)
+    al.register_prefix(0, p, 8)
+    cached = al.allocate_prefix(1, p)          # shares both full blocks
+    assert cached == 7                          # last token left to recompute
+    assert al.table(1) == al.table(0)
+    assert al.ref_count(al.table(0)[0]) == 2
+    al.free(0)                                  # shared blocks must survive
+    assert al.ref_count(al.table(1)[0]) == 1
+    al.free(1)
+    assert al.num_free == 8                     # hashed blocks cached-free
+
+
+def test_allocator_copy_on_write_on_shared_block():
+    al = BlockAllocator(num_blocks=8, block_size=4)
+    p = np.arange(8, dtype=np.int32)
+    al.allocate_prefix(0, p)
+    al.reserve_tokens(0, 8)
+    al.commit_tokens(0, 8)
+    al.register_prefix(0, p, 8)
+    al.allocate_prefix(1, p)                    # table(1) aliases table(0)
+    shared = al.table(0)[1]
+    slots = al.reserve_tokens(1, 1)             # write pos 7 -> shared block
+    assert al.cow_copies == 1
+    assert al.table(1)[1] != shared             # private copy in the table
+    assert al.table(0)[1] == shared             # owner untouched
+    assert al.drain_copies() == [(shared, al.table(1)[1])]
+    assert tuple(slots[0]) == (al.table(1)[1], 3)
+    # the freshly reserved (uncommitted) position sits on the new block;
+    # writing the owner's block again must NOT CoW (refcount back to 1)
+    al.reserve_tokens(0, 1)
+    assert al.cow_copies == 1
+
+
+def test_allocator_prefix_hit_miss_accounting():
+    al = BlockAllocator(num_blocks=16, block_size=4)
+    p = np.arange(12, dtype=np.int32)
+    al.allocate_prefix(0, p)                    # cold: 3 full blocks missed
+    assert (al.prefix_hits, al.prefix_misses) == (0, 3)
+    al.reserve_tokens(0, 12)
+    al.commit_tokens(0, 12)
+    al.register_prefix(0, p, 12)
+    q = np.concatenate([p[:8], np.array([99, 98, 97, 96], np.int32)])
+    al.allocate_prefix(1, q)                    # 2 hits, third block differs
+    assert (al.prefix_hits, al.prefix_misses) == (2, 4)
+    assert al.peek_prefix(q) == 8               # peek does not mutate
+    assert (al.prefix_hits, al.prefix_misses) == (2, 4)
+
+
+def test_allocator_rewind_truncate_release_blocks():
+    al = BlockAllocator(num_blocks=8, block_size=2)
+    al.allocate(0, 5)                           # 3 blocks
+    assert al.num_free == 5
+    al.rewind(0, 2)                             # len 3 -> 2 blocks
+    assert al.seq_len(0) == 3 and len(al.table(0)) == 2 and al.num_free == 6
+    al.truncate(0, 0)                           # keeps one block minimum
+    assert al.seq_len(0) == 0 and len(al.table(0)) == 1 and al.num_free == 7
+    with pytest.raises(AssertionError):
+        al.truncate(0, 5)                       # cannot truncate upward
+
+
+def test_allocator_cached_free_eviction_makes_room():
+    al = BlockAllocator(num_blocks=4, block_size=4)
+    p = np.arange(8, dtype=np.int32)
+    al.allocate_prefix(0, p)
+    al.reserve_tokens(0, 8)
+    al.commit_tokens(0, 8)
+    al.register_prefix(0, p, 8)
+    al.free(0)                                  # 2 hashed blocks cached-free
+    assert al.num_free == 4
+    al.allocate(1, 16)                          # needs the whole pool
+    assert al.cache_evictions == 2
+    assert al.peek_prefix(p) == 0               # cache entries dropped
+
+
+# ----------------------------------------------------------- state machine
+def test_request_state_machine_transitions():
+    req = Request(req_id=0, prompt=np.arange(4, dtype=np.int32),
+                  max_new_tokens=4)
+    assert req.state is RequestState.WAITING
+    req.begin_prefill(slot=0, cached_tokens=0)
+    assert req.state is RequestState.PREFILLING
+    req.preempt()
+    assert req.state is RequestState.PREEMPTED and req.slot == -1
+    req.output.append(7)
+    req.begin_prefill(slot=1, cached_tokens=0)
+    assert len(req.active_prompt) == 5          # prompt + generated token
+    req.to_state(RequestState.DECODING)
+    req.finish()
+    with pytest.raises(AssertionError):
+        req.to_state(RequestState.DECODING)     # FINISHED is terminal
+
+
+# ------------------------------------------------------------- engine e2e
+def _make():
+    cfg = get_config("qwen2-1.5b").reduced(dtype="float32")
+    model = build_model(cfg, remat=False)
+    params = model.init(KEY)
+    return cfg, model, params
+
+
+@pytest.mark.slow       # two full engine runs
+def test_shared_prefix_allocates_fewer_blocks_with_hits():
+    """N requests with a common prefix must allocate strictly fewer fresh
+    pool blocks than N independent prompts, with prefix hits > 0."""
+    cfg, model, params = _make()
+    rng = np.random.default_rng(0)
+    serve = ServeConfig(model=cfg.name, kv_block_size=4, max_batch=2)
+    prefix = rng.integers(0, cfg.vocab_size, (8,), dtype=np.int32)
+
+    def run(prompts):
+        eng = ServingEngine(model, params, cfg, serve, num_blocks=64)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(req_id=i, prompt=p, max_new_tokens=3))
+        eng.run_until_done()
+        return eng
+
+    shared = [np.concatenate([prefix,
+                              rng.integers(0, cfg.vocab_size, (2,),
+                                           dtype=np.int32)])
+              for _ in range(6)]
+    indep = [rng.integers(0, cfg.vocab_size, (10,), dtype=np.int32)
+             for _ in range(6)]
+    es, ei = run(shared), run(indep)
+    ms = es.metrics()
+    assert ms["prefix_hits"] > 0
+    assert ms["prefix_hit_rate"] > 0
+    assert es.alloc.blocks_allocated < ei.alloc.blocks_allocated
+    assert ms["finished"] == 6 and ei.metrics()["finished"] == 6
+
+
+@pytest.mark.slow       # two full engine runs
+def test_chunked_prefill_token_identical_across_budgets():
+    """Chunked prefill (budget 2) == one-shot prefill (budget 2048) for
+    greedy sampling — the acceptance equivalence for the fused step."""
+    cfg, model, params = _make()
+    rng = np.random.default_rng(1)
+    serve = ServeConfig(model=cfg.name, kv_block_size=4, max_batch=3)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,), dtype=np.int32)
+               for n in (5, 9, 3)]
+
+    def run(budget):
+        eng = ServingEngine(model, params, cfg, serve, num_blocks=64,
+                            token_budget=budget)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(req_id=i, prompt=p, max_new_tokens=6))
+        eng.run_until_done()
+        return {r.req_id: r.output for r in eng.finished}
+
+    assert run(2) == run(2048)
+
+
+@pytest.mark.slow       # two full engine runs
+def test_preemption_resume_round_trip_preserves_output():
+    """Starving the pool forces preemption; recompute-resume must reproduce
+    the un-preempted generation exactly (greedy)."""
+    cfg, model, params = _make()
+    rng = np.random.default_rng(2)
+    serve = ServeConfig(model=cfg.name, kv_block_size=4, max_batch=3)
+    prompts = [rng.integers(0, cfg.vocab_size, (6,), dtype=np.int32)
+               for _ in range(3)]
+
+    def run(num_blocks):
+        eng = ServingEngine(model, params, cfg, serve, num_blocks=num_blocks)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(req_id=i, prompt=p, max_new_tokens=8))
+        eng.run_until_done()
+        return eng
+
+    big, small = run(64), run(8)
+    assert small.metrics()["preemptions"] > 0
+    big_out = {r.req_id: r.output for r in big.finished}
+    for r in small.finished:
+        assert r.output == big_out[r.req_id], r.req_id
+    assert small.metrics()["blocks_free"] == 8          # no leak across preempt
+    assert max(r.num_preemptions for r in small.finished) > 0
+
+
+@pytest.mark.slow       # two full engine runs
+def test_per_request_sampling_plugs_into_fused_step():
+    """Greedy and stochastic requests share one batch; greedy lanes must be
+    unaffected by their stochastic neighbours."""
+    cfg, model, params = _make()
+    rng = np.random.default_rng(3)
+    serve = ServeConfig(model=cfg.name, kv_block_size=4, max_batch=2)
+    prompt = rng.integers(0, cfg.vocab_size, (6,), dtype=np.int32)
+
+    eng = ServingEngine(model, params, cfg, serve, num_blocks=64)
+    eng.submit(Request(req_id=0, prompt=prompt, max_new_tokens=5))
+    eng.submit(Request(req_id=1, prompt=prompt, max_new_tokens=5,
+                       sampling=SamplingParams(temperature=1.0, top_k=40,
+                                               top_p=0.9)))
+    eng.run_until_done()
+    outs = {r.req_id: r.output for r in eng.finished}
+
+    solo = ServingEngine(model, params, cfg, serve, num_blocks=64)
+    solo.submit(Request(req_id=0, prompt=prompt, max_new_tokens=5))
+    solo.run_until_done()
+    assert outs[0] == solo.finished[0].output
+
+
+def test_sample_batched_greedy_lane_matches_argmax():
+    logits = jax.random.normal(KEY, (4, 32))
+    toks = sample_batched(
+        jax.random.PRNGKey(1), logits,
+        jnp.asarray([0.0, 0.0, 1.0, 0.7]), jnp.asarray([0, 5, 0, 3]),
+        jnp.asarray([1.0, 1.0, 0.9, 1.0]))
+    ref = jnp.argmax(logits, axis=-1)
+    assert toks[0] == ref[0] and toks[1] == ref[1]
+    assert toks.shape == (4,) and toks.dtype == jnp.int32
+
+
+def test_metrics_expose_percentiles_and_throughput():
+    cfg, model, params = _make()
+    rng = np.random.default_rng(4)
+    serve = ServeConfig(model=cfg.name, kv_block_size=4, max_batch=2)
+    eng = ServingEngine(model, params, cfg, serve, num_blocks=64)
+    for i in range(4):
+        eng.submit(Request(
+            req_id=i,
+            prompt=rng.integers(0, cfg.vocab_size, (5,), dtype=np.int32),
+            max_new_tokens=3))
+    eng.run_until_done()
+    m = eng.metrics()
+    for k in ("p50_ttft_s", "p99_ttft_s", "p50_tpot_s", "p99_tpot_s",
+              "throughput_tok_s", "preemptions", "prefix_hit_rate",
+              "cow_copies"):
+        assert k in m, k
+    assert m["p99_ttft_s"] >= m["p50_ttft_s"] > 0
+    assert m["throughput_tok_s"] > 0
+    assert m["finished"] == 4

@@ -3,6 +3,7 @@ no block leaks."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.config import ServeConfig, get_config
 from repro.models.api import build_model
@@ -35,6 +36,7 @@ def _make():
     return cfg, model, params
 
 
+@pytest.mark.slow       # 3 token-by-token oracle generations (~30 s)
 def test_engine_matches_reference_generation():
     cfg, model, params = _make()
     rng = np.random.default_rng(0)

@@ -1,7 +1,12 @@
 """shard_map paths: sharded BlockList paged attention (flash-decoding
 combine) and row-sharded BatchedTable embedding — each must equal its
 single-device oracle."""
+import pytest
+
 from conftest import run_multidevice
+
+# multi-device subprocess sweeps: excluded from the fast tier
+pytestmark = pytest.mark.slow
 
 
 def test_paged_attention_sharded_equals_opt():

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Fast CI tier: everything except tests marked `slow` (Pallas interpret-mode
+# kernel sweeps and other multi-minute paths). Target: < 2 minutes on CPU.
+# Full tier remains `PYTHONPATH=src python -m pytest -x -q`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -q -m "not slow" "$@"
