@@ -2,13 +2,17 @@
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Dict, List
 
 import jax
 
 from repro.roofline.analysis import HW
 
 _HW = HW()
+
+# Rows emitted since the last clear — the harness (benchmarks/run.py) drains
+# this to build per-backend JSON for its --backend sweep.
+RECORDS: List[Dict[str, object]] = []
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -30,4 +34,5 @@ def tpu_time_model(flops: float, bytes_moved: float) -> float:
 
 
 def emit(name: str, us: float, derived: str) -> None:
+    RECORDS.append({"name": name, "us_per_call": us, "derived": derived})
     print(f"{name},{us:.1f},{derived}")

@@ -39,7 +39,8 @@ def _emit_engine(tag: str, engine, dt: float) -> None:
          f"tpot_p99_ms={m['p99_tpot_s']*1e3:.1f};"
          f"tok_s={m['throughput_tok_s']:.1f};"
          f"preempt={m['preemptions']};"
-         f"prefix_hit_rate={m['prefix_hit_rate']:.2f}")
+         f"prefix_hit_rate={m['prefix_hit_rate']:.2f};"
+         f"backend={m['backend']}")
 
 
 def run(quick: bool = True) -> None:

@@ -2,6 +2,14 @@
 
 Prints ``name,us_per_call,derived`` CSV. ``--full`` widens sweeps.
 
+``--backend a,b,...`` repeats the run once per backend name, with each pass
+scoped under ``dispatch.force_backend`` so every registry-dispatched op
+(kernels AND the serving engine) follows the preference; ``--json PATH``
+then writes the per-backend rows plus the ``(op, backend)`` pairs that
+actually resolved — the paper-style microbenchmark comparison across
+software stacks, attributable to the implementation that really ran
+(an unsupported preference degrades to capability-ranked auto).
+
 | module                 | paper figure/table |
 |------------------------|--------------------|
 | gemm_roofline          | Fig 4, 5, 7        |
@@ -16,9 +24,13 @@ Prints ``name,us_per_call,derived`` CSV. ``--full`` widens sweeps.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+
+from benchmarks import common
+from repro.core import dispatch
 
 MODULES = [
     "gemm_roofline",
@@ -36,19 +48,46 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None, help="comma-separated module list")
     p.add_argument("--full", action="store_true")
+    p.add_argument("--backend", default=None,
+                   help="comma-separated backend sweep (e.g. "
+                        "ref,xla,pallas_interpret); each backend scopes the "
+                        "whole run via repro.core.dispatch.force_backend")
+    p.add_argument("--json", default=None,
+                   help="write per-backend result rows (+ resolved (op, "
+                        "backend) pairs) to this path")
     args = p.parse_args()
     mods = args.only.split(",") if args.only else MODULES
+    backends = args.backend.split(",") if args.backend else [None]
     print("name,us_per_call,derived")
     failures = 0
-    for m in mods:
-        mod = __import__(f"benchmarks.{m}", fromlist=["run"])
-        t0 = time.time()
-        try:
-            mod.run(quick=not args.full)
-        except Exception:
-            traceback.print_exc()
-            failures += 1
-        print(f"# {m} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    results = []
+    for b in backends:
+        if b is not None:
+            print(f"# backend sweep: {b}", file=sys.stderr)
+        for m in mods:
+            mod = __import__(f"benchmarks.{m}", fromlist=["run"])
+            t0 = time.time()
+            common.RECORDS.clear()
+            log = []
+            try:
+                with dispatch.force_backend(b), \
+                        dispatch.record_resolutions() as log:
+                    mod.run(quick=not args.full)
+            except Exception:
+                traceback.print_exc()
+                failures += 1
+            results.append({
+                "module": m,
+                "requested_backend": b or "auto",
+                "resolved": sorted({f"{op}={bk}" for op, bk in log}),
+                "rows": list(common.RECORDS),
+            })
+            print(f"# {m} done in {time.time()-t0:.1f}s"
+                  + (f" [backend={b}]" if b else ""), file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

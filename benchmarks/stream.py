@@ -1,11 +1,14 @@
 """Paper Fig 8 / Alg 1: STREAM ADD/SCALE/TRIAD with tile-granularity sweep.
 
-The Pallas kernels run in interpret mode on CPU; the granularity sweep
-(block_rows = the BlockSpec tile height) is the TPU analogue of the paper's
-data-access-granularity sweep: tiny tiles underfill the HBM→VMEM DMA
-pipeline exactly like sub-256 B accesses on Gaudi. Derived: roofline bytes/s
-at each granularity from the DMA-efficiency model eff = rows/(rows+latency
-rows), and the operational-intensity saturation study (Fig 8 d/e/f)."""
+Backend selection goes through the unified registry: auto resolves to the
+jnp form on CPU and the compiled Pallas kernel on TPU; run the harness with
+``--backend pallas_interpret`` (or ``pallas`` on TPU) to trace the kernel's
+granularity curve explicitly. The sweep (block_rows = the BlockSpec tile
+height) is the TPU analogue of the paper's data-access-granularity sweep:
+tiny tiles underfill the HBM→VMEM DMA pipeline exactly like sub-256 B
+accesses on Gaudi. Derived: roofline bytes/s at each granularity from the
+DMA-efficiency model eff = rows/(rows+latency rows), and the
+operational-intensity saturation study (Fig 8 d/e/f)."""
 from __future__ import annotations
 
 import jax

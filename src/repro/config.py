@@ -328,6 +328,11 @@ class ServeConfig:
     max_new_tokens: int = 128
     prefill_chunk: int = 2048
     use_block_list: bool = True    # paper technique ON (False = padded baseline)
+    # Operator-backend preference for registry-dispatched ops (the config
+    # level of repro.core.dispatch precedence: overridden by explicit args,
+    # force_backend scopes and REPRO_BACKEND; falls back to capability-ranked
+    # auto when the named backend can't serve this platform/call).
+    backend: str = "auto"          # auto | ref | xla | pallas | pallas_interpret
     parallel: ParallelConfig = field(default_factory=ParallelConfig)
     seed: int = 0
 

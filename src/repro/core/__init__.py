@@ -1,9 +1,12 @@
 """The paper's contribution as first-class framework features.
 
+* :mod:`repro.core.dispatch` — unified operator-backend registry: ONE
+  resolver (explicit arg > scope > env > config > capability-ranked auto)
+  for every op family, from kernels to the serving engine
 * :mod:`repro.core.paged_kv` — paged KV-cache pool + block allocator
 * :mod:`repro.core.attention_api` — PagedAttention: padded ``BlockTable``
   baseline (vLLM_base) vs flat ``BlockList`` optimized path (vLLM_opt)
 * :mod:`repro.core.embedding_api` — embedding lookups: ``SingleTable``
   baseline vs fused ``BatchedTable`` (FBGEMM-style)
 """
-from repro.core import attention_api, embedding_api, paged_kv  # noqa: F401
+from repro.core import attention_api, dispatch, embedding_api, paged_kv  # noqa: F401

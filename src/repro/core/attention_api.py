@@ -27,11 +27,12 @@ KV groups. f32 softmax accumulation.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import dispatch
 
 NEG_INF = -1e30
 
@@ -177,13 +178,29 @@ def paged_attention_chunked(q, pool_k, pool_v, block_list, block_req,
     return out.reshape(T, H, HD).astype(q.dtype)
 
 
-@partial(jax.jit, static_argnames=("backend",))
 def paged_attention(q, pool_k, pool_v, block_list, block_req, block_pos,
-                    seq_lens, backend: str = "ref"):
-    """Dispatch: 'ref' (jnp, any device) or 'pallas' (TPU kernel)."""
-    if backend == "pallas":
-        from repro.kernels.paged_attention.ops import paged_attention_kernel_op
-        return paged_attention_kernel_op(
-            q, pool_k, pool_v, block_list, block_req, block_pos, seq_lens)
-    return paged_attention_opt(q, pool_k, pool_v, block_list, block_req,
-                               block_pos, seq_lens)
+                    seq_lens, backend=None):
+    """Decode-shape PagedAttention through the unified registry.
+
+    ONE resolver call (:mod:`repro.core.dispatch`): explicit ``backend`` is
+    strict and round-trips to the named implementation; ``None`` follows
+    scope/env/config/auto precedence.  Implementations are registered in
+    ``repro.kernels.paged_attention.ops``.
+    """
+    return dispatch.get_op("paged_attention")(
+        q, pool_k, pool_v, block_list, block_req, block_pos, seq_lens,
+        backend=backend)
+
+
+def paged_attention_chunked_op(q, pool_k, pool_v, block_list, block_req,
+                               block_pos, kv_lens, token_req, token_pos,
+                               *, backend=None, q_chunk: int = 16):
+    """Chunked-prefill PagedAttention through the unified registry.
+
+    Same contract as :func:`paged_attention_chunked` (which is the ``ref``
+    implementation); ``pallas``/``pallas_interpret`` select the query-chunk
+    grid kernel in ``repro.kernels.paged_attention.kernel``.
+    """
+    return dispatch.get_op("paged_attention_chunked")(
+        q, pool_k, pool_v, block_list, block_req, block_pos, kv_lens,
+        token_req, token_pos, q_chunk=q_chunk, backend=backend)

@@ -77,9 +77,13 @@ def batched_table_lookup_sharded(big_table, table_offsets, indices, *,
     return jax.lax.psum(pooled, axis)
 
 
-def embedding_bag(big_table, table_offsets, indices, backend: str = "ref"):
-    """Dispatch: 'ref' (jnp) or 'pallas' (TPU kernel, interpret on CPU)."""
-    if backend == "pallas":
-        from repro.kernels.batched_embedding.ops import batched_embedding_op
-        return batched_embedding_op(big_table, table_offsets, indices)
-    return batched_table_lookup(big_table, table_offsets, indices)
+def embedding_bag(big_table, table_offsets, indices, backend=None):
+    """BatchedTable embedding bag through the unified registry.
+
+    ONE resolver call (:mod:`repro.core.dispatch`); implementations are
+    registered in ``repro.kernels.batched_embedding.ops`` (``ref`` is
+    :func:`batched_table_lookup`).
+    """
+    from repro.core import dispatch
+    return dispatch.get_op("embedding_bag")(
+        big_table, table_offsets, indices, backend=backend)

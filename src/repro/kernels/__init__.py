@@ -2,10 +2,14 @@
 
 Each kernel subpackage has:
   kernel.py — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling (TPU target)
-  ops.py    — jit'd public wrapper (shape plumbing, dispatch, interpret flag)
+  ops.py    — registers ref / pallas / pallas_interpret implementations with
+              the unified operator-backend registry (``repro.core.dispatch``)
+              and exposes thin public wrappers; NO per-file dispatch
   ref.py    — pure-jnp oracle used by the allclose test sweeps
 
 Kernels are validated with ``interpret=True`` on CPU; on TPU the same code
 compiles via Mosaic. The jnp reference path (not interpret mode) is what the
 dry-run lowers, so cost analysis reflects XLA's view of the same math.
+Backend selection (explicit arg > scope > env > config > capability-ranked
+auto) is documented in docs/backends.md.
 """

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _embed_kernel(global_ids, row_ref, o_ref, acc_ref, *, pool_l: int):
     l = pl.program_id(1)
@@ -60,7 +62,7 @@ def batched_embedding_pallas(big_table, global_ids, pool_l: int, *,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((num_bags, D), big_table.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(global_ids, big_table)

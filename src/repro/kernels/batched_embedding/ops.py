@@ -1,4 +1,11 @@
-"""Public jit'd wrapper for the BatchedTable embedding kernel."""
+"""BatchedTable embedding bag through the unified registry.
+
+This is the single registration site for the ``embedding_bag`` op family:
+``ref`` is the fused jnp BatchedTable lookup (the paper's FBGEMM-style
+technique at the XLA level) and ``pallas``/``pallas_interpret`` the Pallas
+kernel over the same math.  The public wrapper in
+``repro.core.embedding_api`` routes through :mod:`repro.core.dispatch`.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -6,19 +13,50 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch
 from repro.kernels.batched_embedding.kernel import batched_embedding_pallas
 from repro.kernels.batched_embedding.ref import batched_embedding_ref
 
 
-@partial(jax.jit, static_argnames=("backend",))
-def batched_embedding_op(big_table, table_offsets, indices,
-                         backend: str = "auto"):
-    """indices (B, T, L) local ids -> pooled (B, T, D)."""
-    if backend == "ref":
-        return batched_embedding_ref(big_table, table_offsets, indices)
+def _example():
+    R, D, B, T, L = 16, 128, 2, 3, 4
+    tbl = jax.random.normal(jax.random.PRNGKey(0), (R * T, D), jnp.float32)
+    offs = jnp.arange(T, dtype=jnp.int32) * R
+    idx = jax.random.randint(jax.random.PRNGKey(1), (B, T, L), 0, R)
+    return (tbl, offs, idx), {}
+
+
+_OP = dispatch.op(
+    "embedding_bag", example=_example,
+    doc="Fused BatchedTable embedding bag: (B,T,L) local ids -> (B,T,D)")
+
+
+@_OP.register("ref")
+@jax.jit
+def _embed_ref(big_table, table_offsets, indices):
+    return batched_embedding_ref(big_table, table_offsets, indices)
+
+
+def _pallas(big_table, table_offsets, indices, *, interpret: bool):
     B, T, L = indices.shape
     global_ids = (indices + table_offsets[None, :, None]).reshape(-1)
-    interpret = jax.default_backend() != "tpu" or backend == "interpret"
     out = batched_embedding_pallas(big_table, global_ids, L,
                                    interpret=interpret)
     return out.reshape(B, T, big_table.shape[1])
+
+
+@_OP.register("pallas")
+@jax.jit
+def _embed_pallas(big_table, table_offsets, indices):
+    return _pallas(big_table, table_offsets, indices, interpret=False)
+
+
+@_OP.register("pallas_interpret")
+@jax.jit
+def _embed_interpret(big_table, table_offsets, indices):
+    return _pallas(big_table, table_offsets, indices, interpret=True)
+
+
+def batched_embedding_op(big_table, table_offsets, indices, backend=None):
+    """indices (B, T, L) local ids -> pooled (B, T, D)."""
+    return _OP(big_table, table_offsets, indices, backend=backend)

@@ -1,0 +1,10 @@
+"""Version compatibility for Pallas TPU APIs.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and back,
+depending on release line); resolve whichever this install provides once so
+every kernel call site stays version-agnostic.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

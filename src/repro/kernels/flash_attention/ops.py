@@ -1,22 +1,74 @@
-"""Public jit'd wrapper for the flash-attention kernel."""
+"""Flash attention through the unified operator-backend registry.
+
+This module registers every implementation of the ``flash_attention`` op
+family with :mod:`repro.core.dispatch` — there is no ad-hoc string dispatch
+here; backend selection (explicit arg / scope / env / config / auto) happens
+in the one shared resolver.
+"""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
+from repro.core import dispatch
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
 
-@partial(jax.jit, static_argnames=("causal", "backend", "bq", "bk"))
-def flash_attention(q, k, v, *, causal: bool = True, backend: str = "auto",
-                    bq: int = 512, bk: int = 512):
-    """Dispatch: pallas on TPU, pallas-interpret for validation, jnp ref else."""
-    if backend == "ref":
-        return flash_attention_ref(q, k, v, causal=causal)
-    interpret = jax.default_backend() != "tpu"
-    if backend == "interpret":
-        interpret = True
+def _example():
+    """Small parity-suite inputs (see tests/test_backend_parity.py)."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 2, 16), jnp.float32)
+    return (q, k, v), {"causal": True, "bq": 32, "bk": 32}
+
+
+_OP = dispatch.op(
+    "flash_attention", example=_example,
+    doc="GQA flash attention: q (B,S,H,hd), k/v (B,S,KV,hd) -> (B,S,H,hd)")
+
+
+def _tiles_divide(spec: dispatch.CallSpec) -> bool:
+    """The Pallas grid needs S divisible by the (clamped) q/k tiles."""
+    if not spec.args:
+        return True
+    S = spec.args[0].shape[1]
+    bq = spec.kwargs.get("bq", 512)
+    bk = spec.kwargs.get("bk", 512)
+    return S % min(bq, S) == 0 and S % min(bk, S) == 0
+
+
+def _pallas_supported(spec: dispatch.CallSpec) -> bool:
+    return dispatch.on_tpu(spec) and _tiles_divide(spec)
+
+
+@_OP.register("ref")
+@partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def _flash_ref(q, k, v, *, causal: bool = True, bq: int = 512, bk: int = 512):
+    del bq, bk                       # tiling is a kernel-backend concern
+    return flash_attention_ref(q, k, v, causal=causal)
+
+
+@_OP.register("pallas", supports=_pallas_supported)
+@partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def _flash_pallas(q, k, v, *, causal: bool = True, bq: int = 512,
+                  bk: int = 512):
     return flash_attention_pallas(q, k, v, causal=causal, bq=bq, bk=bk,
-                                  interpret=interpret)
+                                  interpret=False)
+
+
+@_OP.register("pallas_interpret", supports=_tiles_divide)
+@partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def _flash_pallas_interpret(q, k, v, *, causal: bool = True, bq: int = 512,
+                            bk: int = 512):
+    return flash_attention_pallas(q, k, v, causal=causal, bq=bq, bk=bk,
+                                  interpret=True)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, backend=None,
+                    bq: int = 512, bk: int = 512):
+    """Public entry point: one registry resolution, then the chosen impl."""
+    return _OP(q, k, v, causal=causal, bq=bq, bk=bk, backend=backend)

@@ -1,25 +1,77 @@
-"""Public jit'd wrappers for random vector gather/scatter."""
+"""Random vector gather/scatter through the unified registry.
+
+Registers ``vector_gather`` / ``vector_scatter`` implementations with
+:mod:`repro.core.dispatch`; the shared resolver owns backend selection.
+"""
 from __future__ import annotations
 
-from functools import partial
-
 import jax
+import jax.numpy as jnp
 
+from repro.core import dispatch
 from repro.kernels.gather_scatter.kernel import gather_pallas, scatter_pallas
 from repro.kernels.gather_scatter.ref import gather_ref, scatter_ref
 
 
-@partial(jax.jit, static_argnames=("backend",))
-def vector_gather(table, idx, backend: str = "auto"):
-    if backend == "ref":
-        return gather_ref(table, idx)
-    interpret = jax.default_backend() != "tpu" or backend == "interpret"
-    return gather_pallas(table, idx, interpret=interpret)
+def _example_gather():
+    tbl = jax.random.normal(jax.random.PRNGKey(0), (32, 128), jnp.float32)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (8,), 0, 32)
+    return (tbl, idx), {}
 
 
-@partial(jax.jit, static_argnames=("backend",))
-def vector_scatter(table, idx, src, backend: str = "auto"):
-    if backend == "ref":
-        return scatter_ref(table, idx, src)
-    interpret = jax.default_backend() != "tpu" or backend == "interpret"
-    return scatter_pallas(table, idx, src, interpret=interpret)
+def _example_scatter():
+    tbl = jax.random.normal(jax.random.PRNGKey(0), (32, 128), jnp.float32)
+    # unique indices: scatter order must not matter for the parity check
+    idx = jnp.asarray([3, 17, 0, 9, 21, 30, 5, 11], jnp.int32)
+    src = jax.random.normal(jax.random.PRNGKey(2), (8, 128), jnp.float32)
+    return (tbl, idx, src), {}
+
+
+_GATHER = dispatch.op("vector_gather", example=_example_gather,
+                      doc="GUPS-style random row gather: table[idx]")
+_SCATTER = dispatch.op("vector_scatter", example=_example_scatter,
+                       doc="GUPS-style random row scatter: table.at[idx].set")
+
+
+@_GATHER.register("ref")
+@jax.jit
+def _gather_ref(table, idx):
+    return gather_ref(table, idx)
+
+
+@_GATHER.register("pallas")
+@jax.jit
+def _gather_pallas(table, idx):
+    return gather_pallas(table, idx, interpret=False)
+
+
+@_GATHER.register("pallas_interpret")
+@jax.jit
+def _gather_interpret(table, idx):
+    return gather_pallas(table, idx, interpret=True)
+
+
+@_SCATTER.register("ref")
+@jax.jit
+def _scatter_ref(table, idx, src):
+    return scatter_ref(table, idx, src)
+
+
+@_SCATTER.register("pallas")
+@jax.jit
+def _scatter_pallas(table, idx, src):
+    return scatter_pallas(table, idx, src, interpret=False)
+
+
+@_SCATTER.register("pallas_interpret")
+@jax.jit
+def _scatter_interpret(table, idx, src):
+    return scatter_pallas(table, idx, src, interpret=True)
+
+
+def vector_gather(table, idx, backend=None):
+    return _GATHER(table, idx, backend=backend)
+
+
+def vector_scatter(table, idx, src, backend=None):
+    return _SCATTER(table, idx, src, backend=backend)

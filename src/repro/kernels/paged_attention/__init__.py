@@ -1,1 +1,3 @@
-from repro.kernels.paged_attention.ops import paged_attention_kernel_op  # noqa: F401
+from repro.kernels.paged_attention.kernel import (  # noqa: F401
+    paged_attention_chunked_pallas, paged_attention_pallas)
+import repro.kernels.paged_attention.ops  # noqa: F401  (registers backends)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 NEG_INF = -1e30
 
 
@@ -125,7 +127,153 @@ def paged_attention_pallas(q, pool_k, pool_v, block_list, block_req,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(block_list, block_req, block_pos, seq_lens, q, pool_k, pool_v)
+
+
+def _chunked_kernel(
+    # scalar-prefetched
+    block_list, block_req, block_pos, kv_lens,
+    # blocked inputs
+    q_ref, k_ref, v_ref, treq_ref, tpos_ref,
+    # output
+    o_ref,
+    # scratch
+    acc_ref, m_ref, l_ref,
+    *, bs: int, num_kv: int, num_reqs: int, sm_scale: float,
+):
+    """Chunked-prefill grid step: one (query-chunk, BlockList entry) pair.
+
+    Grid is (num_q_chunks, T_blocks) with the block dimension innermost, so
+    the per-chunk online-softmax accumulators persist in VMEM scratch across
+    every BlockList entry of one query chunk.  Lanes of a chunk may belong to
+    different requests — ownership, causality and KV length are all enforced
+    by the mask, exactly as in ``paged_attention_chunked`` (the jnp ref).
+    """
+    t = pl.program_id(1)
+    req = block_req[t]
+    is_pad = req >= num_reqs
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        # Lanes with no valid keys (padding, empty requests) must read 0.
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(jnp.logical_not(is_pad))
+    def _step():
+        TQ, H, hd = q_ref.shape
+        G = H // num_kv
+        treq = treq_ref[:, 0]                          # (TQ,)
+        tpos = tpos_ref[:, 0]
+        key_pos = block_pos[t] * bs + jax.lax.broadcasted_iota(
+            jnp.int32, (1, bs), 1)[0]                  # (bs,)
+        kvl = kv_lens[jnp.minimum(req, num_reqs - 1)]
+        lane_ok = (treq == req) & (treq < num_reqs)    # (TQ,)
+        valid = (lane_ok[:, None]
+                 & (key_pos[None, :] <= tpos[:, None])  # causal
+                 & (key_pos[None, :] < kvl))            # (TQ, bs)
+
+        for kv in range(num_kv):                       # static small loop
+            q = q_ref[:, kv * G:(kv + 1) * G, :]       # (TQ, G, hd)
+            k = k_ref[0, :, kv, :]                     # (bs, hd)
+            v = v_ref[0, :, kv, :]
+            s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            s = s * sm_scale                           # (TQ, G, bs)
+            s = jnp.where(valid[:, None, :], s, NEG_INF)
+            m_prev = m_ref[:, kv * G:(kv + 1) * G]     # (TQ, G)
+            m_new = jnp.maximum(m_prev, s.max(axis=-1))
+            corr = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new[:, :, None])
+            p = jnp.where(valid[:, None, :], p, 0.0)
+            l_new = l_ref[:, kv * G:(kv + 1) * G] * corr + p.sum(axis=-1)
+            pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                     (((2,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+            acc_ref[:, kv * G:(kv + 1) * G, :] = (
+                acc_ref[:, kv * G:(kv + 1) * G, :] * corr[:, :, None] + pv)
+            m_ref[:, kv * G:(kv + 1) * G] = m_new
+            l_ref[:, kv * G:(kv + 1) * G] = l_new
+
+        # Rewrite the running normalized output; the last BlockList entry
+        # leaves the final value for this query chunk.
+        l = jnp.maximum(l_ref[...], 1e-30)             # (TQ, H)
+        o_ref[...] = (acc_ref[...] / l[:, :, None]).astype(o_ref.dtype)
+
+
+def paged_attention_chunked_pallas(q, pool_k, pool_v, block_list, block_req,
+                                   block_pos, kv_lens, token_req, token_pos,
+                                   *, sm_scale=None, q_chunk: int = 16,
+                                   interpret: bool = True):
+    """Chunked-prefill PagedAttention with a query-chunk grid dimension.
+
+    Same contract as ``repro.core.attention_api.paged_attention_chunked``:
+    q (T, H, hd) flat token lanes (decode tokens and prompt-chunk tokens
+    mixed), flat BlockList arrays (Tb,), kv_lens (B,), token_req/token_pos
+    (T,).  The decode kernel above is the one-lane-per-request special case;
+    here the grid grows a leading query-chunk dimension and the scalar-
+    prefetched BlockList still drives exact-tile DMA — zero-pad pool blocks
+    never leave HBM.
+    """
+    T, H, hd = q.shape
+    NB, BS, KV, _ = pool_k.shape
+    B = kv_lens.shape[0]
+    Tb = block_list.shape[0]
+    scale = float(sm_scale if sm_scale is not None else hd ** -0.5)
+
+    tq = max(min(q_chunk, T), 1)
+    pad = (-T) % tq
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+        # Padding lanes get an out-of-range owner so every key is masked.
+        token_req = jnp.pad(token_req, (0, pad), constant_values=B)
+        token_pos = jnp.pad(token_pos, (0, pad))
+    Tp = T + pad
+    treq = token_req.reshape(Tp, 1).astype(jnp.int32)
+    tpos = token_pos.reshape(Tp, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_chunked_kernel, bs=BS, num_kv=KV, num_reqs=B,
+                               sm_scale=scale)
+
+    # index maps take (grid ids, *prefetched scalars)
+    def q_map(i, t, bl, br, bp, kvl):
+        return (i, 0, 0)
+
+    def kv_map(i, t, bl, br, bp, kvl):
+        return (bl[t], 0, 0, 0)
+
+    def lane_map(i, t, bl, br, bp, kvl):
+        return (i, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(Tp // tq, Tb),
+        in_specs=[
+            pl.BlockSpec((tq, H, hd), q_map),
+            pl.BlockSpec((1, BS, KV, hd), kv_map),
+            pl.BlockSpec((1, BS, KV, hd), kv_map),
+            pl.BlockSpec((tq, 1), lane_map),
+            pl.BlockSpec((tq, 1), lane_map),
+        ],
+        out_specs=pl.BlockSpec((tq, H, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((tq, H, hd), jnp.float32),
+            pltpu.VMEM((tq, H), jnp.float32),
+            pltpu.VMEM((tq, H), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Tp, H, hd), q.dtype),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_list, block_req, block_pos, kv_lens, q, pool_k, pool_v,
+      treq, tpos)
+    return out[:T]

@@ -1,20 +1,132 @@
-"""Public jit'd wrapper for the BlockList PagedAttention kernel."""
+"""PagedAttention op families through the unified registry.
+
+Single registration site for two op families:
+
+* ``paged_attention`` — decode shape: one query token per request,
+  q (B, H, hd) against the flat BlockList.
+* ``paged_attention_chunked`` — the serving engine's fused chunked-prefill +
+  decode shape: q (T, H, hd) flat token lanes, each attending causally to its
+  request's pool blocks.
+
+The jnp BlockList form (``repro.core.attention_api``) is registered as both
+``ref`` (it is the oracle) and ``xla`` (it is also the tuned XLA production
+path — segment-softmax, only effectual blocks gathered), so auto resolution
+on CPU picks it while perf attribution still distinguishes the two roles.
+The Pallas kernels register as ``pallas`` (TPU) and ``pallas_interpret``.
+"""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.paged_attention.kernel import paged_attention_pallas
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.core import dispatch
+from repro.core.attention_api import (
+    paged_attention_chunked as _chunked_jnp, paged_attention_opt)
+from repro.kernels.paged_attention.kernel import (
+    paged_attention_chunked_pallas, paged_attention_pallas)
 
 
-@partial(jax.jit, static_argnames=("backend",))
-def paged_attention_kernel_op(q, pool_k, pool_v, block_list, block_req,
-                              block_pos, seq_lens, backend: str = "auto"):
-    if backend == "ref":
-        return paged_attention_ref(q, pool_k, pool_v, block_list, block_req,
-                                   block_pos, seq_lens)
-    interpret = jax.default_backend() != "tpu" or backend == "interpret"
+def _pools(key, NB=8, BS=4, KV=2, hd=16):
+    ks = jax.random.split(key, 2)
+    pk = jax.random.normal(ks[0], (NB, BS, KV, hd), jnp.float32)
+    pv = jax.random.normal(ks[1], (NB, BS, KV, hd), jnp.float32)
+    return pk, pv
+
+
+def _example_decode():
+    """2 requests (lens 6 and 3), blocks 0,1 / 2, one pad entry."""
+    key = jax.random.PRNGKey(0)
+    pk, pv = _pools(key)
+    B, H, hd = 2, 4, 16
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, H, hd), jnp.float32)
+    bl = jnp.asarray([0, 1, 2, 0], jnp.int32)
+    br = jnp.asarray([0, 0, 1, B], jnp.int32)
+    bp = jnp.asarray([0, 1, 0, 0], jnp.int32)
+    lens = jnp.asarray([6, 3], jnp.int32)
+    return (q, pk, pv, bl, br, bp, lens), {}
+
+
+def _example_chunked():
+    """Mixed lanes: req 0 decode token (pos 5) + req 1 prefill chunk (pos
+    1..2) + one padding lane, over the same pool as the decode example."""
+    key = jax.random.PRNGKey(0)
+    pk, pv = _pools(key)
+    B, H, hd = 2, 4, 16
+    q = jax.random.normal(jax.random.fold_in(key, 2), (4, H, hd), jnp.float32)
+    bl = jnp.asarray([0, 1, 2, 0], jnp.int32)
+    br = jnp.asarray([0, 0, 1, B], jnp.int32)
+    bp = jnp.asarray([0, 1, 0, 0], jnp.int32)
+    kv_lens = jnp.asarray([6, 3], jnp.int32)
+    token_req = jnp.asarray([0, 1, 1, B], jnp.int32)
+    token_pos = jnp.asarray([5, 1, 2, 0], jnp.int32)
+    return (q, pk, pv, bl, br, bp, kv_lens, token_req, token_pos), \
+        {"q_chunk": 2}
+
+
+_DECODE = dispatch.op(
+    "paged_attention", example=_example_decode,
+    doc="BlockList PagedAttention, decode shape: one query token per request")
+_CHUNKED = dispatch.op(
+    "paged_attention_chunked", example=_example_chunked,
+    doc="Fused chunked-prefill + decode PagedAttention over flat token lanes")
+
+
+@jax.jit
+def _decode_jnp(q, pool_k, pool_v, block_list, block_req, block_pos,
+                seq_lens):
+    return paged_attention_opt(q, pool_k, pool_v, block_list, block_req,
+                               block_pos, seq_lens)
+
+
+# ONE jitted function under both names (shared compile cache); the ranks
+# keep the oracle/production roles distinguishable in attribution.
+_DECODE.register("ref")(_decode_jnp)
+_DECODE.register("xla")(_decode_jnp)
+
+
+@_DECODE.register("pallas")
+@jax.jit
+def _decode_pallas(q, pool_k, pool_v, block_list, block_req, block_pos,
+                   seq_lens):
     return paged_attention_pallas(q, pool_k, pool_v, block_list, block_req,
-                                  block_pos, seq_lens, interpret=interpret)
+                                  block_pos, seq_lens, interpret=False)
+
+
+@_DECODE.register("pallas_interpret")
+@jax.jit
+def _decode_interpret(q, pool_k, pool_v, block_list, block_req, block_pos,
+                      seq_lens):
+    return paged_attention_pallas(q, pool_k, pool_v, block_list, block_req,
+                                  block_pos, seq_lens, interpret=True)
+
+
+@partial(jax.jit, static_argnames=("q_chunk",))
+def _chunked_ref(q, pool_k, pool_v, block_list, block_req, block_pos,
+                 kv_lens, token_req, token_pos, *, q_chunk: int = 16):
+    del q_chunk                      # tiling is a kernel-backend concern
+    return _chunked_jnp(q, pool_k, pool_v, block_list, block_req, block_pos,
+                        kv_lens, token_req, token_pos)
+
+
+_CHUNKED.register("ref")(_chunked_ref)
+_CHUNKED.register("xla")(_chunked_ref)
+
+
+@_CHUNKED.register("pallas")
+@partial(jax.jit, static_argnames=("q_chunk",))
+def _chunked_pallas(q, pool_k, pool_v, block_list, block_req, block_pos,
+                    kv_lens, token_req, token_pos, *, q_chunk: int = 16):
+    return paged_attention_chunked_pallas(
+        q, pool_k, pool_v, block_list, block_req, block_pos, kv_lens,
+        token_req, token_pos, q_chunk=q_chunk, interpret=False)
+
+
+@_CHUNKED.register("pallas_interpret")
+@partial(jax.jit, static_argnames=("q_chunk",))
+def _chunked_interpret(q, pool_k, pool_v, block_list, block_req, block_pos,
+                       kv_lens, token_req, token_pos, *, q_chunk: int = 16):
+    return paged_attention_chunked_pallas(
+        q, pool_k, pool_v, block_list, block_req, block_pos, kv_lens,
+        token_req, token_pos, q_chunk=q_chunk, interpret=True)

@@ -1,4 +1,8 @@
-"""Public jit'd wrappers for the STREAM kernels (1D API, auto 2D tiling)."""
+"""STREAM ops (1D API, auto 2D tiling) through the unified registry.
+
+Registers ``stream_add`` / ``stream_scale`` / ``stream_triad`` implementations
+with :mod:`repro.core.dispatch`; the shared resolver owns backend selection.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -6,6 +10,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch
 from repro.kernels.stream.kernel import (
     LANES, add_pallas, scale_pallas, triad_pallas)
 from repro.kernels.stream.ref import add_ref, scale_ref, triad_ref
@@ -17,28 +22,113 @@ def _to2d(x):
     return x.reshape(n // LANES, LANES)
 
 
-@partial(jax.jit, static_argnames=("block_rows", "backend"))
-def stream_add(a, b, block_rows: int = 256, backend: str = "auto"):
-    if backend == "ref":
-        return add_ref(a, b)
-    interpret = jax.default_backend() != "tpu" or backend == "interpret"
+def _tileable(spec: dispatch.CallSpec) -> bool:
+    """Pallas tiling needs a 1D array of whole 128-lane rows."""
+    if not spec.args:
+        return True
+    a = spec.args[0]
+    return a.ndim == 1 and a.shape[0] % LANES == 0
+
+
+def _pallas_supported(spec: dispatch.CallSpec) -> bool:
+    return dispatch.on_tpu(spec) and _tileable(spec)
+
+
+def _example_add():
+    a = jnp.arange(2 * LANES, dtype=jnp.float32)
+    b = jnp.ones((2 * LANES,), jnp.float32)
+    return (a, b), {"block_rows": 1}
+
+
+def _example_scale():
+    a = jnp.arange(2 * LANES, dtype=jnp.float32)
+    return (a, 3.0), {"block_rows": 1}
+
+
+def _example_triad():
+    a = jnp.arange(2 * LANES, dtype=jnp.float32)
+    b = jnp.ones((2 * LANES,), jnp.float32)
+    return (a, b, 3.0), {"block_rows": 1}
+
+
+_ADD = dispatch.op("stream_add", example=_example_add,
+                   doc="STREAM ADD: a + b over 1D arrays")
+_SCALE = dispatch.op("stream_scale", example=_example_scale,
+                     doc="STREAM SCALE: s * a over 1D arrays")
+_TRIAD = dispatch.op("stream_triad", example=_example_triad,
+                     doc="STREAM TRIAD: s * a + b over 1D arrays")
+
+
+@_ADD.register("ref")
+@partial(jax.jit, static_argnames=("block_rows",))
+def _add_ref(a, b, block_rows: int = 256):
+    del block_rows
+    return add_ref(a, b)
+
+
+@_ADD.register("pallas", supports=_pallas_supported)
+@partial(jax.jit, static_argnames=("block_rows",))
+def _add_pallas(a, b, block_rows: int = 256):
     return add_pallas(_to2d(a), _to2d(b), block_rows=block_rows,
-                      interpret=interpret).reshape(a.shape)
+                      interpret=False).reshape(a.shape)
 
 
-@partial(jax.jit, static_argnames=("block_rows", "backend"))
-def stream_scale(a, scalar, block_rows: int = 256, backend: str = "auto"):
-    if backend == "ref":
-        return scale_ref(a, scalar)
-    interpret = jax.default_backend() != "tpu" or backend == "interpret"
+@_ADD.register("pallas_interpret", supports=_tileable)
+@partial(jax.jit, static_argnames=("block_rows",))
+def _add_interpret(a, b, block_rows: int = 256):
+    return add_pallas(_to2d(a), _to2d(b), block_rows=block_rows,
+                      interpret=True).reshape(a.shape)
+
+
+@_SCALE.register("ref")
+@partial(jax.jit, static_argnames=("block_rows",))
+def _scale_ref(a, scalar, block_rows: int = 256):
+    del block_rows
+    return scale_ref(a, scalar)
+
+
+@_SCALE.register("pallas", supports=_pallas_supported)
+@partial(jax.jit, static_argnames=("block_rows",))
+def _scale_pallas(a, scalar, block_rows: int = 256):
     return scale_pallas(_to2d(a), scalar, block_rows=block_rows,
-                        interpret=interpret).reshape(a.shape)
+                        interpret=False).reshape(a.shape)
 
 
-@partial(jax.jit, static_argnames=("block_rows", "backend"))
-def stream_triad(a, b, scalar, block_rows: int = 256, backend: str = "auto"):
-    if backend == "ref":
-        return triad_ref(a, b, scalar)
-    interpret = jax.default_backend() != "tpu" or backend == "interpret"
+@_SCALE.register("pallas_interpret", supports=_tileable)
+@partial(jax.jit, static_argnames=("block_rows",))
+def _scale_interpret(a, scalar, block_rows: int = 256):
+    return scale_pallas(_to2d(a), scalar, block_rows=block_rows,
+                        interpret=True).reshape(a.shape)
+
+
+@_TRIAD.register("ref")
+@partial(jax.jit, static_argnames=("block_rows",))
+def _triad_ref(a, b, scalar, block_rows: int = 256):
+    del block_rows
+    return triad_ref(a, b, scalar)
+
+
+@_TRIAD.register("pallas", supports=_pallas_supported)
+@partial(jax.jit, static_argnames=("block_rows",))
+def _triad_pallas(a, b, scalar, block_rows: int = 256):
     return triad_pallas(_to2d(a), _to2d(b), scalar, block_rows=block_rows,
-                        interpret=interpret).reshape(a.shape)
+                        interpret=False).reshape(a.shape)
+
+
+@_TRIAD.register("pallas_interpret", supports=_tileable)
+@partial(jax.jit, static_argnames=("block_rows",))
+def _triad_interpret(a, b, scalar, block_rows: int = 256):
+    return triad_pallas(_to2d(a), _to2d(b), scalar, block_rows=block_rows,
+                        interpret=True).reshape(a.shape)
+
+
+def stream_add(a, b, block_rows: int = 256, backend=None):
+    return _ADD(a, b, block_rows=block_rows, backend=backend)
+
+
+def stream_scale(a, scalar, block_rows: int = 256, backend=None):
+    return _SCALE(a, scalar, block_rows=block_rows, backend=backend)
+
+
+def stream_triad(a, b, scalar, block_rows: int = 256, backend=None):
+    return _TRIAD(a, b, scalar, block_rows=block_rows, backend=backend)

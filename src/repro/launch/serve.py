@@ -22,6 +22,11 @@ def main() -> None:
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--block-size", type=int, default=16)
     p.add_argument("--reduced", action="store_true")
+    p.add_argument("--backend", default="auto",
+                   help="operator-backend preference for the paged-attention "
+                        "hot path (auto | ref | xla | pallas | "
+                        "pallas_interpret); resolved through "
+                        "repro.core.dispatch and reported in metrics")
     args = p.parse_args()
 
     cfg = get_config(args.arch)
@@ -30,7 +35,7 @@ def main() -> None:
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(0))
     serve = ServeConfig(model=args.arch, kv_block_size=args.block_size,
-                        max_batch=args.requests)
+                        max_batch=args.requests, backend=args.backend)
     total_blocks = args.requests * (
         -(-(args.prompt_len + args.max_new) // args.block_size) + 1)
     engine = ServingEngine(model, params, cfg, serve,
@@ -48,7 +53,8 @@ def main() -> None:
     dt = time.time() - t0
     m = engine.metrics()
     print(f"served {m['finished']} requests, {m['output_tokens']} tokens "
-          f"in {dt:.2f}s ({m['output_tokens']/dt:.1f} tok/s)")
+          f"in {dt:.2f}s ({m['output_tokens']/dt:.1f} tok/s) "
+          f"[backend={m['backend']}]")
     print(f"TTFT p50 {m['p50_ttft_s']*1e3:.1f} / p99 {m['p99_ttft_s']*1e3:.1f} ms  "
           f"TPOT p50 {m['p50_tpot_s']*1e3:.1f} / p99 {m['p99_tpot_s']*1e3:.1f} ms")
     print(f"preemptions {m['preemptions']}  "

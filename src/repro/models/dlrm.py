@@ -3,6 +3,8 @@ embedding technique as a first-class switch (`use_batched=True` default;
 False = SingleTable baseline, per-table launches)."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -27,7 +29,7 @@ def _mlp_apply(layers, x, final_act=False):
 
 class DLRM:
     def __init__(self, cfg: DLRMConfig, *, use_batched: bool = True,
-                 backend: str = "ref"):
+                 backend: Optional[str] = None):
         self.cfg = cfg
         self.use_batched = use_batched
         self.backend = backend

@@ -224,13 +224,17 @@ class TransformerLM:
         return logits, new_cache
 
     def decode_step_paged(self, params, pools, lists, tokens, *,
-                          axis: Optional[str] = None):
+                          axis: Optional[str] = None,
+                          attn_backend: Optional[str] = None):
         """Paged decode (the paper's technique).
 
         pools: {"k","v"} (L, NB, BS, KV, HD); lists: dict with block_list /
         block_req / block_pos (flat BlockList), seq_lens (B,), slots (B,2).
         ``axis`` set ⇒ running inside shard_map with the pool sequence-sharded
-        over that mesh axis (flash-decoding combine).
+        over that mesh axis (flash-decoding combine).  ``attn_backend``
+        routes the attention op through the unified registry (resolved
+        host-side at trace time; the sharded path is collective-combined and
+        stays on its shard_map implementation).
         """
         cfg = self.cfg
         a = cfg.attention
@@ -246,9 +250,9 @@ class TransformerLM:
             pk = paged_kv.append_to_pool(pk, k_new[:, 0], lists["slots"])
             pv = paged_kv.append_to_pool(pv, v_new[:, 0], lists["slots"])
             if axis is None:
-                ctx = attention_api.paged_attention_opt(
+                ctx = attention_api.paged_attention(
                     q[:, 0], pk, pv, lists["block_list"], lists["block_req"],
-                    lists["block_pos"], seq_lens + 1)
+                    lists["block_pos"], seq_lens + 1, backend=attn_backend)
             else:
                 ctx = attention_api.paged_attention_sharded(
                     q[:, 0], pk, pv, lists["block_list"], lists["block_req"],
@@ -271,7 +275,8 @@ class TransformerLM:
         logits = unembed(params.get("head", params["embed"]), x)[:, 0]
         return logits, {"k": pk, "v": pv}
 
-    def decode_tokens_paged(self, params, pools, lists, tokens):
+    def decode_tokens_paged(self, params, pools, lists, tokens, *,
+                            attn_backend: Optional[str] = None):
         """Fused chunked-prefill + decode over flat token lanes.
 
         The serving engine's single compiled program: each lane of ``tokens``
@@ -304,10 +309,10 @@ class TransformerLM:
             # Padding lanes carry out-of-bounds slots -> scatter drops them.
             pk = paged_kv.append_to_pool(pk, k_new[:, 0], lists["slots"])
             pv = paged_kv.append_to_pool(pv, v_new[:, 0], lists["slots"])
-            ctx = attention_api.paged_attention_chunked(
+            ctx = attention_api.paged_attention_chunked_op(
                 q[:, 0], pk, pv, lists["block_list"], lists["block_req"],
                 lists["block_pos"], lists["kv_lens"], lists["token_req"],
-                token_pos)
+                token_pos, backend=attn_backend)
             x = x + jnp.einsum("be,ed->bd", ctx.reshape(x.shape[0], -1),
                                lp["attn"]["wo"])
             h = rmsnorm(lp["ln2"], x[:, None], cfg.norm_eps)

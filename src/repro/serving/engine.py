@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, ServeConfig
+from repro.core import dispatch
 from repro.core.paged_kv import (
     BlockAllocator, copy_pool_blocks, make_pool)
 from repro.serving import sampling as sampling_lib
@@ -82,13 +83,21 @@ class ServingEngine:
             token_budget=token_budget or serve.prefill_chunk)
         self._free_slots = self.scheduler.free_slots    # shared list object
         self.finished: List[Request] = []
-        self._metrics = EngineMetrics()
+        # Resolve the hot-path attention backend ONCE through the unified
+        # registry (ServeConfig.backend is the config-precedence level; env /
+        # force_backend scopes still win, explicit args would win over both).
+        # The resolved name is pinned for every step so perf numbers are
+        # attributable to one implementation, and exposed via metrics().
+        self.attn_backend = dispatch.resolve(
+            "paged_attention_chunked", config=serve.backend).backend
+        self._metrics = EngineMetrics(backend=self.attn_backend)
         self._key = jax.random.PRNGKey(seed)
         self._step_count = 0
+        attn_backend = self.attn_backend
 
         def fused(params, pools, lists, tokens, key, temps, top_ks, top_ps):
-            logits, pools = model.decode_tokens_paged(params, pools, lists,
-                                                      tokens)
+            logits, pools = model.decode_tokens_paged(
+                params, pools, lists, tokens, attn_backend=attn_backend)
             nxt = sampling_lib.sample_batched(key, logits, temps, top_ks,
                                               top_ps)
             return nxt, pools
@@ -124,15 +133,22 @@ class ServingEngine:
         """Render a StepPlan into the fused program's input arrays."""
         alloc, B = self.alloc, self.B
         T = _bucket(plan.num_tokens)
+        # Slot-keyed arrays (sampling knobs, kv lens, logit lanes) are sized
+        # to a power-of-two bucket of the ACTIVE slots, not max_batch — the
+        # same bucketing as token lanes, so a lightly loaded engine samples
+        # over 8 lanes instead of max_batch. Slots are allocated low-first,
+        # so max(slot)+1 tracks the live batch closely.
+        reqs = list(plan.decode) + [req for req, _ in plan.prefill]
+        Bs = min(_bucket(1 + max(req.slot for req in reqs)), B)
         tokens = np.zeros((T,), np.int32)
-        token_req = np.full((T,), B, np.int32)          # B == padding lane
+        token_req = np.full((T,), Bs, np.int32)         # Bs == padding lane
         token_pos = np.zeros((T,), np.int32)
         slots = np.full((T, 2), (self.max_total, 0), np.int32)  # dropped write
-        last_lane = np.zeros((B,), np.int32)
-        kv_lens = np.zeros((B,), np.int32)
-        temps = np.zeros((B,), np.float32)
-        top_ks = np.zeros((B,), np.int32)
-        top_ps = np.ones((B,), np.float32)
+        last_lane = np.zeros((Bs,), np.int32)
+        kv_lens = np.zeros((Bs,), np.int32)
+        temps = np.zeros((Bs,), np.float32)
+        top_ks = np.zeros((Bs,), np.int32)
+        top_ps = np.ones((Bs,), np.float32)
         lane = 0
         committed: List[tuple] = []                     # (req, n_tokens)
         for req in plan.decode:
@@ -172,7 +188,7 @@ class ServingEngine:
         cap = (self.max_total if needed <= self.max_total
                else _bucket(needed, lo=self.max_total))
         bl = np.zeros((cap,), np.int32)
-        br = np.full((cap,), B, np.int32)
+        br = np.full((cap,), Bs, np.int32)
         bp = np.zeros((cap,), np.int32)
         cursor = 0
         for req, _ in committed:

@@ -52,6 +52,9 @@ class EngineMetrics:
     output_tokens: int = 0
     first_arrival: Optional[float] = None
     last_done: Optional[float] = None
+    # Registry-resolved attention backend the run executed with (see
+    # repro.core.dispatch) — perf numbers are attributable to ONE impl.
+    backend: str = ""
 
     def record_finished(self, *, ttft: Optional[float],
                         tpot: Optional[float], num_output_tokens: int,
@@ -73,9 +76,10 @@ class EngineMetrics:
             return 0.0
         return max(self.last_done - self.first_arrival, 0.0)
 
-    def summary(self) -> Dict[str, float]:
+    def summary(self) -> Dict[str, object]:
         dt = self.elapsed_s
         return {
+            "backend": self.backend,
             "finished": self.finished,
             "output_tokens": self.output_tokens,
             "mean_ttft_s": self.ttft.mean,

@@ -8,31 +8,41 @@ all-reduces). The paged shard_map path (the paper's technique) lives in
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core import dispatch
 
-def make_prefill_step(model):
+
+def make_prefill_step(model, *, backend: Optional[str] = None):
     """(params, batch) -> last-position logits (B, V).
 
     Full-sequence forward; only the final position is unembedded so prefill
     never materializes (B, S, V) logits (a 637 GB tensor for 32k×152k).
+    ``backend`` scopes any registry-dispatched ops resolved during the
+    trace. NOTE: today the dense GSPMD forward/decode paths are pure jnp
+    (no registry ops), so this is forward-compatibility plumbing — the
+    paged engine path is the one that dispatches through the registry.
     """
     def step(params, batch):
-        logits, _ = model.forward(params, batch["tokens"],
-                                  batch.get("extra_embeds"), last_only=True)
+        with dispatch.force_backend(backend):
+            logits, _ = model.forward(params, batch["tokens"],
+                                      batch.get("extra_embeds"),
+                                      last_only=True)
         return logits[:, 0]
     return step
 
 
-def make_serve_step(model, *, greedy: bool = True):
+def make_serve_step(model, *, greedy: bool = True,
+                    backend: Optional[str] = None):
     """(params, cache, tokens) -> (next_tokens, cache). One decode step."""
     def step(params, cache, tokens):
-        logits, cache = model.decode_step(params, cache, tokens)
+        with dispatch.force_backend(backend):
+            logits, cache = model.decode_step(params, cache, tokens)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return nxt, cache
     return step

@@ -88,13 +88,16 @@ def test_compressed_psum_with_error_feedback():
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.distributed.compression import compressed_psum
+    shard_map = getattr(jax, "shard_map", None)
+    if shard_map is None:  # pre-0.5 jax
+        from jax.experimental.shard_map import shard_map
     mesh = jax.make_mesh((8,), ("x",))
     g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
 
     def f(g, r):
         return compressed_psum(g, r, "x")
 
-    out, res = jax.jit(jax.shard_map(f, mesh=mesh,
+    out, res = jax.jit(shard_map(f, mesh=mesh,
         in_specs=(P("x"), P("x")), out_specs=(P("x"), P("x"))))(
         g, jnp.zeros_like(g))
     ref = jnp.mean(g, axis=0)
@@ -117,6 +120,9 @@ def test_pipeline_matches_reference():
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.distributed.pipeline import bubble_fraction, pipeline_forward
+    shard_map = getattr(jax, "shard_map", None)
+    if shard_map is None:  # pre-0.5 jax
+        from jax.experimental.shard_map import shard_map
     S, M, mb, D = 4, 6, 2, 8
     mesh = jax.make_mesh((S,), ("pp",))
     ws = jax.random.normal(jax.random.PRNGKey(0), (S, D, D)) * 0.3
@@ -129,7 +135,7 @@ def test_pipeline_matches_reference():
         return pipeline_forward(layer_fn, ws_stage[0], x_all,
                                 axis="pp", num_stages=S)
 
-    out = jax.jit(jax.shard_map(run, mesh=mesh,
+    out = jax.jit(shard_map(run, mesh=mesh,
         in_specs=(P("pp"), P()), out_specs=P()))(ws, x)
     # reference: apply all stages sequentially
     ref = x

@@ -64,6 +64,50 @@ def test_paged_attention_kernel_sweep(NB, BS, KV, hd, H, B, lens):
                                rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.parametrize("NB,BS,KV,hd,H,lens,chunks,q_chunk", [
+    (24, 8, 2, 32, 8, [13, 8, 21], [1, 4, 2], 4),
+    (40, 16, 4, 32, 8, [40, 1, 64, 17], [3, 1, 5, 2], 8),
+    (16, 8, 1, 16, 4, [8, 16], [2, 7], 3),      # q_chunk not dividing T
+])
+def test_paged_attention_chunked_kernel_sweep(NB, BS, KV, hd, H, lens,
+                                              chunks, q_chunk):
+    """Query-chunk grid kernel vs the jnp chunked-prefill oracle: mixed
+    decode/prefill lanes, shuffled pool blocks, trailing padding lanes."""
+    from repro.core.attention_api import paged_attention_chunked
+    from repro.kernels.paged_attention.kernel import (
+        paged_attention_chunked_pallas)
+    B = len(lens)
+    al = BlockAllocator(num_blocks=NB, block_size=BS)
+    al._free = np.random.RandomState(1).permutation(NB).tolist()
+    for r, L in enumerate(lens):
+        al.allocate(r, L)
+    tot = sum(-(-L // BS) for L in lens) + 3
+    bl, br, bp, _ = [jnp.asarray(x) for x in
+                     al.build_block_list(list(range(B)), max_total=tot)]
+    kv_lens = jnp.asarray(lens, jnp.int32)
+    treq, tpos = [], []
+    for r, c in enumerate(chunks):                # last c positions of req r
+        treq += [r] * c
+        tpos += list(range(lens[r] - c, lens[r]))
+    treq += [B, B]                                # two padding lanes
+    tpos += [0, 0]
+    T = len(treq)
+    ks = jax.random.split(KEY, 3)
+    pk = jax.random.normal(ks[0], (NB, BS, KV, hd), jnp.float32)
+    pv = jax.random.normal(ks[1], (NB, BS, KV, hd), jnp.float32)
+    q = jax.random.normal(ks[2], (T, H, hd), jnp.float32)
+    treq = jnp.asarray(treq, jnp.int32)
+    tpos = jnp.asarray(tpos, jnp.int32)
+    out = paged_attention_chunked_pallas(q, pk, pv, bl, br, bp, kv_lens,
+                                         treq, tpos, q_chunk=q_chunk,
+                                         interpret=True)
+    ref = paged_attention_chunked(q, pk, pv, bl, br, bp, kv_lens, treq, tpos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+    assert np.all(np.isfinite(np.asarray(out)[-2:])), "pad lanes must be 0"
+    np.testing.assert_allclose(np.asarray(out)[-2:], 0.0)
+
+
 @pytest.mark.parametrize("R,D,B,T,L,dtype", [
     (64, 128, 3, 4, 5, jnp.float32),
     (32, 256, 2, 10, 20, jnp.float32),
@@ -95,14 +139,18 @@ def test_stream_sweep(rows, block_rows, dtype):
     b = jax.random.normal(jax.random.PRNGKey(1), (n,), dtype)
     tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
         rtol=1e-6, atol=1e-5)
+    # explicit backend: the sweep must exercise the kernel, not auto's jnp
     np.testing.assert_allclose(
-        np.asarray(stream_add(a, b, block_rows), np.float32),
+        np.asarray(stream_add(a, b, block_rows, backend="pallas_interpret"),
+                   np.float32),
         np.asarray(a + b, np.float32), **tol)
     np.testing.assert_allclose(
-        np.asarray(stream_scale(a, 3.0, block_rows), np.float32),
+        np.asarray(stream_scale(a, 3.0, block_rows,
+                                backend="pallas_interpret"), np.float32),
         np.asarray(3.0 * a, np.float32), **tol)
     np.testing.assert_allclose(
-        np.asarray(stream_triad(a, b, 3.0, block_rows), np.float32),
+        np.asarray(stream_triad(a, b, 3.0, block_rows,
+                                backend="pallas_interpret"), np.float32),
         np.asarray(3.0 * a + b, np.float32), **tol)
 
 
@@ -111,10 +159,11 @@ def test_gather_scatter_sweep(R, D, N):
     from repro.kernels.gather_scatter.ops import vector_gather, vector_scatter
     tbl = jax.random.normal(KEY, (R, D), jnp.float32)
     ids = jax.random.randint(KEY, (N,), 0, R)
-    np.testing.assert_allclose(np.asarray(vector_gather(tbl, ids)),
-                               np.asarray(jnp.take(tbl, ids, 0)))
+    np.testing.assert_allclose(
+        np.asarray(vector_gather(tbl, ids, backend="pallas_interpret")),
+        np.asarray(jnp.take(tbl, ids, 0)))
     ids_u = jnp.asarray(np.random.RandomState(0).permutation(R)[:N])
     src = jax.random.normal(jax.random.PRNGKey(2), (N, D), jnp.float32)
-    out = vector_scatter(tbl, ids_u, src)
+    out = vector_scatter(tbl, ids_u, src, backend="pallas_interpret")
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(tbl.at[ids_u].set(src)))

@@ -2,7 +2,15 @@
 # Fast CI tier: everything except tests marked `slow` (Pallas interpret-mode
 # kernel sweeps and other multi-minute paths). Target: < 2 minutes on CPU.
 # Full tier remains `PYTHONPATH=src python -m pytest -x -q`.
+#
+# REPRO_BACKEND=ref pins every registry-dispatched op (repro.core.dispatch)
+# to the jnp reference implementations, so the fast tier is deterministic
+# across hosts; tests that probe resolver precedence clear the variable
+# themselves, and the backend-parity suite's fast tier (the non-slow part of
+# tests/test_backend_parity.py) still exercises every registered backend via
+# explicit arguments, which outrank the env pin.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+REPRO_BACKEND=ref \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -q -m "not slow" "$@"
