@@ -10,9 +10,17 @@ preemption):
     rate and fresh-block allocations vs independent prompts;
   * ``llm_preempt_*``  memory-pressure preemption (pool sized below the
     working set) — reports preemption count and completion.
+
+Every engine row carries the resolved serving-policy triple
+(``policies=admission/preemption/eviction``), so a ``benchmarks/run.py
+--policy`` sweep attributes each scenario to the combination that ran it.
+Setting ``REPRO_BENCH_SMOKE=1`` restricts the run to the three scenario
+sweeps at minimum sizes — the deterministic policy-regression smoke that
+``tools/ci_fast.sh`` drives.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -39,32 +47,37 @@ def _emit_engine(tag: str, engine, dt: float) -> None:
          f"tpot_p99_ms={m['p99_tpot_s']*1e3:.1f};"
          f"tok_s={m['throughput_tok_s']:.1f};"
          f"preempt={m['preemptions']};"
+         f"finished={m['finished']};"
          f"prefix_hit_rate={m['prefix_hit_rate']:.2f};"
-         f"backend={m['backend']}")
+         f"backend={m['backend']};"
+         f"policies={m['admission_policy']}/{m['preemption_policy']}/"
+         f"{m['eviction_policy']}")
 
 
 def run(quick: bool = True) -> None:
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
     cfg = get_config("smollm-360m").reduced(dtype="float32")
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(0))
 
-    # prefill vs decode latency breakdown (Fig 12b)
-    import jax.numpy as jnp
-    B, in_len = (2, 64) if quick else (16, 100)
-    toks = jax.random.randint(jax.random.PRNGKey(1), (B, in_len), 0,
-                              cfg.vocab_size)
-    prefill = jax.jit(lambda p, t: model.forward(p, t, last_only=True)[0])
-    us_prefill = time_fn(prefill, params, toks, iters=3)
-    cache = model.init_decode_cache(B, in_len + 64)
-    step = jax.jit(model.decode_step)
-    one = jnp.zeros((B,), jnp.int32)
-    us_decode = time_fn(lambda p, c, t: step(p, c, t)[0], params, cache, one,
-                        iters=3)
-    for out_len in [25, 100, 400]:
-        total = us_prefill + out_len * us_decode
-        emit(f"llm_breakdown_out{out_len}", total,
-             f"prefill_frac={us_prefill/total:.2f};"
-             f"decode_frac={out_len*us_decode/total:.2f}")
+    if not smoke:
+        # prefill vs decode latency breakdown (Fig 12b)
+        import jax.numpy as jnp
+        B, in_len = (2, 64) if quick else (16, 100)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, in_len), 0,
+                                  cfg.vocab_size)
+        prefill = jax.jit(lambda p, t: model.forward(p, t, last_only=True)[0])
+        us_prefill = time_fn(prefill, params, toks, iters=3)
+        cache = model.init_decode_cache(B, in_len + 64)
+        step = jax.jit(model.decode_step)
+        one = jnp.zeros((B,), jnp.int32)
+        us_decode = time_fn(lambda p, c, t: step(p, c, t)[0], params, cache,
+                            one, iters=3)
+        for out_len in [25, 100, 400]:
+            total = us_prefill + out_len * us_decode
+            emit(f"llm_breakdown_out{out_len}", total,
+                 f"prefill_frac={us_prefill/total:.2f};"
+                 f"decode_frac={out_len*us_decode/total:.2f}")
 
     rng = np.random.default_rng(0)
 
@@ -75,18 +88,20 @@ def run(quick: bool = True) -> None:
                                 (int(rng.integers(4, 12)),), dtype=np.int32),
             max_new_tokens=int(rng.integers(3, 8))) for i in range(n)]
 
-    # continuous batching TTFT/TPOT with variable lengths (Fig 17 d/e)
-    n_req = 3 if quick else 16
-    for max_batch in ([2] if quick else [2, 8, 32]):
-        serve = ServeConfig(model=cfg.name, kv_block_size=8,
-                            max_batch=max_batch)
-        engine = ServingEngine(model, params, cfg, serve, num_blocks=256)
-        for r in var_requests(n_req):
-            engine.submit(r)
-        _emit_engine(f"llm_engine_maxbatch{max_batch}", engine, _drain(engine))
+    if not smoke:
+        # continuous batching TTFT/TPOT with variable lengths (Fig 17 d/e)
+        n_req = 3 if quick else 16
+        for max_batch in ([2] if quick else [2, 8, 32]):
+            serve = ServeConfig(model=cfg.name, kv_block_size=8,
+                                max_batch=max_batch)
+            engine = ServingEngine(model, params, cfg, serve, num_blocks=256)
+            for r in var_requests(n_req):
+                engine.submit(r)
+            _emit_engine(f"llm_engine_maxbatch{max_batch}", engine,
+                         _drain(engine))
 
     # bursty arrivals: the whole wave lands at t0 and queues behind max_batch
-    n_burst = 6 if quick else 32
+    n_burst = 3 if smoke else (6 if quick else 32)
     serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=2)
     engine = ServingEngine(model, params, cfg, serve, num_blocks=256)
     for r in var_requests(n_burst):
@@ -94,7 +109,7 @@ def run(quick: bool = True) -> None:
     _emit_engine(f"llm_burst_n{n_burst}", engine, _drain(engine))
 
     # shared-prefix workload: common system prompt, prefix cache reuses blocks
-    n_pfx = 6 if quick else 24
+    n_pfx = 3 if smoke else (6 if quick else 24)
     plen = 16
     prefix = rng.integers(0, cfg.vocab_size, (plen,), dtype=np.int32)
     serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=2)
@@ -132,4 +147,6 @@ def run(quick: bool = True) -> None:
     m = engine.metrics()
     emit("llm_preempt_pressure", dt * 1e6,
          f"preemptions={m['preemptions']};finished={m['finished']};"
-         f"tok_s={m['throughput_tok_s']:.1f}")
+         f"tok_s={m['throughput_tok_s']:.1f};"
+         f"policies={m['admission_policy']}/{m['preemption_policy']}/"
+         f"{m['eviction_policy']}")

@@ -10,6 +10,16 @@ actually resolved — the paper-style microbenchmark comparison across
 software stacks, attributable to the implementation that really ran
 (an unsupported preference degrades to capability-ranked auto).
 
+``--policy adm/pre/evi,...`` sweeps serving-policy triples the same way:
+each triple is scoped under ``repro.serving.policy.force_policies`` so every
+serving engine built inside the pass (the bursty / shared-prefix /
+memory-pressure scenarios of ``llm_e2e``) runs that
+admission/preemption/eviction combination; rows and JSON records carry the
+resolved triple.  An axis left empty (``//refcount-aware``) keeps its
+default.  Only modules in ``POLICY_SENSITIVE`` (those that build serving
+engines) repeat per triple; policy-blind modules run once, under the first
+triple — their numbers cannot depend on the policy choice.
+
 | module                 | paper figure/table |
 |------------------------|--------------------|
 | gemm_roofline          | Fig 4, 5, 7        |
@@ -31,6 +41,7 @@ import traceback
 
 from benchmarks import common
 from repro.core import dispatch
+from repro.serving import policy as policy_lib
 
 MODULES = [
     "gemm_roofline",
@@ -43,6 +54,45 @@ MODULES = [
     "llm_e2e",
 ]
 
+# Modules that build serving engines — the only ones whose numbers can
+# depend on the serving-policy triple. A --policy sweep re-runs just these
+# per triple; everything else runs once (under the first triple's scope).
+POLICY_SENSITIVE = {"llm_e2e"}
+
+
+def _parse_policy_triples(arg):
+    """``adm/pre/evi,adm/pre/evi`` -> list of per-axis override dicts.
+
+    Names are validated here so a typo fails as one usage error before the
+    sweep starts, not as a traceback per module."""
+    triples = []
+    for spec in arg.split(","):
+        parts = spec.split("/")
+        if len(parts) != 3:
+            raise SystemExit(
+                f"--policy: expected admission/preemption/eviction, "
+                f"got {spec!r}")
+        triple = {}
+        for axis, name in zip(policy_lib.AXES, parts):
+            if name:
+                try:
+                    policy_lib.get(axis, name)
+                except policy_lib.UnknownPolicyError as e:
+                    raise SystemExit(f"--policy: {e}") from None
+            triple[axis] = name or None
+        triples.append(triple)
+    return triples
+
+
+def _resolved_triple(plog):
+    """Attribute one policy triple to a pass from its resolution log."""
+    by_axis = {}
+    for axis, name in plog:
+        by_axis.setdefault(axis, set()).add(name)
+    return "/".join(
+        "/".join(sorted(by_axis[a])) if a in by_axis else policy_lib.DEFAULTS[a]
+        for a in policy_lib.AXES)
+
 
 def main() -> None:
     p = argparse.ArgumentParser()
@@ -52,38 +102,65 @@ def main() -> None:
                    help="comma-separated backend sweep (e.g. "
                         "ref,xla,pallas_interpret); each backend scopes the "
                         "whole run via repro.core.dispatch.force_backend")
+    p.add_argument("--policy", default=None,
+                   help="comma-separated serving-policy triples "
+                        "admission/preemption/eviction (e.g. "
+                        "fcfs/latest-arrival/lru,priority/most-blocks/"
+                        "hit-rate); each triple scopes the run via "
+                        "repro.serving.policy.force_policies")
     p.add_argument("--json", default=None,
-                   help="write per-backend result rows (+ resolved (op, "
-                        "backend) pairs) to this path")
+                   help="write per-backend/per-policy result rows (+ "
+                        "resolved (op, backend) and (axis, policy) pairs) "
+                        "to this path")
     args = p.parse_args()
     mods = args.only.split(",") if args.only else MODULES
     backends = args.backend.split(",") if args.backend else [None]
+    policies = (_parse_policy_triples(args.policy) if args.policy
+                else [None])
     print("name,us_per_call,derived")
     failures = 0
     results = []
     for b in backends:
         if b is not None:
             print(f"# backend sweep: {b}", file=sys.stderr)
-        for m in mods:
-            mod = __import__(f"benchmarks.{m}", fromlist=["run"])
-            t0 = time.time()
-            common.RECORDS.clear()
-            log = []
-            try:
-                with dispatch.force_backend(b), \
-                        dispatch.record_resolutions() as log:
-                    mod.run(quick=not args.full)
-            except Exception:
-                traceback.print_exc()
-                failures += 1
-            results.append({
-                "module": m,
-                "requested_backend": b or "auto",
-                "resolved": sorted({f"{op}={bk}" for op, bk in log}),
-                "rows": list(common.RECORDS),
-            })
-            print(f"# {m} done in {time.time()-t0:.1f}s"
-                  + (f" [backend={b}]" if b else ""), file=sys.stderr)
+        for pi, pol in enumerate(policies):
+            pol_kwargs = {a: (pol or {}).get(a) for a in policy_lib.AXES}
+            pol_str = ("/".join(pol_kwargs[a] or policy_lib.DEFAULTS[a]
+                                for a in policy_lib.AXES)
+                       if pol is not None else None)
+            if pol_str is not None:
+                print(f"# policy sweep: {pol_str}", file=sys.stderr)
+            for m in mods:
+                if pol is not None and pi > 0 and m not in POLICY_SENSITIVE:
+                    continue               # policy-blind: one pass is enough
+                mod = __import__(f"benchmarks.{m}", fromlist=["run"])
+                t0 = time.time()
+                common.RECORDS.clear()
+                log, plog = [], []
+                try:
+                    with dispatch.force_backend(b), \
+                            dispatch.record_resolutions() as log, \
+                            policy_lib.force_policies(**pol_kwargs), \
+                            policy_lib.record_resolutions() as plog:
+                        mod.run(quick=not args.full)
+                except Exception:
+                    traceback.print_exc()
+                    failures += 1
+                resolved_pol = _resolved_triple(plog) if plog else None
+                results.append({
+                    "module": m,
+                    "requested_backend": b or "auto",
+                    "requested_policy": pol_str or "default",
+                    "resolved": sorted({f"{op}={bk}" for op, bk in log}),
+                    "resolved_policies": sorted(
+                        {f"{ax}={nm}" for ax, nm in plog}),
+                    "rows": [dict(r, policy=resolved_pol) if resolved_pol
+                             else dict(r) for r in common.RECORDS],
+                })
+                print(f"# {m} done in {time.time()-t0:.1f}s"
+                      + (f" [backend={b}]" if b else "")
+                      + (f" [policy={pol_str}]" if pol_str else ""),
+                      file=sys.stderr)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2)

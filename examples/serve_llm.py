@@ -1,6 +1,9 @@
 """End-to-end LLM serving with the scheduler-driven stack: chunked prefill
 fused into the decode step, prefix-cached paged KV (BlockList
-PagedAttention), per-request sampling, preemption under block pressure.
+PagedAttention), per-request sampling, preemption under block pressure —
+running a non-default serving-policy triple (priority admission,
+fewest-remaining-tokens preemption, hit-rate eviction) from the policy
+registry (`repro.serving.policy`).
 
     PYTHONPATH=src python examples/serve_llm.py
 """
@@ -18,13 +21,18 @@ def main() -> None:
     cfg = get_config("qwen2-1.5b").reduced(dtype="float32")
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(0))
-    serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=4)
+    serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=4,
+                        admission="priority",
+                        preemption="fewest-remaining-tokens",
+                        eviction="hit-rate")
     engine = ServingEngine(model, params, cfg, serve, num_blocks=128)
 
     rng = np.random.default_rng(0)
     # Dynamic-Sonnet-style mix: a shared "system prompt" prefix (prefix-cache
-    # hits after the first wave) + per-request tails of variable length, and
-    # a mix of greedy and stochastic sampling policies.
+    # hits after the first wave) + per-request tails of variable length, a
+    # mix of greedy and stochastic sampling policies, and interactive
+    # requests marked high-priority so the admission policy reorders the
+    # queue behind max_batch.
     system_prompt = rng.integers(0, cfg.vocab_size, (16,), dtype=np.int32)
     for i in range(8):
         tail = rng.integers(0, cfg.vocab_size,
@@ -35,6 +43,7 @@ def main() -> None:
             req_id=i,
             prompt=np.concatenate([system_prompt, tail]),
             max_new_tokens=int(rng.integers(4, 10)),
+            priority=1 if i >= 6 else 0,        # late VIPs jump the queue
             sampling=sampling))
     t0 = time.time()
     engine.run_until_done()
@@ -47,9 +56,13 @@ def main() -> None:
     print(f"prefix hit rate {m['prefix_hit_rate']:.2f} "
           f"({m['prefix_hits']} hits), preemptions {m['preemptions']}, "
           f"CoW copies {m['cow_copies']}")
+    print(f"policies {m['admission_policy']}/{m['preemption_policy']}/"
+          f"{m['eviction_policy']}  counters {m['policy_counters']}")
     print(f"pool leak check: {m['blocks_free']} == 128")
     assert m["blocks_free"] == 128
     assert m["prefix_hits"] > 0
+    assert m["admission_policy"] == "priority"
+    assert m["policy_counters"]["admission.admitted"] == 8
 
 
 if __name__ == "__main__":

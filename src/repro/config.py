@@ -333,6 +333,12 @@ class ServeConfig:
     # force_backend scopes and REPRO_BACKEND; falls back to capability-ranked
     # auto when the named backend can't serve this platform/call).
     backend: str = "auto"          # auto | ref | xla | pallas | pallas_interpret
+    # Serving-policy preferences (the config level of repro.serving.policy
+    # precedence: overridden by explicit ctor args and force_policies scopes;
+    # names are validated strictly — there is no capability fallback).
+    admission: str = "fcfs"        # fcfs | priority | deadline-slo
+    preemption: str = "latest-arrival"   # | fewest-remaining-tokens | most-blocks
+    eviction: str = "lru"          # lru | hit-rate | refcount-aware
     parallel: ParallelConfig = field(default_factory=ParallelConfig)
     seed: int = 0
 

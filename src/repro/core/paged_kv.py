@@ -14,6 +14,14 @@ tricks:
     private copy and records a (src, dst) pair for the engine to apply on the
     device pool via :func:`copy_pool_blocks`.
 
+Which cached-free block is sacrificed when the pool needs a fresh one is NOT
+decided here: it flows through a registered eviction policy
+(``repro.serving.policy``, axis ``eviction``).  The allocator keeps per-block
+:class:`BlockStats` (lifetime prefix-cache hits, peak refcount) so scorers
+like ``hit-rate`` and ``refcount-aware`` have evidence to rank on; the
+default resolves to the registered ``lru`` policy, byte-for-byte the old
+oldest-freed-first behaviour.
+
 Sequence state is mutated ONLY through the public API — ``allocate`` /
 ``allocate_prefix``, ``reserve_tokens`` + ``commit_tokens``, ``rewind`` /
 ``truncate``, ``free`` — so engines never poke ``_lens`` directly.
@@ -33,7 +41,7 @@ from __future__ import annotations
 import hashlib
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -41,6 +49,19 @@ import numpy as np
 
 class OutOfBlocksError(RuntimeError):
     pass
+
+
+@dataclass
+class BlockStats:
+    """Per-physical-block evidence for eviction scorers.
+
+    ``hits``      lifetime prefix-cache adoptions of this block's content;
+    ``peak_ref``  highest simultaneous refcount the block ever reached.
+    Reset whenever the block is handed out for fresh content.
+    """
+
+    hits: int = 0
+    peak_ref: int = 1
 
 
 def _prefix_key(tokens: np.ndarray, n_tokens: int) -> bytes:
@@ -56,6 +77,11 @@ class BlockAllocator:
     num_blocks: int
     block_size: int
     num_shards: int = 1          # model-axis shards for round-robin placement
+    # Cached-free eviction scorer: an ``EvictionPolicy`` from
+    # ``repro.serving.policy`` (duck-typed here — core stays importable
+    # without the serving layer; the registered default is resolved lazily on
+    # first eviction).
+    eviction_policy: Optional[Any] = None
     _free: List[int] = field(default_factory=list)
     _tables: Dict[int, List[int]] = field(default_factory=dict)
     _lens: Dict[int, int] = field(default_factory=dict)
@@ -64,8 +90,11 @@ class BlockAllocator:
     # prefix cache: content hash <-> block (only FULL prompt blocks)
     _hash_of: Dict[int, bytes] = field(default_factory=dict)
     _block_of: Dict[bytes, int] = field(default_factory=dict)
-    # refcount-0 blocks whose content is retained for prefix reuse (LRU)
+    # refcount-0 blocks whose content is retained for prefix reuse, in
+    # freed order (oldest first — the candidate order eviction scorers see)
     _cached_free: "OrderedDict[int, None]" = field(default_factory=OrderedDict)
+    # block -> BlockStats, evidence for eviction scorers
+    _stats: Dict[int, BlockStats] = field(default_factory=dict)
     # (src, dst) copy-on-write pairs awaiting a device-pool copy
     pending_copies: List[Tuple[int, int]] = field(default_factory=list)
     # counters (surfaced by ServingEngine.metrics)
@@ -79,18 +108,38 @@ class BlockAllocator:
         self._free = list(range(self.num_blocks - 1, -1, -1))
 
     # -- block bookkeeping --------------------------------------------------
+    def _eviction(self) -> Any:
+        """The eviction scorer, lazily resolved to the registered default.
+
+        The import is deferred so ``repro.core`` never depends on the serving
+        layer at module load (``repro.serving.policy`` imports this module).
+        """
+        if self.eviction_policy is None:
+            from repro.serving.policy import EVICTION, resolve
+            self.eviction_policy = resolve(EVICTION)
+        return self.eviction_policy
+
     def _pop_block(self) -> int:
-        """Take a block: plain free list first, then evict cached-free LRU."""
+        """Take a block: plain free list first, then evict a cached-free
+        block chosen by the registered eviction policy."""
         if self._free:
-            self.blocks_allocated += 1
-            return self._free.pop()
-        if self._cached_free:
-            blk, _ = self._cached_free.popitem(last=False)
+            blk = self._free.pop()
+        elif self._cached_free:
+            pol = self._eviction()
+            blk = int(pol.select(tuple(self._cached_free), self._stats))
+            if blk not in self._cached_free:
+                raise RuntimeError(
+                    f"eviction policy {getattr(pol, 'name', pol)!r} selected "
+                    f"block {blk}, not a cached-free candidate")
+            del self._cached_free[blk]
             self._unregister(blk)
+            pol.on_evict(blk, self._stats)
             self.cache_evictions += 1
-            self.blocks_allocated += 1
-            return blk
-        raise OutOfBlocksError("pool exhausted")
+        else:
+            raise OutOfBlocksError("pool exhausted")
+        self.blocks_allocated += 1
+        self._stats[blk] = BlockStats()          # fresh content, fresh record
+        return blk
 
     def _unregister(self, blk: int) -> None:
         key = self._hash_of.pop(blk, None)
@@ -146,6 +195,9 @@ class BlockAllocator:
                 self._ref[blk] = 1
             else:
                 self._ref[blk] += 1
+            st = self._stats.setdefault(blk, BlockStats())
+            st.hits += 1
+            st.peak_ref = max(st.peak_ref, self._ref[blk])
             blocks.append(blk)
             cached += bs
             self.prefix_hits += 1
@@ -277,6 +329,10 @@ class BlockAllocator:
 
     def ref_count(self, block: int) -> int:
         return self._ref.get(block, 0)
+
+    def block_stats(self, block: int) -> BlockStats:
+        """Eviction evidence for ``block`` (empty record if never touched)."""
+        return self._stats.setdefault(block, BlockStats())
 
     def seq_len(self, req_id: int) -> int:
         return self._lens[req_id]

@@ -43,7 +43,22 @@ def _fits(dim: int, mesh: Mesh, axis) -> bool:
 
 class ShardingRules:
     def __init__(self, mesh: Mesh, *, fsdp_axis="data", model_axis="model",
-                 fsdp_over_pod: bool = False):
+                 fsdp_over_pod: bool = False,
+                 head_dim: Optional[int] = None):
+        """``head_dim``: attention head width, when the caller knows it.
+
+        With it set, attention projections (wq/wk/wv output, wo input) are
+        TP-sharded only on whole-head boundaries — the standard Megatron
+        constraint. Sub-head TP shards are never useful (RoPE and softmax
+        need the full head together, so XLA reshards before attention
+        anyway) and sharding a fraction of a head across ``model`` inside a
+        scan-over-layers body miscompiles under jax 0.4.37's GSPMD
+        partitioner: the sharded forward silently diverges from the
+        single-device result by ~0.6% (bisected in test_distributed —
+        identical math unrolled or applied outside lax.scan is exact).
+        ``None`` preserves the raw divisibility rule for callers that don't
+        know the attention geometry.
+        """
         self.mesh = mesh
         names = mesh.axis_names
         self.model = model_axis if model_axis in names else None
@@ -52,6 +67,15 @@ class ShardingRules:
             fsdp = ("pod", fsdp)
         self.fsdp = fsdp
         self.dp = tuple(a for a in ("pod", "data") if a in names) or None
+        self.head_dim = head_dim
+
+    def _head_granular(self, d: int) -> bool:
+        """Would sharding ``d`` over ``model`` keep whole heads per shard?"""
+        if self.head_dim is None or self.head_dim <= 0:
+            return True
+        if d % self.head_dim != 0:
+            return False
+        return (d // self.head_dim) % _axis_size(self.mesh, self.model) == 0
 
     # ----------------------------------------------------------------- params
     def param_spec(self, path: Tuple[str, ...], shape) -> P:
@@ -65,8 +89,12 @@ class ShardingRules:
             # pad leading dims (layer stacking) with None
             return P(*(none[:nd - len(entries)] + tuple(entries)))
 
-        def m_if(d):
-            return self.model if self.model and _fits(d, self.mesh, self.model) else None
+        def m_if(d, heads=False):
+            if not (self.model and _fits(d, self.mesh, self.model)):
+                return None
+            if heads and not self._head_granular(d):
+                return None
+            return self.model
 
         def f_if(d):
             return self.fsdp if self.fsdp and _fits(d, self.mesh, self.fsdp) else None
@@ -89,10 +117,10 @@ class ShardingRules:
             return spec(f_if(D), None)
         if nd >= 2 and name in _ROW:
             din, dout = shape[-2:]
-            return spec(m_if(din), f_if(dout))
+            return spec(m_if(din, heads=name == "wo"), f_if(dout))
         if nd >= 2 and name in _COL:
             din, dout = shape[-2:]
-            return spec(f_if(din), m_if(dout))
+            return spec(f_if(din), m_if(dout, heads=name in ("wq", "wk", "wv")))
         if nd >= 2 and name == "conv_w":         # (…, K, conv_dim)
             return spec(None, m_if(shape[-1]))
         if nd >= 2 and name in ("w", ):          # dlrm mlp

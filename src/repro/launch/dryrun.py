@@ -69,7 +69,8 @@ def _lower_compile(cfg: ModelConfig, cell, mesh, *, scan_layers=True,
         # measured) for dense archs; MoE keeps full remat — saving the
         # (G,E,C,F) expert activations would cost ~24 GB/device at 235B.
         remat = "full" if cfg.moe is not None else "dots"
-    rules = ShardingRules(mesh)
+    attn = getattr(cfg, "attention", None)
+    rules = ShardingRules(mesh, head_dim=attn.head_dim if attn else None)
     import numpy as _np
     kw = {}
     if cfg.moe is not None:

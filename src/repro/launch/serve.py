@@ -27,6 +27,13 @@ def main() -> None:
                         "hot path (auto | ref | xla | pallas | "
                         "pallas_interpret); resolved through "
                         "repro.core.dispatch and reported in metrics")
+    from repro.serving import policy as policy_lib
+    for axis in policy_lib.AXES:
+        p.add_argument(f"--{axis}", default=policy_lib.DEFAULTS[axis],
+                       choices=policy_lib.names(axis),
+                       help=f"serving {axis} policy (repro.serving.policy); "
+                            "resolved through the policy registry and "
+                            "reported in metrics")
     args = p.parse_args()
 
     cfg = get_config(args.arch)
@@ -35,7 +42,9 @@ def main() -> None:
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(0))
     serve = ServeConfig(model=args.arch, kv_block_size=args.block_size,
-                        max_batch=args.requests, backend=args.backend)
+                        max_batch=args.requests, backend=args.backend,
+                        admission=args.admission, preemption=args.preemption,
+                        eviction=args.eviction)
     total_blocks = args.requests * (
         -(-(args.prompt_len + args.max_new) // args.block_size) + 1)
     engine = ServingEngine(model, params, cfg, serve,
@@ -60,6 +69,8 @@ def main() -> None:
     print(f"preemptions {m['preemptions']}  "
           f"prefix hit rate {m['prefix_hit_rate']:.2f}  "
           f"cow copies {m['cow_copies']}")
+    print(f"policies {m['admission_policy']}/{m['preemption_policy']}/"
+          f"{m['eviction_policy']}  counters {m['policy_counters']}")
 
 
 if __name__ == "__main__":

@@ -43,7 +43,8 @@ def main() -> None:
         cfg = dataclasses.replace(cfg, dtype=args.dtype)
     model = build_model(cfg)
     mesh = make_smoke_mesh()
-    rules = ShardingRules(mesh)
+    attn = getattr(cfg, "attention", None)
+    rules = ShardingRules(mesh, head_dim=attn.head_dim if attn else None)
     opt = adamw()
     lr_fn = cosine_warmup(args.lr, max(args.steps // 10, 1), args.steps)
 

@@ -5,8 +5,10 @@ three layers of a production serving stack:
 
   * ``repro.serving.request``   — per-request state machine (WAITING ->
     PREFILLING -> DECODING -> PREEMPTED -> FINISHED) + sampling params;
-  * ``repro.serving.scheduler`` — admission (FCFS, prefix-cache aware),
-    chunked-prefill token budgeting, preemption under block pressure;
+  * ``repro.serving.scheduler`` — admission (prefix-cache aware), chunked-
+    prefill token budgeting, preemption under block pressure — with the
+    actual decisions (admission order, victim choice, cached-block eviction)
+    delegated to registered strategies from ``repro.serving.policy``;
   * this module                 — the jit'd step driver: it renders each
     :class:`StepPlan` into ONE fused device program
     (``model.decode_tokens_paged`` + batched per-request sampling).
@@ -24,10 +26,11 @@ Step anatomy (the paper's BlockList optimization, end-to-end):
     allocator's prefix cache (refcounted, copy-on-write on append) — a
     shared-prefix workload allocates strictly fewer blocks than independent
     prompts and skips recomputing the shared KV;
-  * under block pressure the scheduler preempts the latest-arrived request
+  * under block pressure the scheduler preempts the policy-ranked victim
     (recompute-style: its blocks are freed, generation state survives);
   * finished requests free their blocks immediately; hashed blocks are
-    parked in the cached-free LRU for future prefix hits;
+    parked cached-free for future prefix hits, evicted by the registered
+    eviction policy when the pool runs dry;
   * TTFT / TPOT percentiles, throughput, preemption and prefix-hit counters
     via ``repro.serving.metrics`` (paper Fig 17e metrics).
 """
@@ -44,6 +47,7 @@ from repro.config import ModelConfig, ServeConfig
 from repro.core import dispatch
 from repro.core.paged_kv import (
     BlockAllocator, copy_pool_blocks, make_pool)
+from repro.serving import policy as policy_lib
 from repro.serving import sampling as sampling_lib
 from repro.serving.metrics import EngineMetrics
 from repro.serving.request import Request, RequestState, SamplingParams
@@ -63,7 +67,8 @@ def _bucket(n: int, lo: int = 8) -> int:
 class ServingEngine:
     def __init__(self, model, params, cfg: ModelConfig, serve: ServeConfig,
                  *, num_blocks: Optional[int] = None, eos_id: int = -1,
-                 token_budget: Optional[int] = None, seed: int = 0):
+                 token_budget: Optional[int] = None, seed: int = 0,
+                 admission=None, preemption=None, eviction=None):
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -72,7 +77,21 @@ class ServingEngine:
         bs = serve.kv_block_size
         nb = num_blocks or serve.max_blocks or serve.max_batch * 64
         a = cfg.attention
-        self.alloc = BlockAllocator(num_blocks=nb, block_size=bs)
+        # Resolve the serving-policy triple ONCE through the policy registry
+        # (explicit ctor args > force_policies scope > ServeConfig > default)
+        # and pin it for the run — like the attention backend below, metrics
+        # are attributable to exactly one admission/preemption/eviction
+        # combination.
+        adm, pre, evi = policy_lib.resolve_triple(
+            admission=admission, preemption=preemption, eviction=eviction,
+            config=serve)
+        self.policies = {axis: p.name for axis, p in
+                         ((policy_lib.ADMISSION, adm),
+                          (policy_lib.PREEMPTION, pre),
+                          (policy_lib.EVICTION, evi))}
+        self._policy_objs = (adm, pre, evi)
+        self.alloc = BlockAllocator(num_blocks=nb, block_size=bs,
+                                    eviction_policy=evi)
         pk, pv = make_pool(cfg.num_layers, nb, bs, a.num_kv_heads, a.head_dim,
                            jnp.dtype(cfg.dtype))
         self.pools = {"k": pk, "v": pv}
@@ -80,7 +99,8 @@ class ServingEngine:
         self.max_total = nb
         self.scheduler = Scheduler(
             self.alloc, max_batch=self.B,
-            token_budget=token_budget or serve.prefill_chunk)
+            token_budget=token_budget or serve.prefill_chunk,
+            admission=adm, preemption=pre)
         self._free_slots = self.scheduler.free_slots    # shared list object
         self.finished: List[Request] = []
         # Resolve the hot-path attention backend ONCE through the unified
@@ -275,9 +295,19 @@ class ServingEngine:
         m.update({
             "blocks_free": self.alloc.num_free,
             "preemptions": self.scheduler.num_preemptions,
+            "slot_compactions": self.scheduler.num_slot_compactions,
             "prefix_hits": hits,
             "prefix_misses": misses,
             "prefix_hit_rate": hits / (hits + misses) if hits + misses else 0.0,
             "cow_copies": self.alloc.cow_copies,
         })
+        # The resolved policy triple the run executed with, plus each
+        # policy's own counters (admitted / victims / evictions / ...) keyed
+        # "<axis>.<counter>" — rows from a --policy sweep are attributable to
+        # one admission/preemption/eviction combination.
+        for axis, name in self.policies.items():
+            m[f"{axis}_policy"] = name
+        m["policy_counters"] = {
+            f"{p.axis}.{k}": v
+            for p in self._policy_objs for k, v in sorted(p.counters.items())}
         return m

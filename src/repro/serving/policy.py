@@ -1,0 +1,450 @@
+"""Pluggable serving policies: admission, preemption, and KV eviction.
+
+The paper's vLLM study shows that serving throughput on a new backend is won
+or lost in the software control plane — batching, admission, and KV
+management — not raw kernel FLOPs.  This module makes those control-plane
+decisions first-class, swappable strategies instead of hardcoded scheduler
+branches, mirroring the operator-backend registry (`repro.core.dispatch`):
+implementations are **registered** under a string key per axis, and ONE
+resolver picks a policy with a well-defined precedence.
+
+Axes and contracts
+------------------
+``admission``   orders the wait queue: which WAITING/PREEMPTED request is
+                admitted next when a slot frees up.  Head-of-line semantics
+                are preserved per policy: if the policy's top pick does not
+                fit, admission stops (no starvation via queue-jumping).
+``preemption``  ranks RUNNING requests most-preemptable-first under block
+                pressure.  The scheduler evicts the top of the ranking and
+                never touches the bottom (the policy's least-preemptable
+                request is the progress guarantee).
+``eviction``    scores refcount-0 cached-free blocks inside
+                :class:`repro.core.paged_kv.BlockAllocator`: which block's
+                prefix-cache content is dropped when the pool needs a fresh
+                block.  Candidates arrive oldest-freed-first, with per-block
+                :class:`~repro.core.paged_kv.BlockStats` (cache hits, peak
+                refcount).
+
+Resolution precedence (highest wins)
+------------------------------------
+1. explicit argument (a name or a policy *instance*) at the call site —
+   strict: an unknown name raises :class:`UnknownPolicyError`;
+2. ``with force_policies(admission=..., preemption=..., eviction=...):``
+   scope (how ``benchmarks/run.py --policy`` sweeps triples);
+3. a config hint (``ServeConfig.admission`` / ``.preemption`` /
+   ``.eviction``, fed by ``repro.launch.serve --admission ...``);
+4. the axis default (``fcfs`` / ``latest-arrival`` / ``lru`` — the exact
+   behaviour the scheduler and allocator hardcoded before this API).
+
+Unlike operator backends there is no capability predicate — every policy
+works everywhere — so config-level names are validated strictly too: a typo'd
+policy name fails loudly instead of degrading.
+
+Policies are **instantiated per resolve** and carry per-run ``counters``
+(e.g. admitted / victims / evictions) which the engine flattens into
+``metrics()["policy_counters"]``.  Every resolution is appended to the active
+:func:`record_resolutions` scope so benchmark rows can attribute numbers to
+the policy triple that actually ran.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import (Any, Callable, Dict, Iterator, List, Mapping, Optional,
+                    Sequence, Tuple, Type, Union)
+
+from repro.core.paged_kv import BlockAllocator, BlockStats
+from repro.serving.request import Request, RequestState
+
+__all__ = [
+    "ADMISSION", "PREEMPTION", "EVICTION", "AXES", "DEFAULTS",
+    "UnknownPolicyError", "Policy", "AdmissionPolicy", "PreemptionPolicy",
+    "EvictionPolicy", "register", "names", "get", "resolve", "resolve_triple",
+    "force_policies", "forced_policy", "record_resolutions",
+]
+
+ADMISSION = "admission"
+PREEMPTION = "preemption"
+EVICTION = "eviction"
+AXES = (ADMISSION, PREEMPTION, EVICTION)
+
+# The pre-API hardcoded behaviour, byte-for-byte (see each class docstring).
+DEFAULTS = {ADMISSION: "fcfs", PREEMPTION: "latest-arrival", EVICTION: "lru"}
+
+_AUTO_NAMES = (None, "", "default")
+
+
+class UnknownPolicyError(ValueError):
+    """A requested policy name is not registered on its axis."""
+
+
+# --------------------------------------------------------------------------
+# Base classes (one per axis)
+# --------------------------------------------------------------------------
+class Policy:
+    """Base for all policies: a registry name + per-run counters."""
+
+    axis: str = ""           # set by @register
+    name: str = ""           # set by @register
+
+    def __init__(self) -> None:
+        self.counters: Dict[str, int] = {}
+
+    def count(self, key: str, n: int = 1) -> None:
+        self.counters[key] = self.counters.get(key, 0) + n
+
+
+class AdmissionPolicy(Policy):
+    """Orders the wait queue.  Implement :meth:`admission_key`.
+
+    Lower key = admitted sooner.  ``select`` returns the policy's top pick
+    among ``waiting`` (the scheduler removes it from the queue itself so the
+    policy never mutates scheduler state).
+    """
+
+    axis = ADMISSION
+
+    def admission_key(self, req: Request, now: float) -> Tuple:
+        raise NotImplementedError
+
+    def select(self, waiting: Sequence[Request], now: float) -> Request:
+        return min(waiting, key=lambda r: self.admission_key(r, now))
+
+    def on_admit(self, req: Request, now: float) -> None:
+        """Counter hook; called once per successful admission."""
+        self.count("admitted")
+
+
+class PreemptionPolicy(Policy):
+    """Ranks running requests most-preemptable-first.
+
+    Implement :meth:`victim_key`: HIGHER key = more preemptable.  The
+    scheduler preempts ``rank(...)[0]`` and protects ``rank(...)[-1]`` (by
+    taking the top only while two or more candidates exist), so the policy's
+    least-preemptable request always keeps making progress.
+    """
+
+    axis = PREEMPTION
+
+    def victim_key(self, req: Request, alloc: BlockAllocator,
+                   now: float) -> Tuple:
+        raise NotImplementedError
+
+    def rank(self, running: Sequence[Request], alloc: BlockAllocator,
+             now: float) -> List[Request]:
+        return sorted(running,
+                      key=lambda r: self.victim_key(r, alloc, now),
+                      reverse=True)
+
+    def on_preempt(self, req: Request, alloc: BlockAllocator) -> None:
+        """Counter hook; called just before the victim's blocks are freed."""
+        self.count("victims")
+        self.count("blocks_reclaimed", len(alloc.table(req.req_id)))
+
+
+class EvictionPolicy(Policy):
+    """Scores cached-free blocks for eviction.  Implement :meth:`select`.
+
+    ``candidates`` iterates oldest-freed-first (the allocator's cached-free
+    order), ``stats`` maps block -> :class:`BlockStats`.  Return the block
+    whose cached prefix content should be dropped.  The allocator calls
+    :meth:`on_evict` after removing it.
+    """
+
+    axis = EVICTION
+
+    def select(self, candidates: Sequence[int],
+               stats: Mapping[int, BlockStats]) -> int:
+        raise NotImplementedError
+
+    def on_evict(self, block: int, stats: Mapping[int, BlockStats]) -> None:
+        self.count("evictions")
+
+
+# --------------------------------------------------------------------------
+# Registry (mirrors repro.core.dispatch: register + resolve, scoped override,
+# resolution log; thread-local so scopes can't leak across tests).
+# --------------------------------------------------------------------------
+_BASES = {ADMISSION: AdmissionPolicy, PREEMPTION: PreemptionPolicy,
+          EVICTION: EvictionPolicy}
+_REGISTRY: Dict[str, Dict[str, Type[Policy]]] = {a: {} for a in AXES}
+
+_STATE = threading.local()
+
+
+def register(axis: str, name: str) -> Callable[[Type[Policy]], Type[Policy]]:
+    """Class decorator: register a policy class under ``name`` on ``axis``."""
+    if axis not in AXES:
+        raise ValueError(f"unknown policy axis {axis!r}; one of {AXES}")
+
+    def deco(cls: Type[Policy]) -> Type[Policy]:
+        if not issubclass(cls, _BASES[axis]):
+            raise TypeError(
+                f"{cls.__name__} must subclass {_BASES[axis].__name__} "
+                f"to register on axis {axis!r}")
+        if name in _REGISTRY[axis]:
+            raise ValueError(f"{axis}: policy {name!r} registered twice")
+        cls.axis = axis
+        cls.name = name
+        _REGISTRY[axis][name] = cls
+        return cls
+
+    return deco
+
+
+def names(axis: str) -> List[str]:
+    """Registered policy names on ``axis`` (sorted; default first)."""
+    if axis not in AXES:
+        raise ValueError(f"unknown policy axis {axis!r}; one of {AXES}")
+    default = DEFAULTS[axis]
+    rest = sorted(n for n in _REGISTRY[axis] if n != default)
+    return [default] + rest if default in _REGISTRY[axis] else rest
+
+
+def get(axis: str, name: str) -> Type[Policy]:
+    try:
+        return _REGISTRY[axis][name]
+    except KeyError:
+        raise UnknownPolicyError(
+            f"{axis}: unknown policy {name!r}; registered: "
+            f"{names(axis)}") from None
+
+
+# -- scoped override + resolution log ---------------------------------------
+def _scope_stack() -> List[Dict[str, str]]:
+    if not hasattr(_STATE, "forced"):
+        _STATE.forced = []
+    return _STATE.forced
+
+
+def _log_stack() -> List[List[Tuple[str, str]]]:
+    if not hasattr(_STATE, "logs"):
+        _STATE.logs = []
+    return _STATE.logs
+
+
+@contextlib.contextmanager
+def force_policies(*, admission: Optional[str] = None,
+                   preemption: Optional[str] = None,
+                   eviction: Optional[str] = None) -> Iterator[None]:
+    """Scoped policy preference per axis (``None`` axes are untouched).
+
+    Names are validated on entry — a sweep over a typo'd triple fails before
+    any engine is built, not mid-benchmark.
+    """
+    scope: Dict[str, str] = {}
+    for axis, name in ((ADMISSION, admission), (PREEMPTION, preemption),
+                       (EVICTION, eviction)):
+        if name not in _AUTO_NAMES:
+            get(axis, name)                      # validate eagerly
+            scope[axis] = name
+    stack = _scope_stack()
+    stack.append(scope)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def forced_policy(axis: str) -> Optional[str]:
+    """The innermost ``force_policies`` preference for ``axis``, if any."""
+    for scope in reversed(_scope_stack()):
+        if axis in scope:
+            return scope[axis]
+    return None
+
+
+@contextlib.contextmanager
+def record_resolutions() -> Iterator[List[Tuple[str, str]]]:
+    """Collect ``(axis, name)`` pairs resolved inside the scope."""
+    log: List[Tuple[str, str]] = []
+    _log_stack().append(log)
+    try:
+        yield log
+    finally:
+        stack = _log_stack()
+        for i in range(len(stack) - 1, -1, -1):   # remove by identity
+            if stack[i] is log:
+                del stack[i]
+                break
+
+
+def _note(axis: str, name: str) -> None:
+    for log in _log_stack():
+        log.append((axis, name))
+
+
+# -- resolver ----------------------------------------------------------------
+def resolve(axis: str, explicit: Union[None, str, Policy] = None, *,
+            config: Optional[str] = None) -> Policy:
+    """Resolve one axis to a fresh policy instance (see module precedence).
+
+    ``explicit`` may be a registered name or an already-built policy instance
+    (injected by tests or embedding applications); instances pass through
+    unchanged but are still logged under their registered name.
+    """
+    if axis not in AXES:
+        raise ValueError(f"unknown policy axis {axis!r}; one of {AXES}")
+    if isinstance(explicit, Policy):
+        if explicit.axis != axis:
+            raise ValueError(
+                f"policy instance {explicit.name!r} is an {explicit.axis} "
+                f"policy, not {axis}")
+        _note(axis, explicit.name)
+        return explicit
+    for level in (explicit,                       # 1. explicit — strict
+                  forced_policy(axis),            # 2. scope
+                  config,                         # 3. config hint — strict
+                  DEFAULTS[axis]):                # 4. default
+        if level in _AUTO_NAMES:
+            continue
+        cls = get(axis, level)
+        _note(axis, level)
+        return cls()
+    raise UnknownPolicyError(f"{axis}: no default policy registered")
+
+
+def resolve_triple(*, admission: Union[None, str, Policy] = None,
+                   preemption: Union[None, str, Policy] = None,
+                   eviction: Union[None, str, Policy] = None,
+                   config: Optional[Any] = None,
+                   ) -> Tuple[AdmissionPolicy, PreemptionPolicy,
+                              EvictionPolicy]:
+    """Resolve all three axes at once (``config`` duck-types ServeConfig)."""
+    cfg = {a: getattr(config, a, None) for a in AXES}
+    return (resolve(ADMISSION, admission, config=cfg[ADMISSION]),
+            resolve(PREEMPTION, preemption, config=cfg[PREEMPTION]),
+            resolve(EVICTION, eviction, config=cfg[EVICTION]))
+
+
+# --------------------------------------------------------------------------
+# Admission policies
+# --------------------------------------------------------------------------
+@register(ADMISSION, "fcfs")
+class FcfsAdmission(AdmissionPolicy):
+    """First come, first served — the pre-API scheduler behaviour.
+
+    Preempted requests resume ahead of fresh arrivals (they were re-queued at
+    the FRONT of the old deque): they hold generated output whose recompute
+    gets more expensive the longer they wait.
+    """
+
+    def admission_key(self, req: Request, now: float) -> Tuple:
+        resumed = 0 if req.state is RequestState.PREEMPTED else 1
+        return (resumed, req.arrival, req.req_id)
+
+
+@register(ADMISSION, "priority")
+class PriorityAdmission(AdmissionPolicy):
+    """Highest ``Request.priority`` first; FCFS within a priority class."""
+
+    def admission_key(self, req: Request, now: float) -> Tuple:
+        resumed = 0 if req.state is RequestState.PREEMPTED else 1
+        return (-req.priority, resumed, req.arrival, req.req_id)
+
+
+@register(ADMISSION, "deadline-slo")
+class DeadlineAdmission(AdmissionPolicy):
+    """Earliest ``Request.deadline`` first (EDF); deadline-free last (FCFS).
+
+    Counts ``deadline_missed`` for requests admitted after their deadline has
+    already passed — an SLO burn-down visible in ``policy_counters``.
+    """
+
+    def admission_key(self, req: Request, now: float) -> Tuple:
+        if req.deadline is None:
+            return (1, 0.0, req.arrival, req.req_id)
+        return (0, req.deadline, req.arrival, req.req_id)
+
+    def on_admit(self, req: Request, now: float) -> None:
+        super().on_admit(req, now)
+        if req.deadline is not None and now > req.deadline:
+            self.count("deadline_missed")
+
+
+# --------------------------------------------------------------------------
+# Preemption policies
+# --------------------------------------------------------------------------
+@register(PREEMPTION, "latest-arrival")
+class LatestArrivalPreemption(PreemptionPolicy):
+    """Evict the newest request — the pre-API hardcoded victim choice.
+
+    Under FCFS this is the fairness-preserving victim: the request that has
+    waited least loses least invested work, and the oldest request (ranked
+    last) is protected.
+    """
+
+    def victim_key(self, req: Request, alloc: BlockAllocator,
+                   now: float) -> Tuple:
+        return (req.arrival, req.req_id)
+
+
+@register(PREEMPTION, "fewest-remaining-tokens")
+class FewestRemainingPreemption(PreemptionPolicy):
+    """Evict the request with the least generation left to do.
+
+    A nearly-done request re-prefills cheaply relative to its total KV (its
+    recompute prompt is almost fully prefix-cacheable), and its short
+    remaining decode makes it the quickest to clear the pool again after
+    resume.  The request with the most work remaining is protected.
+    """
+
+    def victim_key(self, req: Request, alloc: BlockAllocator,
+                   now: float) -> Tuple:
+        remaining = req.max_new_tokens - len(req.output)
+        return (-remaining, req.arrival, req.req_id)
+
+
+@register(PREEMPTION, "most-blocks")
+class MostBlocksPreemption(PreemptionPolicy):
+    """Evict the request holding the most KV blocks.
+
+    Frees the maximum pool space per preemption — fewest victims under a
+    burst of pressure — at the cost of always punishing long sequences.
+    """
+
+    def victim_key(self, req: Request, alloc: BlockAllocator,
+                   now: float) -> Tuple:
+        return (len(alloc.table(req.req_id)), req.arrival, req.req_id)
+
+
+# --------------------------------------------------------------------------
+# Eviction policies (cached-free prefix blocks in BlockAllocator)
+# --------------------------------------------------------------------------
+@register(EVICTION, "lru")
+class LruEviction(EvictionPolicy):
+    """Drop the oldest-freed block — the pre-API hardcoded behaviour."""
+
+    def select(self, candidates: Sequence[int],
+               stats: Mapping[int, BlockStats]) -> int:
+        return next(iter(candidates))
+
+
+@register(EVICTION, "hit-rate")
+class HitRateEviction(EvictionPolicy):
+    """Drop the block with the fewest lifetime prefix-cache hits (tie: LRU).
+
+    A block that keeps getting re-adopted (a shared system prompt) is worth
+    keeping over one that was hashed but never matched again.
+    """
+
+    def select(self, candidates: Sequence[int],
+               stats: Mapping[int, BlockStats]) -> int:
+        return min(enumerate(candidates),
+                   key=lambda iv: (stats[iv[1]].hits, iv[0]))[1]
+
+
+@register(EVICTION, "refcount-aware")
+class RefcountAwareEviction(EvictionPolicy):
+    """Drop never-shared blocks first (peak refcount 1), then fewest hits.
+
+    Peak refcount is the strongest evidence of sharing value: a block that
+    was simultaneously held by several requests is the hottest prefix content
+    in the pool even if its hit counter hasn't caught up yet.
+    """
+
+    def select(self, candidates: Sequence[int],
+               stats: Mapping[int, BlockStats]) -> int:
+        return min(enumerate(candidates),
+                   key=lambda iv: (stats[iv[1]].peak_ref, stats[iv[1]].hits,
+                                   iv[0]))[1]

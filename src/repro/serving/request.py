@@ -68,6 +68,11 @@ class Request:
     max_new_tokens: int
     sampling: SamplingParams = field(default_factory=SamplingParams)
     arrival: float = field(default_factory=time.time)
+    # Serving-policy inputs (repro.serving.policy): higher priority admits
+    # first under the "priority" policy; deadline is an absolute time.time()
+    # the "deadline-slo" policy schedules against (None = no SLO).
+    priority: int = 0
+    deadline: Optional[float] = None
     state: RequestState = RequestState.WAITING
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None

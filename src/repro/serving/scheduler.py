@@ -1,33 +1,44 @@
 """Serving scheduler: admission, chunked-prefill budgeting, preemption.
 
-The policy half of the serving stack (the engine is the mechanism half —
-it renders the scheduler's :class:`StepPlan` into one fused device step).
+The mechanism half of the serving control plane — the *policy* half lives in
+``repro.serving.policy``: admission order and preemption-victim choice are
+injected strategy objects, never hardcoded branches here (the same split the
+operator registry gives kernels: this module is the resolver-user, not the
+decider).
 
 Per engine step the scheduler:
 
-  1. **Admits** waiting requests FCFS while a batch slot is free and the
-     allocator can hold the whole prompt (prefix-cached blocks are adopted
-     at admission and don't count against free space).
-  2. **Budgets prefill**: every DECODING request always gets its one decode
+  1. **Compacts slots**: a long-lived request sitting on a high slot is
+     remapped down into a freed lower slot, so the engine's power-of-two
+     active-slot bucket can shrink back after a burst drains.
+  2. **Admits** waiting requests in the admission policy's order while a
+     batch slot is free and the allocator can hold the whole prompt
+     (prefix-cached blocks are adopted at admission and don't count against
+     free space).  Head-of-line semantics are per policy: if the policy's
+     top pick does not fit, admission stops — no queue-jumping past it.
+  3. **Budgets prefill**: every DECODING request always gets its one decode
      lane; PREFILLING requests share a per-step token budget
      (``token_budget``, vLLM's ``max_num_batched_tokens`` analogue) so long
      prompts are chunked across steps instead of stalling the decode batch.
-  3. **Preempts under block pressure**: if the step's block demand (new
+  4. **Preempts under block pressure**: if the step's block demand (new
      decode blocks + prefill-chunk blocks + copy-on-write copies) exceeds
-     the pool, the latest-arrived running request is evicted — its blocks
-     are released and it re-queues at the FRONT of the wait queue for
-     recompute-style resume (see ``repro.serving.request``).
+     the pool, the preemption policy's top-ranked victim is evicted — its
+     blocks are released and it re-queues for recompute-style resume (see
+     ``repro.serving.request``).  The policy's least-preemptable request is
+     never evicted, so one request always makes progress.
 
 The scheduler owns the request queues and the slot free-list; it never
 touches device state.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.core.paged_kv import BlockAllocator, OutOfBlocksError
+from repro.serving import policy as policy_lib
 from repro.serving.request import Request, RequestState
 
 
@@ -45,14 +56,20 @@ class StepPlan:
 
 class Scheduler:
     def __init__(self, alloc: BlockAllocator, *, max_batch: int,
-                 token_budget: int):
+                 token_budget: int,
+                 admission: Optional[policy_lib.AdmissionPolicy] = None,
+                 preemption: Optional[policy_lib.PreemptionPolicy] = None):
         self.alloc = alloc
         self.max_batch = max_batch
         self.token_budget = max(1, token_budget)
+        self.admission = admission or policy_lib.resolve(policy_lib.ADMISSION)
+        self.preemption = (preemption
+                           or policy_lib.resolve(policy_lib.PREEMPTION))
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}
         self.free_slots: List[int] = list(range(max_batch - 1, -1, -1))
         self.num_preemptions = 0
+        self.num_slot_compactions = 0
 
     # ------------------------------------------------------------------ queue
     def submit(self, req: Request) -> None:
@@ -62,10 +79,36 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
 
+    # ------------------------------------------------------------------ slots
+    def _compact_slots(self) -> None:
+        """Remap running requests into freed lower slots (highest first).
+
+        Slot ids only live in the host-built per-step arrays, so moving a
+        request between steps is free — and ``max(slot) + 1`` is what the
+        engine buckets to a power of two, so shrinking it shrinks the
+        compiled program the next step runs.
+        """
+        if not self.free_slots:
+            return
+        # Sort even with nothing running: release() appends in finish order,
+        # and admission pops from the end — unsorted, a fresh wave after a
+        # drained burst would land on high slots and re-inflate the bucket.
+        self.free_slots.sort(reverse=True)          # lowest slot at pop() end
+        for req in sorted(self.running.values(),
+                          key=lambda r: r.slot, reverse=True):
+            low = self.free_slots[-1]
+            if low >= req.slot:
+                break                               # nobody below can improve
+            self.free_slots[-1] = req.slot          # swap: give back the high
+            req.slot = low
+            self.free_slots.sort(reverse=True)
+            self.num_slot_compactions += 1
+
     # -------------------------------------------------------------- admission
     def _admit(self) -> None:
+        now = time.time()
         while self.waiting and self.free_slots:
-            req = self.waiting[0]
+            req = self.admission.select(self.waiting, now)
             # resume prompt includes generated tokens (recompute preemption)
             active = req.resume_tokens()
             bs = self.alloc.block_size
@@ -76,19 +119,20 @@ class Scheduler:
                 # Livelock breaker: the whole pool is free and still too
                 # small — this request (e.g. one whose resume prompt grew
                 # past the pool after preemption) will NEVER be admittable,
-                # and as FCFS head-of-line it would starve everyone behind
-                # it. Fail loudly instead of spinning.
+                # and as the policy's head-of-line it would starve everyone
+                # behind it. Fail loudly instead of spinning.
                 if (not self.running
                         and self.alloc.num_free == self.alloc.num_blocks):
                     raise OutOfBlocksError(
                         f"request {req.req_id} needs {fresh} blocks but the "
                         f"whole pool is only {self.alloc.num_blocks}")
-                break                                        # FCFS head-of-line
-            self.waiting.popleft()
+                break                     # policy head-of-line: no jumping
+            self.waiting.remove(req)
             slot = self.free_slots.pop()
             cached = self.alloc.allocate_prefix(req.req_id, active)
             req.begin_prefill(slot, cached, active_prompt=active)
             self.running[req.req_id] = req
+            self.admission.on_admit(req, now)
 
     # -------------------------------------------------------------- capacity
     def _blocks_needed(self, plan: StepPlan) -> int:
@@ -122,12 +166,18 @@ class Scheduler:
             need += min(writers, self.alloc.ref_count(blk) - 1)
         return need
 
-    def _pick_victim(self, protect: Optional[Request]) -> Optional[Request]:
-        """Latest-arrived running request (lowest priority under FCFS)."""
-        victims = [r for r in self.running.values() if r is not protect]
-        if not victims:
+    def _pick_victim(self, now: float) -> Optional[Request]:
+        """The preemption policy's top-ranked victim.
+
+        The bottom of the ranking (least preemptable) is protected: with
+        fewer than two running requests there is no victim, which guarantees
+        at least one request keeps making progress.
+        """
+        ranked = self.preemption.rank(list(self.running.values()),
+                                      self.alloc, now)
+        if len(ranked) < 2:
             return None
-        return max(victims, key=lambda r: (r.arrival, r.req_id))
+        return ranked[0]
 
     def release(self, req: Request) -> None:
         """Return a running request's blocks and slot (finish or preempt)."""
@@ -136,6 +186,7 @@ class Scheduler:
         self.free_slots.append(req.slot)
 
     def _preempt(self, req: Request) -> None:
+        self.preemption.on_preempt(req, self.alloc)   # table still live here
         self.release(req)
         req.preempt()
         self.waiting.appendleft(req)
@@ -143,7 +194,9 @@ class Scheduler:
 
     # ------------------------------------------------------------------- plan
     def schedule(self) -> StepPlan:
-        """Admit, budget prefill chunks, and preempt until the plan fits."""
+        """Compact, admit, budget prefill chunks, preempt until the plan
+        fits."""
+        self._compact_slots()
         self._admit()
         while True:
             plan = StepPlan()
@@ -159,9 +212,7 @@ class Scheduler:
                         budget -= n
             if self._blocks_needed(plan) <= self.alloc.num_free:
                 return plan
-            oldest = min(self.running.values(),
-                         key=lambda r: (r.arrival, r.req_id))
-            victim = self._pick_victim(protect=oldest)
+            victim = self._pick_victim(now=time.time())
             if victim is None:
                 raise OutOfBlocksError(
                     "a single request exceeds the KV pool; cannot preempt "

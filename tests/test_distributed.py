@@ -39,7 +39,20 @@ def test_sharding_rules_divisibility_fallback():
 
 
 def test_train_step_numerics_match_sharded_vs_single():
-    """1-device result == 8-device sharded result (same seed/batch)."""
+    """1-device result == 8-device sharded result (same seed/batch).
+
+    head_dim is passed to ShardingRules so attention projections only
+    TP-shard on whole-head boundaries. Without it this config (1 kv head x
+    head_dim 16) sharded wk's 16-wide output over the model axis, and jax
+    0.4.37's GSPMD partitioner miscompiles that sub-head sharding inside
+    the scan-over-layers body: the sharded forward silently diverged from
+    the single-device result by ~0.6% (loss 5.9959 vs 6.0306). Bisected:
+    the same block applied outside lax.scan, or the same scan with
+    scan_layers=False (unrolled), or any whole-head sharding, is exact to
+    float32 noise — so this was a partitioner artifact, not accumulation
+    order, and the fix is the head-granularity constraint every TP system
+    imposes anyway.
+    """
     snippet = """
     import jax, jax.numpy as jnp, numpy as np
     from repro.config import get_config
@@ -58,9 +71,9 @@ def test_train_step_numerics_match_sharded_vs_single():
     batch = {"tokens": toks}
     # single-device reference
     _, m_ref = jax.jit(make_train_step(model, opt, lr))(state, batch)
-    # sharded
+    # sharded (head-granular TP: see the test docstring)
     mesh = jax.make_mesh((4, 2), ("data", "model"))
-    rules = ShardingRules(mesh)
+    rules = ShardingRules(mesh, head_dim=cfg.attention.head_dim)
     step = jit_train_step(model, opt, lr, mesh, rules,
                           jax.eval_shape(lambda: state), batch, donate=False)
     with mesh:

@@ -1,0 +1,360 @@
+"""Pluggable serving-policy API: registry precedence, per-axis strategy
+behaviour (admission order, preemption ranking, eviction scoring), slot
+compaction, and the registry-enumerated parity sweep — every registered
+policy triple must complete the same workload with identical greedy
+outputs."""
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig, get_config
+from repro.core.paged_kv import BlockAllocator
+from repro.serving import policy
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import Scheduler
+
+SHIPPED = {
+    "admission": {"fcfs", "priority", "deadline-slo"},
+    "preemption": {"latest-arrival", "fewest-remaining-tokens", "most-blocks"},
+    "eviction": {"lru", "hit-rate", "refcount-aware"},
+}
+
+
+def _req(i, *, prompt_len=4, max_new=4, arrival=0.0, prio=0, deadline=None):
+    return Request(req_id=i, prompt=np.arange(prompt_len, dtype=np.int32),
+                   max_new_tokens=max_new, arrival=arrival, priority=prio,
+                   deadline=deadline)
+
+
+# ----------------------------------------------------------------- registry
+def test_every_shipped_policy_is_registered():
+    for axis, expected in SHIPPED.items():
+        assert expected <= set(policy.names(axis)), axis
+        # the axis default is the pre-API hardcoded behaviour
+        assert policy.DEFAULTS[axis] in policy.names(axis)
+
+
+def test_resolve_precedence_explicit_scope_config_default():
+    assert policy.resolve("admission").name == "fcfs"
+    assert policy.resolve("admission", config="priority").name == "priority"
+    with policy.force_policies(admission="deadline-slo"):
+        # scope beats config, explicit beats scope
+        assert policy.resolve("admission", config="priority"
+                              ).name == "deadline-slo"
+        assert policy.resolve("admission", "fcfs").name == "fcfs"
+    assert policy.resolve("admission", config="priority").name == "priority"
+
+
+def test_resolve_strict_on_unknown_names():
+    with pytest.raises(policy.UnknownPolicyError):
+        policy.resolve("admission", "nope")
+    with pytest.raises(policy.UnknownPolicyError):
+        policy.resolve("eviction", config="nope")
+    with pytest.raises(policy.UnknownPolicyError):
+        with policy.force_policies(preemption="nope"):
+            pass                                # validated on scope entry
+    with pytest.raises(ValueError):
+        policy.resolve("not-an-axis")
+
+
+def test_resolve_instance_passthrough_and_axis_check():
+    inst = policy.resolve("preemption", "most-blocks")
+    assert policy.resolve("preemption", inst) is inst
+    with pytest.raises(ValueError):
+        policy.resolve("admission", inst)       # wrong axis
+
+
+def test_record_resolutions_collects_axis_name_pairs():
+    with policy.record_resolutions() as log:
+        policy.resolve("admission")
+        policy.resolve("eviction", "hit-rate")
+    assert ("admission", "fcfs") in log
+    assert ("eviction", "hit-rate") in log
+
+
+def test_resolutions_give_fresh_instances_with_own_counters():
+    a = policy.resolve("admission")
+    b = policy.resolve("admission")
+    assert a is not b
+    a.count("admitted")
+    assert b.counters == {}
+
+
+# ---------------------------------------------------------------- admission
+def test_fcfs_orders_by_arrival_and_resumes_preempted_first():
+    pol = policy.resolve("admission", "fcfs")
+    old, new = _req(0, arrival=1.0), _req(1, arrival=2.0)
+    assert pol.select([new, old], now=3.0) is old
+    # a preempted request resumes ahead of an earlier fresh arrival
+    pre = _req(2, arrival=9.0)
+    pre.begin_prefill(slot=0, cached_tokens=0)
+    pre.preempt()
+    assert pre.state is RequestState.PREEMPTED
+    assert pol.select([old, new, pre], now=10.0) is pre
+
+
+def test_priority_admission_orders_by_priority_then_fcfs():
+    pol = policy.resolve("admission", "priority")
+    lo_early = _req(0, arrival=1.0, prio=0)
+    hi_late = _req(1, arrival=5.0, prio=3)
+    hi_later = _req(2, arrival=6.0, prio=3)
+    assert pol.select([lo_early, hi_later, hi_late], now=7.0) is hi_late
+
+
+def test_deadline_admission_is_edf_and_counts_misses():
+    pol = policy.resolve("admission", "deadline-slo")
+    tight = _req(0, arrival=0.0, deadline=5.0)
+    loose = _req(1, arrival=0.0, deadline=50.0)
+    none = _req(2, arrival=0.0)
+    assert pol.select([none, loose, tight], now=1.0) is tight
+    assert pol.select([none, loose], now=1.0) is loose  # deadline-free last
+    pol.on_admit(tight, now=9.0)                        # already past 5.0
+    pol.on_admit(loose, now=9.0)
+    assert pol.counters == {"admitted": 2, "deadline_missed": 1}
+
+
+# --------------------------------------------------------------- preemption
+def _running_pair(alloc):
+    """Two admitted requests: id 0 older/longer, id 1 newer/shorter."""
+    a = _req(0, prompt_len=12, max_new=8, arrival=1.0)
+    b = _req(1, prompt_len=4, max_new=8, arrival=2.0)
+    alloc.allocate(0, 12)                      # 3 blocks
+    alloc.allocate(1, 4)                       # 1 block
+    return a, b
+
+
+def test_latest_arrival_ranks_newest_first():
+    alloc = BlockAllocator(num_blocks=16, block_size=4)
+    a, b = _running_pair(alloc)
+    pol = policy.resolve("preemption", "latest-arrival")
+    assert pol.rank([a, b], alloc, now=3.0) == [b, a]
+
+
+def test_fewest_remaining_tokens_ranks_nearly_done_first():
+    alloc = BlockAllocator(num_blocks=16, block_size=4)
+    a, b = _running_pair(alloc)
+    a.output = [7] * 6                         # 2 remaining
+    b.output = [7] * 1                         # 7 remaining
+    pol = policy.resolve("preemption", "fewest-remaining-tokens")
+    assert pol.rank([a, b], alloc, now=3.0) == [a, b]
+
+
+def test_most_blocks_ranks_biggest_holder_first():
+    alloc = BlockAllocator(num_blocks=16, block_size=4)
+    a, b = _running_pair(alloc)                # a holds 3 blocks, b holds 1
+    pol = policy.resolve("preemption", "most-blocks")
+    assert pol.rank([a, b], alloc, now=3.0) == [a, b]
+    pol.on_preempt(a, alloc)
+    assert pol.counters == {"victims": 1, "blocks_reclaimed": 3}
+
+
+def test_scheduler_protects_least_preemptable_request():
+    """The ranking's bottom request is never the victim; a single running
+    request yields no victim at all."""
+    alloc = BlockAllocator(num_blocks=16, block_size=4)
+    sched = Scheduler(alloc, max_batch=4, token_budget=16)
+    a, b = _running_pair(alloc)
+    sched.running = {0: a, 1: b}
+    assert sched._pick_victim(now=3.0) is b    # latest arrival; a protected
+    sched.running = {0: a}
+    assert sched._pick_victim(now=3.0) is None
+
+
+# ----------------------------------------------------------------- eviction
+def _cache_two_prefixes(al):
+    """Register two single-block prefixes and free them (cached-free)."""
+    hot = np.arange(4, dtype=np.int32)
+    cold = np.arange(100, 104, dtype=np.int32)
+    al.allocate_prefix(0, hot)
+    al.reserve_tokens(0, 4)
+    al.commit_tokens(0, 4)
+    al.register_prefix(0, hot, 4)
+    al.allocate_prefix(1, cold)
+    al.reserve_tokens(1, 4)
+    al.commit_tokens(1, 4)
+    al.register_prefix(1, cold, 4)
+    hot_blk, cold_blk = al.table(0)[0], al.table(1)[0]
+    return hot, cold, hot_blk, cold_blk
+
+
+def test_lru_eviction_drops_oldest_freed_block():
+    al = BlockAllocator(num_blocks=2, block_size=4,
+                        eviction_policy=policy.resolve("eviction", "lru"))
+    hot, cold, hot_blk, cold_blk = _cache_two_prefixes(al)
+    al.free(0)                                  # hot freed first -> older
+    al.free(1)
+    al.allocate(2, 4)                           # needs one eviction
+    assert al.peek_prefix(hot) == 0             # oldest (hot) was dropped
+    assert al.peek_prefix(cold) == 3
+    assert al.eviction_policy.counters == {"evictions": 1}
+
+
+def test_hit_rate_eviction_keeps_reused_prefix():
+    al = BlockAllocator(num_blocks=2, block_size=4,
+                        eviction_policy=policy.resolve("eviction", "hit-rate"))
+    hot, cold, hot_blk, cold_blk = _cache_two_prefixes(al)
+    assert al.allocate_prefix(2, hot) == 3      # a hit on the hot block
+    al.free(2)
+    al.free(0)
+    al.free(1)                                  # both prefixes cached-free
+    al.allocate(3, 4)
+    # LRU would evict hot (freed before cold); hit-rate keeps it
+    assert al.peek_prefix(hot) == 3
+    assert al.peek_prefix(cold) == 0
+    assert al.block_stats(hot_blk).hits == 1
+
+
+def test_refcount_aware_eviction_keeps_once_shared_block():
+    al = BlockAllocator(
+        num_blocks=2, block_size=4,
+        eviction_policy=policy.resolve("eviction", "refcount-aware"))
+    hot, cold, hot_blk, cold_blk = _cache_two_prefixes(al)
+    al.allocate_prefix(2, hot)                  # hot shared: peak_ref -> 2
+    assert al.block_stats(hot_blk).peak_ref == 2
+    al.free(2)
+    al.free(0)
+    al.free(1)
+    al.allocate(3, 4)
+    assert al.peek_prefix(hot) == 3             # never-shared cold evicted
+    assert al.peek_prefix(cold) == 0
+
+
+def test_stats_reset_when_block_repurposed():
+    al = BlockAllocator(num_blocks=2, block_size=4)
+    hot, cold, hot_blk, cold_blk = _cache_two_prefixes(al)
+    al.allocate_prefix(2, hot)
+    assert al.block_stats(hot_blk).peak_ref == 2
+    al.free(2)
+    al.free(0)
+    al.free(1)
+    al.allocate(3, 8)                           # evicts + repurposes both
+    assert al.block_stats(hot_blk).peak_ref == 1
+    assert al.block_stats(hot_blk).hits == 0
+
+
+# ------------------------------------------------------ scheduler admission
+def test_scheduler_admits_in_policy_order():
+    alloc = BlockAllocator(num_blocks=64, block_size=4)
+    sched = Scheduler(alloc, max_batch=1, token_budget=64,
+                      admission=policy.resolve("admission", "priority"))
+    for i, prio in enumerate([0, 5, 1]):
+        sched.submit(_req(i, arrival=float(i), prio=prio))
+    sched.schedule()
+    assert list(sched.running) == [1]           # highest priority first
+    assert sched.admission.counters["admitted"] == 1
+
+
+def test_scheduler_head_of_line_blocks_per_policy():
+    """If the policy's top pick does not fit, nobody jumps the queue."""
+    alloc = BlockAllocator(num_blocks=4, block_size=4)
+    sched = Scheduler(alloc, max_batch=2, token_budget=64)
+    alloc.allocate(99, 8)                       # 2 of 4 blocks occupied
+    sched.running[99] = _req(99)                # hold them (fake runner)
+    big = _req(0, prompt_len=12, arrival=1.0)   # needs 3+1 > 2 free
+    small = _req(1, prompt_len=4, arrival=2.0)  # would fit
+    sched.submit(big)
+    sched.submit(small)
+    sched._admit()
+    assert big.state is RequestState.WAITING    # head-of-line did not fit
+    assert small.state is RequestState.WAITING  # and nobody jumped it
+
+
+# ------------------------------------------------------------- compaction
+def test_slot_compaction_remaps_survivor_down():
+    alloc = BlockAllocator(num_blocks=64, block_size=4)
+    sched = Scheduler(alloc, max_batch=4, token_budget=64)
+    reqs = [_req(i, arrival=float(i)) for i in range(4)]
+    for r in reqs:
+        sched.submit(r)
+    sched.schedule()
+    assert [reqs[i].slot for i in range(4)] == [0, 1, 2, 3]
+    for r in reqs[:3]:                          # low slots drain
+        sched.release(r)
+        r.finish()
+    assert reqs[3].slot == 3
+    sched.schedule()                            # survivor drops to slot 0
+    assert reqs[3].slot == 0
+    assert sched.num_slot_compactions == 1
+    assert sorted(sched.free_slots) == [1, 2, 3]
+
+
+def test_freed_slots_reissue_lowest_first_after_drain():
+    """After a full burst drains (nothing running), a fresh admission must
+    land on slot 0 — not on whatever slot was released last."""
+    alloc = BlockAllocator(num_blocks=64, block_size=4)
+    sched = Scheduler(alloc, max_batch=4, token_budget=64)
+    reqs = [_req(i, arrival=float(i)) for i in range(4)]
+    for r in reqs:
+        sched.submit(r)
+    sched.schedule()
+    for r in reqs:                              # drain: free list [0,1,2,3]
+        sched.release(r)
+        r.finish()
+    late = _req(9)
+    sched.submit(late)
+    sched.schedule()
+    assert late.slot == 0
+
+
+# ------------------------------------------------------------- parity sweep
+def _policy_triples():
+    """Every registered policy, exercised once: vary one axis at a time off
+    the default triple (new registrations auto-enroll — no list here)."""
+    base = dict(policy.DEFAULTS)
+    triples = [tuple(sorted(base.items()))]
+    for axis in policy.AXES:
+        for name in policy.names(axis):
+            t = dict(base, **{axis: name})
+            triples.append(tuple(sorted(t.items())))
+    return sorted(set(triples))
+
+
+@pytest.mark.slow       # one engine run per registered policy
+@pytest.mark.parametrize("triple", _policy_triples(),
+                         ids=lambda t: "/".join(n for _, n in t))
+def test_policy_triples_identical_greedy_outputs(triple, policy_parity_ref):
+    """Acceptance: each policy triple completes the same workload with
+    identical token outputs under greedy sampling.  The workload starves the
+    pool (preemption + cached-free eviction fire) and shares a prefix
+    (prefix cache populated), so all three axes actually make decisions."""
+    outputs, metrics = policy_parity_ref["run"](dict(triple))
+    assert metrics["finished"] == policy_parity_ref["n_requests"]
+    for axis, name in triple:
+        assert metrics[f"{axis}_policy"] == name
+    assert metrics["blocks_free"] == policy_parity_ref["num_blocks"]
+    ref = policy_parity_ref["outputs"]
+    assert outputs == ref, f"policy triple {dict(triple)} diverged"
+
+
+@pytest.fixture(scope="module")
+def policy_parity_ref():
+    """Shared workload runner + the default-triple reference outputs."""
+    from repro.models.api import build_model
+    from repro.serving.engine import ServingEngine
+    import jax
+
+    cfg = get_config("qwen2-1.5b").reduced(dtype="float32")
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    num_blocks, n_req = 8, 4
+    prefix = rng.integers(0, cfg.vocab_size, (4,), dtype=np.int32)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, cfg.vocab_size, (2 + i,),
+                                            dtype=np.int32)])
+               for i in range(n_req)]
+
+    def run(pol):
+        serve = ServeConfig(model=cfg.name, kv_block_size=4, max_batch=3,
+                            **pol)
+        eng = ServingEngine(model, params, cfg, serve, num_blocks=num_blocks)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(req_id=i, prompt=p, max_new_tokens=10,
+                               priority=i % 2,
+                               deadline=float(i) if i % 2 else None))
+        eng.run_until_done()
+        return ({r.req_id: r.output for r in eng.finished}, eng.metrics())
+
+    outputs, metrics = run(dict(policy.DEFAULTS))
+    assert metrics["preemptions"] > 0           # the workload really starves
+    return {"run": run, "outputs": outputs, "metrics": metrics,
+            "n_requests": n_req, "num_blocks": num_blocks}

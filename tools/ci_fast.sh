@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Fast CI tier: everything except tests marked `slow` (Pallas interpret-mode
-# kernel sweeps and other multi-minute paths). Target: < 2 minutes on CPU.
+# kernel sweeps and other multi-minute paths), plus a tiny deterministic
+# serving-policy sweep smoke. Target: < 2 minutes on CPU.
 # Full tier remains `PYTHONPATH=src python -m pytest -x -q`.
 #
 # REPRO_BACKEND=ref pins every registry-dispatched op (repro.core.dispatch)
@@ -14,3 +15,39 @@ cd "$(dirname "$0")/.."
 REPRO_BACKEND=ref \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -q -m "not slow" "$@"
+
+# Policy-sweep smoke: two serving-policy triples through the llm_e2e
+# scenario benchmarks on a toy config (REPRO_BENCH_SMOKE=1 restricts the
+# module to the bursty / shared-prefix / memory-pressure scenarios at
+# minimum sizes). Greedy sampling makes the runs deterministic; the check
+# below asserts every scenario finished its full workload under BOTH
+# triples and that each JSON row is attributed to the resolved triple —
+# a policy-dispatch regression fails fast here instead of in the slow tier.
+POLICY_SMOKE_JSON="$(mktemp /tmp/policy_smoke.XXXXXX.json)"
+trap 'rm -f "$POLICY_SMOKE_JSON"' EXIT
+REPRO_BENCH_SMOKE=1 REPRO_BACKEND=ref \
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run --only llm_e2e \
+    --policy fcfs/latest-arrival/lru,priority/fewest-remaining-tokens/hit-rate \
+    --json "$POLICY_SMOKE_JSON" >/dev/null
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python - "$POLICY_SMOKE_JSON" <<'PY'
+import json, sys
+
+results = json.load(open(sys.argv[1]))
+assert len(results) == 2, f"expected 2 policy passes, got {len(results)}"
+for res in results:
+    triple = res["requested_policy"]
+    rows = {r["name"]: r for r in res["rows"]}
+    for name in ("llm_burst_n3", "llm_prefix_shared_n3",
+                 "llm_preempt_pressure"):
+        assert name in rows, f"[{triple}] missing scenario row {name}"
+        assert rows[name]["policy"] == triple, (
+            f"[{triple}] row {name} attributed to {rows[name]['policy']!r}")
+    for name in ("llm_burst_n3", "llm_preempt_pressure"):
+        derived = dict(kv.split("=", 1) for kv in
+                       rows[name]["derived"].split(";"))
+        assert derived["finished"] == "3", (
+            f"[{triple}] {name}: finished={derived['finished']} != 3")
+print(f"policy smoke OK: {len(results)} triples x 3 scenarios")
+PY
