@@ -9,14 +9,20 @@ preemption):
   * ``llm_prefix_*``   shared-prefix workload — reports the prefix-cache hit
     rate and fresh-block allocations vs independent prompts;
   * ``llm_preempt_*``  memory-pressure preemption (pool sized below the
-    working set) — reports preemption count and completion.
+    working set) — reports preemption count and completion;
+  * ``llm_repeat_*``   repetitive-suffix workload (looping prompt motifs +
+    greedy decode loops) — the speculative-decoding showcase: the ``ngram``
+    proposer reads the repetition and multi-token steps land, reported as
+    acceptance rate and output tokens per decode lane.
 
 Every engine row carries the resolved serving-policy triple
-(``policies=admission/preemption/eviction``), so a ``benchmarks/run.py
---policy`` sweep attributes each scenario to the combination that ran it.
-Setting ``REPRO_BENCH_SMOKE=1`` restricts the run to the three scenario
-sweeps at minimum sizes — the deterministic policy-regression smoke that
-``tools/ci_fast.sh`` drives.
+(``policies=admission/preemption/eviction``) AND the resolved speculative
+proposer (``spec=...;spec_accept=...;tok_per_lane=...``), so
+``benchmarks/run.py --policy`` / ``--spec`` sweeps attribute each scenario
+to the combination that ran it.  Setting ``REPRO_BENCH_SMOKE=1`` restricts
+the run to the four scenario sweeps at minimum sizes — the deterministic
+policy/spec-regression smoke that ``tools/ci_fast.sh`` drives — and skips
+``draft-model`` passes (k draft forwards per decode step: a slow sweep).
 """
 from __future__ import annotations
 
@@ -40,6 +46,7 @@ def _drain(engine) -> float:
 
 def _emit_engine(tag: str, engine, dt: float) -> None:
     m = engine.metrics()
+    s = m["spec"]
     emit(tag, dt * 1e6,
          f"ttft_p50_ms={m['p50_ttft_s']*1e3:.1f};"
          f"ttft_p99_ms={m['p99_ttft_s']*1e3:.1f};"
@@ -51,11 +58,18 @@ def _emit_engine(tag: str, engine, dt: float) -> None:
          f"prefix_hit_rate={m['prefix_hit_rate']:.2f};"
          f"backend={m['backend']};"
          f"policies={m['admission_policy']}/{m['preemption_policy']}/"
-         f"{m['eviction_policy']}")
+         f"{m['eviction_policy']};"
+         f"spec={s['proposer']};"
+         f"spec_accept={s['acceptance_rate']:.2f};"
+         f"tok_per_lane={s['tokens_per_decode_lane']:.2f}")
 
 
 def run(quick: bool = True) -> None:
+    from repro.serving import spec as spec_lib
     smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    if smoke and spec_lib.forced_proposer() == "draft-model":
+        return      # slow sweep (k draft forwards per decode step): the
+                    # deterministic smoke covers off/ngram only
     cfg = get_config("smollm-360m").reduced(dtype="float32")
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(0))
@@ -150,3 +164,16 @@ def run(quick: bool = True) -> None:
          f"tok_s={m['throughput_tok_s']:.1f};"
          f"policies={m['admission_policy']}/{m['preemption_policy']}/"
          f"{m['eviction_policy']}")
+
+    # repetitive-suffix workload: prompts loop a short motif and greedy
+    # decodes of a tiny model fall into loops of their own — exactly the
+    # evidence the ngram proposer reads, so speculative acceptance lands
+    # here (the --spec sweep's showcase scenario)
+    n_rep = 3 if smoke else (6 if quick else 16)
+    serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=2)
+    engine = ServingEngine(model, params, cfg, serve, num_blocks=256)
+    for i in range(n_rep):
+        motif = rng.integers(0, cfg.vocab_size, (3,), dtype=np.int32)
+        engine.submit(Request(req_id=i, prompt=np.tile(motif, 4),
+                              max_new_tokens=16))
+    _emit_engine(f"llm_repeat_n{n_rep}", engine, _drain(engine))

@@ -13,12 +13,21 @@ software stacks, attributable to the implementation that really ran
 ``--policy adm/pre/evi,...`` sweeps serving-policy triples the same way:
 each triple is scoped under ``repro.serving.policy.force_policies`` so every
 serving engine built inside the pass (the bursty / shared-prefix /
-memory-pressure scenarios of ``llm_e2e``) runs that
+memory-pressure / repetitive-suffix scenarios of ``llm_e2e``) runs that
 admission/preemption/eviction combination; rows and JSON records carry the
 resolved triple.  An axis left empty (``//refcount-aware``) keeps its
 default.  Only modules in ``POLICY_SENSITIVE`` (those that build serving
 engines) repeat per triple; policy-blind modules run once, under the first
 triple — their numbers cannot depend on the policy choice.
+
+``--spec off,ngram,draft-model`` sweeps speculative-decoding proposers the
+same way again (scoped under ``repro.serving.spec.force_proposer``); every
+llm_e2e engine row carries the resolved proposer plus its acceptance rate,
+so multi-token-decode wins are attributable to one proposer.  Like policy
+sweeps, only ``SPEC_SENSITIVE`` modules repeat per proposer.  The
+``draft-model`` pass runs k extra draft forwards per decode step — treat it
+as a slow sweep (it is skipped under ``REPRO_BENCH_SMOKE=1``; the CI smoke
+sweeps ``off,ngram`` only).
 
 | module                 | paper figure/table |
 |------------------------|--------------------|
@@ -34,6 +43,7 @@ triple — their numbers cannot depend on the policy choice.
 from __future__ import annotations
 
 import argparse
+import itertools
 import json
 import sys
 import time
@@ -42,6 +52,7 @@ import traceback
 from benchmarks import common
 from repro.core import dispatch
 from repro.serving import policy as policy_lib
+from repro.serving import spec as spec_lib
 
 MODULES = [
     "gemm_roofline",
@@ -58,6 +69,25 @@ MODULES = [
 # depend on the serving-policy triple. A --policy sweep re-runs just these
 # per triple; everything else runs once (under the first triple's scope).
 POLICY_SENSITIVE = {"llm_e2e"}
+# Likewise for the speculative-decoding proposer (--spec sweep).
+SPEC_SENSITIVE = {"llm_e2e"}
+
+
+def _parse_spec_names(arg):
+    """``off,ngram,draft-model`` -> canonical proposer names (validated).
+
+    Aliases (``draft``) normalize here so pass labels, the smoke skip and
+    per-row attribution all agree on one spelling."""
+    out = []
+    for name in arg.split(","):
+        name = name.strip()
+        if name != spec_lib.OFF:
+            try:
+                name = spec_lib.get(name).name
+            except spec_lib.UnknownProposerError as e:
+                raise SystemExit(f"--spec: {e}") from None
+        out.append(name)
+    return out
 
 
 def _parse_policy_triples(arg):
@@ -108,58 +138,79 @@ def main() -> None:
                         "fcfs/latest-arrival/lru,priority/most-blocks/"
                         "hit-rate); each triple scopes the run via "
                         "repro.serving.policy.force_policies")
+    p.add_argument("--spec", default=None,
+                   help="comma-separated speculative-proposer sweep (e.g. "
+                        "off,ngram,draft-model); each name scopes the run "
+                        "via repro.serving.spec.force_proposer")
     p.add_argument("--json", default=None,
-                   help="write per-backend/per-policy result rows (+ "
-                        "resolved (op, backend) and (axis, policy) pairs) "
-                        "to this path")
+                   help="write per-backend/per-policy/per-proposer result "
+                        "rows (+ resolved (op, backend), (axis, policy) and "
+                        "proposer names) to this path")
     args = p.parse_args()
     mods = args.only.split(",") if args.only else MODULES
     backends = args.backend.split(",") if args.backend else [None]
     policies = (_parse_policy_triples(args.policy) if args.policy
                 else [None])
+    specs = _parse_spec_names(args.spec) if args.spec else [None]
     print("name,us_per_call,derived")
     failures = 0
     results = []
     for b in backends:
         if b is not None:
             print(f"# backend sweep: {b}", file=sys.stderr)
-        for pi, pol in enumerate(policies):
+        for (pi, pol), (si, spc) in itertools.product(enumerate(policies),
+                                                      enumerate(specs)):
             pol_kwargs = {a: (pol or {}).get(a) for a in policy_lib.AXES}
             pol_str = ("/".join(pol_kwargs[a] or policy_lib.DEFAULTS[a]
                                 for a in policy_lib.AXES)
                        if pol is not None else None)
             if pol_str is not None:
                 print(f"# policy sweep: {pol_str}", file=sys.stderr)
+            if spc is not None:
+                print(f"# spec sweep: {spc}", file=sys.stderr)
             for m in mods:
                 if pol is not None and pi > 0 and m not in POLICY_SENSITIVE:
                     continue               # policy-blind: one pass is enough
+                if spc is not None and si > 0 and m not in SPEC_SENSITIVE:
+                    continue               # proposer-blind: ditto
                 mod = __import__(f"benchmarks.{m}", fromlist=["run"])
                 t0 = time.time()
                 common.RECORDS.clear()
-                log, plog = [], []
+                log, plog, slog = [], [], []
                 try:
                     with dispatch.force_backend(b), \
                             dispatch.record_resolutions() as log, \
                             policy_lib.force_policies(**pol_kwargs), \
-                            policy_lib.record_resolutions() as plog:
+                            policy_lib.record_resolutions() as plog, \
+                            spec_lib.force_proposer(spc), \
+                            spec_lib.record_resolutions() as slog:
                         mod.run(quick=not args.full)
                 except Exception:
                     traceback.print_exc()
                     failures += 1
                 resolved_pol = _resolved_triple(plog) if plog else None
+                resolved_spec = (sorted(set(slog))[0]
+                                 if len(set(slog)) == 1 else None)
                 results.append({
                     "module": m,
                     "requested_backend": b or "auto",
                     "requested_policy": pol_str or "default",
+                    "requested_spec": spc or "default",
                     "resolved": sorted({f"{op}={bk}" for op, bk in log}),
                     "resolved_policies": sorted(
                         {f"{ax}={nm}" for ax, nm in plog}),
-                    "rows": [dict(r, policy=resolved_pol) if resolved_pol
-                             else dict(r) for r in common.RECORDS],
+                    "resolved_spec": sorted(set(slog)),
+                    "rows": [dict(r) for r in common.RECORDS],
                 })
+                for r in results[-1]["rows"]:
+                    if resolved_pol:
+                        r["policy"] = resolved_pol
+                    if resolved_spec:
+                        r["spec"] = resolved_spec
                 print(f"# {m} done in {time.time()-t0:.1f}s"
                       + (f" [backend={b}]" if b else "")
-                      + (f" [policy={pol_str}]" if pol_str else ""),
+                      + (f" [policy={pol_str}]" if pol_str else "")
+                      + (f" [spec={spc}]" if spc else ""),
                       file=sys.stderr)
     if args.json:
         with open(args.json, "w") as f:

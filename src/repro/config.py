@@ -339,6 +339,11 @@ class ServeConfig:
     admission: str = "fcfs"        # fcfs | priority | deadline-slo
     preemption: str = "latest-arrival"   # | fewest-remaining-tokens | most-blocks
     eviction: str = "lru"          # lru | hit-rate | refcount-aware
+    # Speculative decoding (repro.serving.spec): proposer name resolved
+    # through the spec registry ("off" = one token per request per step),
+    # and the max draft tokens verified per request per step.
+    spec: str = "off"              # off | ngram | draft-model
+    spec_k: int = 4
     parallel: ParallelConfig = field(default_factory=ParallelConfig)
     seed: int = 0
 

@@ -4,11 +4,15 @@ Host side (`BlockAllocator`): a refcounted free-list allocator over a fixed
 pool of KV blocks — vLLM's memory manager, including its two serving-side
 tricks:
 
-  * **Prefix caching** — every *full* block of a prompt is content-hashed
+  * **Prefix caching** — every *full* block of a sequence is content-hashed
     (chained over the prefix, so a block's key commits to everything before
-    it). Freed blocks whose content is hashed are parked in a cached-free LRU
-    instead of being scrubbed; a later prompt with the same prefix re-adopts
-    them with a refcount bump and skips recomputing their KV.
+    it): prompt blocks as prefill chunks commit, and blocks filled during
+    DECODE under their true prompt+generation content (the engine's
+    generated-token registration — preemption-resume recompute and repeated
+    prompt+generation prefixes hit the cache). Freed blocks whose content is
+    hashed are parked in a cached-free LRU instead of being scrubbed; a
+    later prompt with the same prefix re-adopts them with a refcount bump
+    and skips recomputing their KV.
   * **Copy-on-write** — a block shared by several requests (refcount > 1) is
     never written in place; :meth:`reserve_tokens` transparently allocates a
     private copy and records a (src, dst) pair for the engine to apply on the
@@ -24,7 +28,11 @@ oldest-freed-first behaviour.
 
 Sequence state is mutated ONLY through the public API — ``allocate`` /
 ``allocate_prefix``, ``reserve_tokens`` + ``commit_tokens``, ``rewind`` /
-``truncate``, ``free`` — so engines never poke ``_lens`` directly.
+``truncate``, ``free`` — so engines never poke ``_lens`` directly.  The
+reserve/commit/truncate triple is also the speculative-decoding rollback
+primitive: reserve K+1 write slots, commit only the accepted prefix, and
+truncate to the committed length — refcounts and the free list are restored
+exactly for a fully-rejected step (``tests/test_spec.py``).
 
 Per scheduling step the allocator also renders the device layouts:
   * a padded 2D **BlockTable** (B, max_blocks)  — the baseline layout whose

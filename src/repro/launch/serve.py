@@ -34,6 +34,14 @@ def main() -> None:
                        help=f"serving {axis} policy (repro.serving.policy); "
                             "resolved through the policy registry and "
                             "reported in metrics")
+    from repro.serving import spec as spec_lib
+    p.add_argument("--spec", default=spec_lib.OFF,
+                   choices=spec_lib.names() + sorted(spec_lib.ALIASES),
+                   help="speculative-decoding proposer (repro.serving.spec); "
+                        "'off' decodes one token per request per step")
+    p.add_argument("--spec-k", type=int, default=4,
+                   help="max draft tokens proposed+verified per request "
+                        "per step")
     args = p.parse_args()
 
     cfg = get_config(args.arch)
@@ -44,7 +52,8 @@ def main() -> None:
     serve = ServeConfig(model=args.arch, kv_block_size=args.block_size,
                         max_batch=args.requests, backend=args.backend,
                         admission=args.admission, preemption=args.preemption,
-                        eviction=args.eviction)
+                        eviction=args.eviction, spec=args.spec,
+                        spec_k=args.spec_k)
     total_blocks = args.requests * (
         -(-(args.prompt_len + args.max_new) // args.block_size) + 1)
     engine = ServingEngine(model, params, cfg, serve,
@@ -71,6 +80,11 @@ def main() -> None:
           f"cow copies {m['cow_copies']}")
     print(f"policies {m['admission_policy']}/{m['preemption_policy']}/"
           f"{m['eviction_policy']}  counters {m['policy_counters']}")
+    s = m["spec"]
+    print(f"spec {s['proposer']} k={s['k']}  "
+          f"accept_rate {s['acceptance_rate']:.2f}  "
+          f"mean_accepted {s['mean_accepted_len']:.2f}  "
+          f"tokens/step {m['tokens_per_step']:.2f}")
 
 
 if __name__ == "__main__":

@@ -293,8 +293,14 @@ class TransformerLM:
           token_pos (T,)  absolute position of each lane's token
           slots     (T, 2) pool (block, offset) where each lane's KV lands
           last_lane (B,)  lane index holding each slot's last valid token
+          logit_lanes (B, R)  [optional] lane indices to unembed per slot —
+                          the speculative-verify path: each decoding slot
+                          carries its last committed token plus K drafted
+                          tokens, and needs a logit row per lane to judge
+                          every draft in this ONE forward
 
-        Returns (logits (B, V) at each slot's ``last_lane``, new pools).
+        Returns (logits, new pools): logits (B, V) at each slot's
+        ``last_lane``, or (B, R, V) at ``logit_lanes`` when present.
         """
         cfg = self.cfg
         a = cfg.attention
@@ -327,6 +333,12 @@ class TransformerLM:
 
         x, (pk, pv) = jax.lax.scan(body, x, (params["layers"], pools["k"],
                                              pools["v"]))
+        if "logit_lanes" in lists:
+            # Speculative verify: a row per (slot, lane) pair, (B, R, V).
+            x_sel = jnp.take(x, lists["logit_lanes"], axis=0)   # (B, R, D)
+            x_sel = rmsnorm(params["final_norm"], x_sel, cfg.norm_eps)
+            return (unembed(params.get("head", params["embed"]), x_sel),
+                    {"k": pk, "v": pv})
         # Unembed only each slot's last valid lane: (B, D) -> (B, V).
         x_last = jnp.take(x, lists["last_lane"], axis=0)
         x_last = rmsnorm(params["final_norm"], x_last[:, None], cfg.norm_eps)

@@ -31,8 +31,18 @@ Step anatomy (the paper's BlockList optimization, end-to-end):
   * finished requests free their blocks immediately; hashed blocks are
     parked cached-free for future prefix hits, evicted by the registered
     eviction policy when the pool runs dry;
-  * TTFT / TPOT percentiles, throughput, preemption and prefix-hit counters
-    via ``repro.serving.metrics`` (paper Fig 17e metrics).
+  * full blocks produced during DECODE are hash-registered too (not just
+    prompt prefill), so preemption-resume recompute and repeated
+    prompt+generation prefixes hit the cache;
+  * with a registered speculative proposer (``repro.serving.spec``), each
+    decoding request's step carries its last token plus K drafted tokens
+    through the SAME fused program — the chunked attention grid already
+    handles multi-token queries — followed by a batched rejection-accept
+    (``verify_batched``) that emits the longest accepted prefix + one
+    corrected/bonus token and rewinds speculatively reserved KV blocks;
+  * TTFT / TPOT percentiles, throughput, preemption / prefix-hit /
+    speculation counters and per-step-phase timing buckets via
+    ``repro.serving.metrics`` (paper Fig 17e metrics).
 """
 from __future__ import annotations
 
@@ -49,6 +59,8 @@ from repro.core.paged_kv import (
     BlockAllocator, copy_pool_blocks, make_pool)
 from repro.serving import policy as policy_lib
 from repro.serving import sampling as sampling_lib
+from repro.serving import spec as spec_lib
+from repro.serving import request as request_lib
 from repro.serving.metrics import EngineMetrics
 from repro.serving.request import Request, RequestState, SamplingParams
 from repro.serving.scheduler import Scheduler, StepPlan
@@ -56,19 +68,15 @@ from repro.serving.scheduler import Scheduler, StepPlan
 __all__ = ["Request", "RequestState", "SamplingParams", "ServingEngine"]
 
 
-def _bucket(n: int, lo: int = 8) -> int:
-    """Round lane count up to a power of two (bounded jit-cache growth)."""
-    b = lo
-    while b < n:
-        b *= 2
-    return b
+_bucket = request_lib.bucket_pow2      # lane/slot counts -> power-of-two
 
 
 class ServingEngine:
     def __init__(self, model, params, cfg: ModelConfig, serve: ServeConfig,
                  *, num_blocks: Optional[int] = None, eos_id: int = -1,
                  token_budget: Optional[int] = None, seed: int = 0,
-                 admission=None, preemption=None, eviction=None):
+                 admission=None, preemption=None, eviction=None,
+                 proposer=None):
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -124,6 +132,30 @@ class ServingEngine:
 
         self._step_fn = jax.jit(fused)
 
+        # Speculative decoding (repro.serving.spec): resolve the proposer
+        # like the policy triple — explicit ctor arg > force_proposer scope >
+        # ServeConfig.spec > "off" — and pin it for the run. With a proposer
+        # the engine runs the spec step: same fused forward (logit rows at
+        # every draft lane via ``logit_lanes``) + batched rejection-accept.
+        self.proposer = spec_lib.resolve(proposer, config=serve.spec)
+        self.spec_k = max(1, serve.spec_k) if self.proposer else 0
+        self._spec_counters = {"steps": 0, "drafted_steps": 0,
+                               "decode_lanes": 0, "proposed_tokens": 0,
+                               "accepted_tokens": 0, "emitted_tokens": 0,
+                               "rollback_blocks": 0}
+        if self.proposer is not None:
+            self.proposer.bind(self)
+
+            def fused_spec(params, pools, lists, tokens, key, temps, top_ks,
+                           top_ps, drafts, draft_lens):
+                logits, pools = model.decode_tokens_paged(
+                    params, pools, lists, tokens, attn_backend=attn_backend)
+                out, acc = spec_lib.verify_batched(
+                    key, logits, drafts, draft_lens, temps, top_ks, top_ps)
+                return out, acc, pools
+
+            self._spec_step_fn = jax.jit(fused_spec)
+
     # -------------------------------------------------------------- lifecycle
     def submit(self, req: Request) -> None:
         if len(req.prompt) == 0:
@@ -160,6 +192,11 @@ class ServingEngine:
         # so max(slot)+1 tracks the live batch closely.
         reqs = list(plan.decode) + [req for req, _ in plan.prefill]
         Bs = min(_bucket(1 + max(req.slot for req in reqs)), B)
+        # Verify rows only when this step actually carries drafts: a
+        # draftless step (proposer came up empty, drafts shed, prefill-only)
+        # runs the plain (B, V) program instead of paying R unembed rows.
+        spec_step = bool(plan.spec)
+        R = self.spec_k + 1 if spec_step else 1         # logit rows per slot
         tokens = np.zeros((T,), np.int32)
         token_req = np.full((T,), Bs, np.int32)         # Bs == padding lane
         token_pos = np.zeros((T,), np.int32)
@@ -169,20 +206,33 @@ class ServingEngine:
         temps = np.zeros((Bs,), np.float32)
         top_ks = np.zeros((Bs,), np.int32)
         top_ps = np.ones((Bs,), np.float32)
+        logit_lanes = np.zeros((Bs, R), np.int32)
+        draft_tokens = np.zeros((Bs, max(R - 1, 1)), np.int32)
+        draft_lens = np.zeros((Bs,), np.int32)
         lane = 0
-        committed: List[tuple] = []                     # (req, n_tokens)
+        committed: List[tuple] = []             # (req, n_tokens, start_pos)
         for req in plan.decode:
             rid = req.req_id
             pos = alloc.seq_len(rid)
-            s = alloc.reserve_tokens(rid, 1)
+            draft = plan.spec.get(rid)
+            n = 1 if draft is None else 1 + len(draft)
+            ss = alloc.reserve_tokens(rid, n)
             tokens[lane] = req.output[-1]
-            token_req[lane] = req.slot
-            token_pos[lane] = pos
-            slots[lane] = s[0]
-            last_lane[req.slot] = lane
-            kv_lens[req.slot] = pos + 1
-            lane += 1
-            committed.append((req, 1))
+            if n > 1:                           # drafted lanes ride behind
+                tokens[lane + 1:lane + n] = draft
+                draft_tokens[req.slot, :n - 1] = draft
+                draft_lens[req.slot] = n - 1
+            token_req[lane:lane + n] = req.slot
+            token_pos[lane:lane + n] = pos + np.arange(n)
+            slots[lane:lane + n] = ss
+            last_lane[req.slot] = lane + n - 1
+            # a row per lane; unused rows repeat the last lane (masked by
+            # draft_lens in verify_batched)
+            logit_lanes[req.slot] = np.minimum(lane + np.arange(R),
+                                               lane + n - 1)
+            kv_lens[req.slot] = pos + n
+            lane += n
+            committed.append((req, n, pos))
         for req, n in plan.prefill:
             rid = req.req_id
             pos0 = alloc.seq_len(rid)
@@ -193,17 +243,19 @@ class ServingEngine:
             token_pos[lane:lane + n] = pos0 + np.arange(n)
             slots[lane:lane + n] = ss
             last_lane[req.slot] = lane + n - 1
+            logit_lanes[req.slot] = lane + n - 1        # only row 0 is read
             kv_lens[req.slot] = pos0 + n
             lane += n
-            committed.append((req, n))
-        for req, _ in committed:
+            committed.append((req, n, pos0))
+        for req, _, _ in committed:
             temps[req.slot] = req.sampling.temperature
             top_ks[req.slot] = req.sampling.top_k
             top_ps[req.slot] = req.sampling.top_p
         # Block lists AFTER reservations (tables may have grown / CoW'd).
         # A prefix-shared block is effectual for EVERY holder, so the entry
         # count can exceed the pool size — bucket the capacity like T.
-        tables = {req.req_id: alloc.table(req.req_id) for req, _ in committed}
+        tables = {req.req_id: alloc.table(req.req_id)
+                  for req, _, _ in committed}
         needed = sum(len(t) for t in tables.values())
         cap = (self.max_total if needed <= self.max_total
                else _bucket(needed, lo=self.max_total))
@@ -211,7 +263,7 @@ class ServingEngine:
         br = np.full((cap,), Bs, np.int32)
         bp = np.zeros((cap,), np.int32)
         cursor = 0
-        for req, _ in committed:
+        for req, _, _ in committed:
             table = tables[req.req_id]
             n = len(table)
             bl[cursor:cursor + n] = table
@@ -226,18 +278,47 @@ class ServingEngine:
             "slots": jnp.asarray(slots),
             "last_lane": jnp.asarray(last_lane),
         }
+        if spec_step:
+            lists["logit_lanes"] = jnp.asarray(logit_lanes)
         sample_args = (jnp.asarray(temps), jnp.asarray(top_ks),
                        jnp.asarray(top_ps))
-        return lists, jnp.asarray(tokens), sample_args, committed
+        spec_args = ((jnp.asarray(draft_tokens), jnp.asarray(draft_lens))
+                     if spec_step else None)
+        return lists, jnp.asarray(tokens), sample_args, spec_args, committed
 
     # -------------------------------------------------------------- main loop
+    def _propose(self) -> Dict[int, np.ndarray]:
+        """Ask the proposer for drafts for every DECODING request.
+
+        Runs BEFORE scheduling so the scheduler can budget the extra lanes
+        (blocks and tokens); a request preempted in the fit loop simply
+        drops its draft.  The draft length is clamped so the step can never
+        emit past ``max_new_tokens`` — the worst-case block bound checked at
+        submit() is unchanged by speculation.
+        """
+        drafts: Dict[int, np.ndarray] = {}
+        for req in self.scheduler.running.values():
+            if req.state is not RequestState.DECODING:
+                continue
+            k = min(self.spec_k, req.max_new_tokens - len(req.output) - 1)
+            d = (self.proposer.propose(req, k) if k > 0
+                 else np.zeros((0,), np.int32))
+            self.proposer.on_propose(req, len(d))
+            if len(d):
+                drafts[req.req_id] = np.asarray(d, np.int32)
+        return drafts
+
     def step(self) -> int:
-        """One engine iteration: schedule + ONE fused chunked-prefill/decode
-        program + host-side lifecycle updates. Returns #tokens processed."""
-        plan = self.scheduler.schedule()
+        """One engine iteration: [propose] + schedule + ONE fused
+        chunked-prefill/decode[/verify] program + host-side lifecycle
+        updates. Returns #tokens processed."""
+        t0 = time.perf_counter()
+        drafts = self._propose() if self.proposer is not None else {}
+        t1 = time.perf_counter()
+        plan = self.scheduler.schedule(spec_drafts=drafts)
         if plan.num_tokens == 0:
             return 0
-        lists, tokens, sample_args, committed = self._render(plan)
+        lists, tokens, sample_args, spec_args, committed = self._render(plan)
         # apply copy-on-write block copies before the step touches the pool
         copies = self.alloc.drain_copies()
         if copies:
@@ -247,15 +328,61 @@ class ServingEngine:
                           for k, p in self.pools.items()}
         self._step_count += 1
         key = jax.random.fold_in(self._key, self._step_count)
-        nxt, self.pools = self._step_fn(self.params, self.pools, lists,
-                                        tokens, key, *sample_args)
-        nxt = np.asarray(nxt)
+        t2 = time.perf_counter()
+        if spec_args is not None:               # this step carries drafts
+            out, acc, self.pools = self._spec_step_fn(
+                self.params, self.pools, lists, tokens, key, *sample_args,
+                *spec_args)
+            out, acc = np.asarray(out), np.asarray(acc)
+            nxt = out[:, 0]
+        else:
+            out = acc = None
+            nxt, self.pools = self._step_fn(self.params, self.pools, lists,
+                                            tokens, key, *sample_args)
+            nxt = np.asarray(nxt)
+        t3 = time.perf_counter()
         now = time.time()
-        for req, n in committed:
-            self.alloc.commit_tokens(req.req_id, n)
-        for req, n in committed:
+        emitted = 0
+        for req, n, _ in committed:
+            if req.state is RequestState.DECODING and acc is not None:
+                # speculative lane: commit the accepted prefix, roll back
+                # the rejected tail's reserved blocks (rewind semantics)
+                a = min(int(acc[req.slot]), n - 1)
+                self.alloc.commit_tokens(req.req_id, 1 + a)
+                if a < n - 1:
+                    table_before = len(self.alloc.table(req.req_id))
+                    self.alloc.truncate(req.req_id,
+                                        self.alloc.seq_len(req.req_id))
+                    self._spec_counters["rollback_blocks"] += (
+                        table_before - len(self.alloc.table(req.req_id)))
+            else:
+                self.alloc.commit_tokens(req.req_id, n)
+        for req, n, pos0 in committed:
             if req.state is RequestState.DECODING:
-                self._append_token(req, int(nxt[req.slot]), now)
+                if acc is None:                         # plain decode lane
+                    self._register_generated(req, pos0)
+                    self._append_token(req, int(nxt[req.slot]), now)
+                    emitted += 1
+                else:                                   # speculative lane
+                    a = min(int(acc[req.slot]), n - 1)
+                    row = out[req.slot]
+                    self._register_generated(req, pos0, accepted=row[:a])
+                    appended = 0
+                    for j in range(a + 1):
+                        self._append_token(req, int(row[j]), now)
+                        appended += 1
+                        if req.state is RequestState.FINISHED:
+                            break               # EOS inside the accepted run
+                    emitted += appended
+                    if n > 1:
+                        # count only DRAFTED lanes, and only tokens that
+                        # actually reached the output stream (an EOS mid-
+                        # prefix drops the tokens behind it) — an undrafted
+                        # lane riding a spec step is a plain decode
+                        self._spec_counters["decode_lanes"] += 1
+                        self._spec_counters["accepted_tokens"] += min(
+                            a, appended)
+                        self._spec_counters["emitted_tokens"] += appended
             else:                                       # prefill chunk
                 start = req.prefill_pos
                 req.prefill_pos += n
@@ -266,7 +393,39 @@ class ServingEngine:
                     if req.first_token_at is None:
                         req.first_token_at = now
                     self._append_token(req, int(nxt[req.slot]), now)
+                    emitted += 1
+        if self.proposer is not None:
+            self._spec_counters["steps"] += 1
+            if plan.spec:
+                self._spec_counters["drafted_steps"] += 1
+                self._spec_counters["proposed_tokens"] += sum(
+                    len(d) for d in plan.spec.values())
+        t4 = time.perf_counter()
+        self._metrics.record_step(
+            num_tokens=plan.num_tokens, emitted_tokens=emitted,
+            phases={"propose": t1 - t0, "schedule_render": t2 - t1,
+                    "device": t3 - t2, "commit": t4 - t3})
         return plan.num_tokens
+
+    def _register_generated(self, req: Request, pos0: int,
+                            accepted: Optional[np.ndarray] = None) -> None:
+        """Hash-register full KV blocks produced during decode.
+
+        Prompt prefill publishes block hashes as chunks commit; this is the
+        decode-side analogue (ROADMAP: generated-token prefix caching): any
+        block FILLED by this step's committed tokens becomes prefix-cache
+        content, so preemption-resume recompute and repeated
+        prompt+generation prefixes get cache hits.  ``accepted`` carries
+        this step's committed-but-not-yet-appended draft tokens (spec path).
+        """
+        new_len = self.alloc.seq_len(req.req_id)
+        bs = self.alloc.block_size
+        if pos0 // bs == new_len // bs:         # no block filled this step
+            return
+        seq = req.resume_tokens()
+        if accepted is not None and len(accepted):
+            seq = np.concatenate([seq, np.asarray(accepted, np.int32)])
+        self.alloc.register_prefix(req.req_id, seq, new_len, start=pos0)
 
     def _append_token(self, req: Request, tok: int, now: float) -> None:
         req.output.append(tok)
@@ -301,6 +460,29 @@ class ServingEngine:
             "prefix_hit_rate": hits / (hits + misses) if hits + misses else 0.0,
             "cow_copies": self.alloc.cow_copies,
         })
+        # Speculative-decoding attribution: the resolved proposer plus the
+        # acceptance evidence (rate, mean accepted length, rollbacks, shed
+        # draft sets) — a --spec sweep row is attributable to one proposer.
+        c = self._spec_counters
+        m["spec"] = {
+            "proposer": self.proposer.name if self.proposer else spec_lib.OFF,
+            "k": self.spec_k,
+            "acceptance_rate": (c["accepted_tokens"] / c["proposed_tokens"]
+                                if c["proposed_tokens"] else 0.0),
+            "mean_accepted_len": (c["accepted_tokens"] / c["drafted_steps"]
+                                  if c["drafted_steps"] else 0.0),
+            # output tokens emitted per DRAFTED (request, step) decode lane:
+            # > 1 iff accepted drafts actually land (batch-size free;
+            # undrafted lanes — whole draftless steps run the plain (B, V)
+            # program — don't count)
+            "tokens_per_decode_lane": (c["emitted_tokens"] / c["decode_lanes"]
+                                       if c["decode_lanes"] else 0.0),
+            "spec_sheds": self.scheduler.num_spec_sheds,
+            **c,
+        }
+        if self.proposer is not None:
+            m["spec"].update({f"proposer.{k}": v for k, v in
+                              sorted(self.proposer.counters.items())})
         # The resolved policy triple the run executed with, plus each
         # policy's own counters (admitted / victims / evictions / ...) keyed
         # "<axis>.<counter>" — rows from a --policy sweep are attributable to

@@ -1,7 +1,10 @@
 """Serving SLO metrics: streaming percentile tracker for TTFT/TPOT
 (paper Fig 17e's axes) without storing every sample, plus the engine-level
 aggregate (:class:`EngineMetrics`) covering the scheduler-driven lifecycle:
-latency percentiles, throughput, preemption and prefix-cache counters."""
+latency percentiles, throughput, preemption and prefix-cache counters,
+tokens-per-step, and per-step-phase wall-time buckets (propose / schedule /
+device / commit) so speculative-decoding overhead is visible without a
+profiler."""
 from __future__ import annotations
 
 import bisect
@@ -55,6 +58,22 @@ class EngineMetrics:
     # Registry-resolved attention backend the run executed with (see
     # repro.core.dispatch) — perf numbers are attributable to ONE impl.
     backend: str = ""
+    # Per-step accounting: lane tokens processed vs output tokens emitted
+    # (speculative decoding makes these diverge — emitted/steps > 1 is the
+    # multi-token-per-step win), plus wall-time per step phase.
+    steps: int = 0
+    step_tokens: int = 0
+    emitted_tokens: int = 0
+    phase_s: Dict[str, float] = field(default_factory=dict)
+
+    def record_step(self, *, num_tokens: int, emitted_tokens: int,
+                    phases: Dict[str, float]) -> None:
+        """One engine step: lane count, emitted output tokens, phase walls."""
+        self.steps += 1
+        self.step_tokens += num_tokens
+        self.emitted_tokens += emitted_tokens
+        for k, v in phases.items():
+            self.phase_s[k] = self.phase_s.get(k, 0.0) + v
 
     def record_finished(self, *, ttft: Optional[float],
                         tpot: Optional[float], num_output_tokens: int,
@@ -89,4 +108,10 @@ class EngineMetrics:
             "p50_tpot_s": self.tpot.percentile(50),
             "p99_tpot_s": self.tpot.percentile(99),
             "throughput_tok_s": self.output_tokens / dt if dt > 0 else 0.0,
+            "steps": self.steps,
+            "tokens_per_step": (self.emitted_tokens / self.steps
+                                if self.steps else 0.0),
+            "lane_tokens_per_step": (self.step_tokens / self.steps
+                                     if self.steps else 0.0),
+            "phase_s": dict(self.phase_s),
         }

@@ -10,7 +10,11 @@ A request moves through
 * PREFILLING  admitted; prompt KV is being written chunk-by-chunk (chunked
   prefill — chunks ride inside the fused decode step, they never stall the
   decode batch).
-* DECODING    prompt fully cached; one token per engine step.
+* DECODING    prompt fully cached; one token per engine step — or, with a
+  speculative proposer resolved (``repro.serving.spec``), 1 to K+1 tokens
+  per step: the engine carries the last token plus K drafts through one
+  fused forward and commits the accepted prefix (the state machine is
+  unchanged; only the per-step token count varies).
 * PREEMPTED   evicted under block pressure; KV blocks were released and the
   request re-queued at the FRONT of the wait queue. On re-admission it
   recomputes KV for ``prompt + output`` (vLLM's recompute-style preemption),
@@ -28,6 +32,19 @@ from dataclasses import dataclass, field
 from typing import List, Optional
 
 import numpy as np
+
+
+def bucket_pow2(n: int, lo: int = 8) -> int:
+    """Round ``n`` up to a power of two, at least ``lo``.
+
+    The serving stack's shape-bucketing helper (bounded jit-cache growth):
+    the engine buckets token-lane and active-slot counts, the draft-model
+    proposer buckets its context window.
+    """
+    b = lo
+    while b < n:
+        b *= 2
+    return b
 
 
 class RequestState(enum.Enum):

@@ -36,6 +36,32 @@ def sample(key, logits, *, temperature: float = 1.0, top_k: int = 0,
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 
+def filter_logits(lg, temp, kk, pp):
+    """One lane's temperature/top-k/top-p filtered f32 logits (V,).
+
+    The masking half of :func:`sample_batched`, shared with the speculative
+    verify step (``repro.serving.spec.verify``) so both paths agree on the
+    exact target distribution.  ``temp <= 0`` lanes are handled by the
+    CALLER (they reduce to argmax over the raw logits).
+    """
+    V = lg.shape[-1]
+    lg32 = lg.astype(jnp.float32)
+    scaled = lg32 / jnp.maximum(temp, 1e-6)
+    sorted_desc = jnp.sort(scaled)[::-1]
+    # top-k: keep logits >= the kth largest (kk <= 0 disables)
+    kth = jnp.where(kk > 0,
+                    sorted_desc[jnp.clip(kk, 1, V) - 1], -jnp.inf)
+    masked = jnp.where(scaled < kth, -jnp.inf, scaled)
+    # top-p AFTER top-k (same order as :func:`sample`): smallest prefix
+    # of the surviving probs with mass >= pp
+    sorted_m = jnp.sort(masked)[::-1]
+    probs = jax.nn.softmax(sorted_m)
+    cum = jnp.cumsum(probs)
+    cutoff_idx = jnp.sum(cum < pp)
+    cutoff = sorted_m[jnp.clip(cutoff_idx, 0, V - 1)]
+    return jnp.where(masked < cutoff, -jnp.inf, masked)
+
+
 def sample_batched(key, logits, temperatures, top_ks, top_ps):
     """Per-request sampling under ONE jit: logits (B, V) -> tokens (B,).
 
@@ -47,22 +73,9 @@ def sample_batched(key, logits, temperatures, top_ks, top_ps):
     keys = jax.random.split(key, B)
 
     def one(k, lg, temp, kk, pp):
-        lg32 = lg.astype(jnp.float32)
-        scaled = lg32 / jnp.maximum(temp, 1e-6)
-        sorted_desc = jnp.sort(scaled)[::-1]
-        # top-k: keep logits >= the kth largest (kk <= 0 disables)
-        kth = jnp.where(kk > 0,
-                        sorted_desc[jnp.clip(kk, 1, V) - 1], -jnp.inf)
-        masked = jnp.where(scaled < kth, -jnp.inf, scaled)
-        # top-p AFTER top-k (same order as :func:`sample`): smallest prefix
-        # of the surviving probs with mass >= pp
-        sorted_m = jnp.sort(masked)[::-1]
-        probs = jax.nn.softmax(sorted_m)
-        cum = jnp.cumsum(probs)
-        cutoff_idx = jnp.sum(cum < pp)
-        cutoff = sorted_m[jnp.clip(cutoff_idx, 0, V - 1)]
-        masked = jnp.where(masked < cutoff, -jnp.inf, masked)
+        masked = filter_logits(lg, temp, kk, pp)
         tok = jax.random.categorical(k, masked)
-        return jnp.where(temp <= 0.0, jnp.argmax(lg32), tok).astype(jnp.int32)
+        return jnp.where(temp <= 0.0, jnp.argmax(lg.astype(jnp.float32)),
+                         tok).astype(jnp.int32)
 
     return jax.vmap(one)(keys, logits, temperatures, top_ks, top_ps)

@@ -16,16 +16,20 @@ Per engine step the scheduler:
      (prefix-cached blocks are adopted at admission and don't count against
      free space).  Head-of-line semantics are per policy: if the policy's
      top pick does not fit, admission stops — no queue-jumping past it.
-  3. **Budgets prefill**: every DECODING request always gets its one decode
-     lane; PREFILLING requests share a per-step token budget
+  3. **Budgets tokens**: every DECODING request always gets its decode
+     lane — plus, under speculative decoding, one lane per drafted token
+     (``StepPlan.spec``), charged against the per-step token budget ahead
+     of prefill; PREFILLING requests share what remains of the budget
      (``token_budget``, vLLM's ``max_num_batched_tokens`` analogue) so long
      prompts are chunked across steps instead of stalling the decode batch.
   4. **Preempts under block pressure**: if the step's block demand (new
-     decode blocks + prefill-chunk blocks + copy-on-write copies) exceeds
-     the pool, the preemption policy's top-ranked victim is evicted — its
-     blocks are released and it re-queues for recompute-style resume (see
-     ``repro.serving.request``).  The policy's least-preemptable request is
-     never evicted, so one request always makes progress.
+     decode/draft blocks + prefill-chunk blocks + copy-on-write copies)
+     exceeds the pool, speculative drafts are shed first (losing a step's
+     speedup beats recomputing a victim's KV); then the preemption policy's
+     top-ranked victim is evicted — its blocks are released and it
+     re-queues for recompute-style resume (see ``repro.serving.request``).
+     The policy's least-preemptable request is never evicted, so one
+     request always makes progress.
 
 The scheduler owns the request queues and the slot free-list; it never
 touches device state.
@@ -37,6 +41,8 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.paged_kv import BlockAllocator, OutOfBlocksError
 from repro.serving import policy as policy_lib
 from repro.serving.request import Request, RequestState
@@ -44,14 +50,26 @@ from repro.serving.request import Request, RequestState
 
 @dataclass
 class StepPlan:
-    """What the engine should run this step."""
+    """What the engine should run this step.
+
+    ``spec`` maps a DECODING request's id to its drafted tokens for this
+    step (speculative decoding): that request's lane count is ``1 +
+    len(spec[req_id])`` instead of 1, and the extra lanes were budgeted by
+    the scheduler (block demand AND token budget) like prefill chunks.
+    """
 
     decode: List[Request] = field(default_factory=list)
     prefill: List[Tuple[Request, int]] = field(default_factory=list)  # (req, n)
+    spec: Dict[int, "np.ndarray"] = field(default_factory=dict)
+
+    def decode_tokens(self, req: Request) -> int:
+        """Lane count of one decode request: 1 + its drafted tokens."""
+        return 1 + len(self.spec.get(req.req_id, ()))
 
     @property
     def num_tokens(self) -> int:
-        return len(self.decode) + sum(n for _, n in self.prefill)
+        return (sum(self.decode_tokens(r) for r in self.decode)
+                + sum(n for _, n in self.prefill))
 
 
 class Scheduler:
@@ -70,6 +88,7 @@ class Scheduler:
         self.free_slots: List[int] = list(range(max_batch - 1, -1, -1))
         self.num_preemptions = 0
         self.num_slot_compactions = 0
+        self.num_spec_sheds = 0      # draft sets dropped under block pressure
 
     # ------------------------------------------------------------------ queue
     def submit(self, req: Request) -> None:
@@ -146,22 +165,24 @@ class Scheduler:
         bs = self.alloc.block_size
         need = 0
         cow_writers: Dict[int, int] = {}     # physical block -> plan writers
-        for req in plan.decode:
-            pos = self.alloc.seq_len(req.req_id)
-            table = self.alloc.table(req.req_id)
-            bi = pos // bs
-            if bi >= len(table):
-                need += 1
-            elif self.alloc.ref_count(table[bi]) > 1:
-                cow_writers[table[bi]] = cow_writers.get(table[bi], 0) + 1
-        for req, n in plan.prefill:
+
+        def span(req: Request, n: int) -> int:
+            """New blocks + CoW writers for ``n`` tokens appended to req."""
             pos = self.alloc.seq_len(req.req_id)
             table = self.alloc.table(req.req_id)
             last_bi = (pos + n - 1) // bs
-            need += max(last_bi + 1 - len(table), 0)         # new blocks
+            fresh = max(last_bi + 1 - len(table), 0)         # new blocks
             for bi in range(pos // bs, min(last_bi, len(table) - 1) + 1):
                 if self.alloc.ref_count(table[bi]) > 1:
                     cow_writers[table[bi]] = cow_writers.get(table[bi], 0) + 1
+            return fresh
+
+        for req in plan.decode:
+            # a speculative decode lane appends 1 + K draft tokens, all of
+            # which need reserved (possibly fresh / CoW'd) write slots
+            need += span(req, plan.decode_tokens(req))
+        for req, n in plan.prefill:
+            need += span(req, n)
         for blk, writers in cow_writers.items():
             need += min(writers, self.alloc.ref_count(blk) - 1)
         return need
@@ -193,17 +214,42 @@ class Scheduler:
         self.num_preemptions += 1
 
     # ------------------------------------------------------------------- plan
-    def schedule(self) -> StepPlan:
+    def schedule(self, spec_drafts: Optional[Dict[int, "np.ndarray"]] = None
+                 ) -> StepPlan:
         """Compact, admit, budget prefill chunks, preempt until the plan
-        fits."""
+        fits.
+
+        ``spec_drafts`` (speculative decoding) maps req_id -> drafted tokens
+        for DECODING requests; each draft widens its request's lane count to
+        ``1 + K``.  Draft lanes are charged against the step token budget
+        ahead of prefill chunks and TRIMMED to it — total lanes stay within
+        ``#decode + token_budget``, the same bound the non-spec scheduler
+        gives — with half the budget held back for prefill whenever a
+        PREFILLING request is waiting on chunks, so speculation can slow
+        prefill but never starve it.  Drafts are also charged exact block
+        demand like any other appended token; a draft whose request gets
+        preempted in the fit loop is simply dropped.
+        """
         self._compact_slots()
         self._admit()
+        spec_drafts = spec_drafts or {}
         while True:
             plan = StepPlan()
             budget = self.token_budget
+            prefill_pending = any(r.state is RequestState.PREFILLING
+                                  for r in self.running.values())
+            spec_budget = budget // 2 if prefill_pending else budget
             for req in self.running.values():
                 if req.state is RequestState.DECODING:
                     plan.decode.append(req)
+                    draft = spec_drafts.get(req.req_id)
+                    if draft is not None and spec_budget > 0:
+                        take = min(len(draft), spec_budget)
+                        if take > 0:
+                            plan.spec[req.req_id] = draft[:take]
+                            spec_budget -= take
+            # speculative lanes consume token budget before prefill chunks
+            budget = max(budget - sum(len(d) for d in plan.spec.values()), 0)
             for req in self.running.values():
                 if req.state is RequestState.PREFILLING and budget > 0:
                     n = min(req.prefill_remaining, budget)
@@ -212,6 +258,12 @@ class Scheduler:
                         budget -= n
             if self._blocks_needed(plan) <= self.alloc.num_free:
                 return plan
+            if plan.spec:
+                # Shed optional work first: dropping drafts costs one step's
+                # speedup; preempting a request throws away computed KV.
+                spec_drafts = {}
+                self.num_spec_sheds += 1
+                continue
             victim = self._pick_victim(now=time.time())
             if victim is None:
                 raise OutOfBlocksError(

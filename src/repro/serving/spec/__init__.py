@@ -1,0 +1,28 @@
+"""Speculative decoding: draft-propose / batch-verify / rejection-accept.
+
+``repro.serving.spec`` is the engine's multi-token-per-step subsystem:
+
+  * :mod:`~repro.serving.spec.proposer` — the :class:`Proposer` protocol and
+    its string-keyed registry (mirroring ``repro.serving.policy``);
+  * :mod:`~repro.serving.spec.ngram` / :mod:`~repro.serving.spec.draft_model`
+    — the shipped proposers (``ngram`` prompt/generated-token lookup,
+    ``draft-model`` shallow-sibling rollout);
+  * :mod:`~repro.serving.spec.verify` — the fused batched verify +
+    distribution-preserving rejection-accept rule.
+
+See docs/spec_decoding.md for the dataflow and how to add a proposer.
+"""
+from repro.serving.spec.proposer import (        # noqa: F401
+    ALIASES, DEFAULT, OFF, Proposer, UnknownProposerError, force_proposer,
+    forced_proposer, get, names, record_resolutions, register, resolve)
+from repro.serving.spec import ngram, draft_model  # noqa: F401  (register)
+from repro.serving.spec.ngram import NgramProposer          # noqa: F401
+from repro.serving.spec.draft_model import DraftModelProposer  # noqa: F401
+from repro.serving.spec.verify import verify_batched        # noqa: F401
+
+__all__ = [
+    "ALIASES", "DEFAULT", "OFF", "Proposer", "UnknownProposerError",
+    "force_proposer",
+    "forced_proposer", "get", "names", "record_resolutions", "register",
+    "resolve", "NgramProposer", "DraftModelProposer", "verify_batched",
+]

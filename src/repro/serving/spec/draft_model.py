@@ -1,0 +1,90 @@
+"""Draft-model proposer: a small TransformerLM guesses, the big model checks.
+
+Classic two-model speculative decoding.  The draft shares the target's
+tokenizer/vocab (it is built from the SAME ``ModelConfig`` with fewer
+layers, so its embedding table speaks the same token ids) and rolls out
+``k`` greedy tokens host-side; the serving engine then verifies all of them
+in one fused target forward.  The draft is deliberately greedy/deterministic
+— the delta-distribution acceptance rule in ``repro.serving.spec.verify``
+needs no draft probabilities and greedy serving stays bit-reproducible.
+
+Cost model: the draft runs ``k`` single-sequence forwards per proposal on a
+model ``depth_frac`` as deep as the target, over a clipped context window of
+``window`` tokens (padded right to a power-of-two bucket so the jit cache
+holds O(log window) programs, not one per context length — right-padding is
+sound because causal attention never lets position ``i`` see ``j > i``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.request import Request, bucket_pow2
+from repro.serving.spec.proposer import Proposer, register
+
+
+@register("draft-model")
+class DraftModelProposer(Proposer):
+    """Greedy k-token rollout of a shallow sibling of the target model.
+
+    ``model``/``params`` may be injected (tests, a properly-trained draft);
+    otherwise :meth:`bind` derives a ``max(1, L * depth_frac)``-layer copy of
+    the engine's ModelConfig and random-initializes it.  A random draft is a
+    *bad* guesser — that is fine: bad guesses cost acceptance rate, never
+    correctness.
+    """
+
+    def __init__(self, model=None, params=None, *, depth_frac: float = 0.5,
+                 window: int = 64, seed: int = 17) -> None:
+        super().__init__()
+        self.model = model
+        self.params = params
+        self.depth_frac = depth_frac
+        self.window = window
+        self.seed = seed
+        self._fn = None
+
+    def bind(self, engine) -> None:
+        if self.model is None:
+            import jax
+            from repro.models.transformer import TransformerLM
+            cfg = engine.cfg
+            draft_cfg = dataclasses.replace(
+                cfg, num_layers=max(1, int(cfg.num_layers * self.depth_frac)))
+            self.model = TransformerLM(draft_cfg, remat=False)
+            self.params = self.model.init(jax.random.PRNGKey(self.seed))
+        self._build_fn()
+
+    def _build_fn(self) -> None:
+        import jax
+        import jax.numpy as jnp
+
+        def greedy_next(params, toks, idx):
+            # toks (1, Lb) right-padded; idx the last real position (traced,
+            # so one compile serves every context length in the bucket).
+            logits, _ = self.model.forward(params, toks)
+            return jnp.argmax(logits[0, idx], axis=-1).astype(jnp.int32)
+
+        self._fn = jax.jit(greedy_next)
+
+    def propose(self, req: Request, k: int) -> np.ndarray:
+        if k <= 0:
+            return np.zeros((0,), np.int32)
+        if self._fn is None:            # never bound: nothing to guess with
+            return np.zeros((0,), np.int32)
+        import jax.numpy as jnp
+        ctx = req.resume_tokens()[-self.window:]
+        L = len(ctx)
+        Lb = bucket_pow2(L + k, lo=16)
+        buf = np.zeros((1, Lb), np.int32)
+        buf[0, :L] = ctx
+        out = np.zeros((k,), np.int32)
+        for j in range(k):
+            tok = int(self._fn(self.params, jnp.asarray(buf),
+                               jnp.int32(L - 1 + j)))
+            out[j] = tok
+            buf[0, L + j] = tok
+        self.count("draft_forwards", k)
+        return out

@@ -1,0 +1,232 @@
+"""Speculative-decoding proposers: the draft side of propose/verify.
+
+A :class:`Proposer` guesses the next ``k`` tokens of a DECODING request from
+host-visible evidence (the request's own prompt + generated tokens, or a
+small draft model).  The serving engine then scores all guesses in ONE fused
+forward through the chunked paged-attention op family and keeps the longest
+accepted prefix (``repro.serving.spec.verify``) — guesses only ever change
+*speed*, never *tokens*.
+
+Proposers are registered strategies behind a string key, mirroring
+``repro.serving.policy`` (one axis instead of three):
+
+Resolution precedence (highest wins)
+------------------------------------
+1. explicit argument (a name or a :class:`Proposer` *instance*) at the call
+   site — strict: an unknown name raises :class:`UnknownProposerError`;
+2. ``with force_proposer("ngram"):`` scope (how ``benchmarks/run.py --spec``
+   sweeps proposers);
+3. a config hint (``ServeConfig.spec``, fed by ``repro.launch.serve
+   --spec``);
+4. the default ``"off"``.
+
+``"off"`` is the reserved no-speculation name: it resolves to ``None`` and
+the engine runs its plain one-token-per-step path.  Every other name must be
+registered.  Proposers are instantiated per resolve and carry per-run
+``counters`` (proposals / proposed_tokens / empty), flattened into
+``metrics()["spec"]`` by the engine; resolutions are appended to the active
+:func:`record_resolutions` scope so benchmark rows can attribute numbers to
+the proposer that actually ran.
+
+Deterministic proposers only: ``propose`` must be a pure function of request
+state (no RNG), which is what makes the delta-distribution acceptance rule
+in ``repro.serving.spec.verify`` exact and greedy runs bit-reproducible.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import (Callable, Dict, Iterator, List, Optional, Tuple, Type,
+                    Union)
+
+import numpy as np
+
+from repro.serving.request import Request
+
+__all__ = [
+    "OFF", "DEFAULT", "UnknownProposerError", "Proposer", "register",
+    "names", "get", "resolve", "force_proposer", "forced_proposer",
+    "record_resolutions",
+]
+
+OFF = "off"                      # reserved: no speculation (resolves to None)
+DEFAULT = OFF
+
+_AUTO_NAMES = (None, "", "default")
+# Accepted spellings normalized before lookup ("--spec draft" just works).
+ALIASES = {"draft": "draft-model"}
+
+
+class UnknownProposerError(ValueError):
+    """A requested proposer name is not registered (and is not ``"off"``)."""
+
+
+class Proposer:
+    """Base class: a registry name + per-run counters.
+
+    Subclasses implement :meth:`propose`; :meth:`bind` runs once when the
+    engine adopts the proposer (build a draft model, size windows, ...).
+    """
+
+    name: str = ""               # set by @register
+
+    def __init__(self) -> None:
+        self.counters: Dict[str, int] = {}
+
+    def count(self, key: str, n: int = 1) -> None:
+        self.counters[key] = self.counters.get(key, 0) + n
+
+    # -- engine hooks --------------------------------------------------------
+    def bind(self, engine) -> None:
+        """Called once by the adopting engine (duck-typed; optional)."""
+
+    def propose(self, req: Request, k: int) -> np.ndarray:
+        """Up to ``k`` draft tokens continuing ``req``'s sequence.
+
+        Must be deterministic in ``req``'s state.  Return shape ``(d,)``
+        int32 with ``0 <= d <= k``; an empty array means "no guess" and the
+        request decodes normally this step.
+        """
+        raise NotImplementedError
+
+    # -- bookkeeping the engine drives --------------------------------------
+    def on_propose(self, req: Request, drafted: int) -> None:
+        self.count("proposals")
+        if drafted:
+            self.count("proposed_tokens", drafted)
+        else:
+            self.count("empty")
+
+
+# ---------------------------------------------------------------------------
+# Registry (mirrors repro.serving.policy: register + resolve, scoped
+# override, resolution log; thread-local so scopes can't leak across tests).
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, Type[Proposer]] = {}
+_STATE = threading.local()
+
+
+def register(name: str) -> Callable[[Type[Proposer]], Type[Proposer]]:
+    """Class decorator: register a proposer class under ``name``."""
+    if name in (OFF,) + _AUTO_NAMES:
+        raise ValueError(f"proposer name {name!r} is reserved")
+
+    def deco(cls: Type[Proposer]) -> Type[Proposer]:
+        if not issubclass(cls, Proposer):
+            raise TypeError(f"{cls.__name__} must subclass Proposer")
+        if name in _REGISTRY:
+            raise ValueError(f"proposer {name!r} registered twice")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def names(include_off: bool = True) -> List[str]:
+    """Registered proposer names (sorted), with ``"off"`` leading."""
+    rest = sorted(_REGISTRY)
+    return ([OFF] + rest) if include_off else rest
+
+
+def get(name: str) -> Type[Proposer]:
+    try:
+        return _REGISTRY[ALIASES.get(name, name)]
+    except KeyError:
+        raise UnknownProposerError(
+            f"unknown proposer {name!r}; registered: {names()}") from None
+
+
+def _validate(name: str) -> None:
+    if name != OFF:
+        get(name)
+
+
+# -- scoped override + resolution log ---------------------------------------
+def _scope_stack() -> List[str]:
+    if not hasattr(_STATE, "forced"):
+        _STATE.forced = []
+    return _STATE.forced
+
+
+def _log_stack() -> List[List[str]]:
+    if not hasattr(_STATE, "logs"):
+        _STATE.logs = []
+    return _STATE.logs
+
+
+@contextlib.contextmanager
+def force_proposer(name: Optional[str]) -> Iterator[None]:
+    """Scoped proposer preference (``None`` leaves resolution untouched).
+
+    Names are validated on entry — a sweep over a typo'd proposer fails
+    before any engine is built, not mid-benchmark.  ``"off"`` is a valid
+    forced value: it pins speculation OFF even over a config hint.  Aliases
+    are normalized here, so :func:`forced_proposer` always reports the
+    canonical name.
+    """
+    if name not in _AUTO_NAMES:
+        _validate(name)
+        name = ALIASES.get(name, name)
+    stack = _scope_stack()
+    stack.append(name)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def forced_proposer() -> Optional[str]:
+    """The innermost ``force_proposer`` preference, if any."""
+    for name in reversed(_scope_stack()):
+        if name not in _AUTO_NAMES:
+            return name
+    return None
+
+
+@contextlib.contextmanager
+def record_resolutions() -> Iterator[List[str]]:
+    """Collect proposer names resolved inside the scope (``"off"`` included)."""
+    log: List[str] = []
+    _log_stack().append(log)
+    try:
+        yield log
+    finally:
+        stack = _log_stack()
+        for i in range(len(stack) - 1, -1, -1):   # remove by identity
+            if stack[i] is log:
+                del stack[i]
+                break
+
+
+def _note(name: str) -> None:
+    for log in _log_stack():
+        log.append(name)
+
+
+# -- resolver ----------------------------------------------------------------
+def resolve(explicit: Union[None, str, Proposer] = None, *,
+            config: Optional[str] = None) -> Optional[Proposer]:
+    """Resolve to a fresh :class:`Proposer` instance, or ``None`` for off.
+
+    ``explicit`` may be a registered name, ``"off"``, or an already-built
+    proposer instance (injected by tests); instances pass through unchanged
+    but are still logged under their registered name.
+    """
+    if isinstance(explicit, Proposer):
+        _note(explicit.name or explicit.__class__.__name__)
+        return explicit
+    for level in (explicit,                       # 1. explicit — strict
+                  forced_proposer(),              # 2. scope
+                  config,                         # 3. config hint — strict
+                  DEFAULT):                       # 4. default: off
+        if level in _AUTO_NAMES:
+            continue
+        if level == OFF:
+            _note(OFF)
+            return None
+        cls = get(level)
+        _note(cls.name)                  # canonical name, aliases normalized
+        return cls()
+    _note(OFF)
+    return None

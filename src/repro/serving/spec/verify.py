@@ -1,0 +1,97 @@
+"""Batched verify + distribution-preserving rejection-accept.
+
+One fused target forward scores every drafted token: the engine lays a
+request's lanes out as ``[last_committed_token, d_1, ..., d_k]``, the
+chunked paged-attention op family handles the multi-token causal query
+(exactly the machinery chunked prefill already uses), and
+``decode_tokens_paged`` returns a logit row per lane.  Row ``j`` is the
+target distribution for the token at position ``ctx + j + 1`` — i.e. the
+distribution draft ``d_{j+1}`` claims to be sampled from, and row ``k`` is
+the bonus distribution after a fully-accepted draft.
+
+Acceptance rule (deterministic proposers ⇒ delta draft distribution q):
+
+  * stochastic lane (``temperature > 0``): accept ``d_j`` with probability
+    ``p_j(d_j)`` (= ``min(1, p/q)`` for q a point mass); on the first
+    rejection emit a sample from the residual ``p_j`` with ``d_j`` zeroed
+    and renormalized (= ``normalize(max(p - q, 0))``).  The emitted token is
+    then distributed EXACTLY as ``p_j`` — speculation changes throughput,
+    not the sampling distribution (tested by the hypothesis property test).
+  * greedy lane (``temperature <= 0``): accept iff ``d_j == argmax`` of the
+    raw row logits — and on rejection emit that argmax — so greedy output
+    streams are bit-identical to the non-speculative engine.
+  * after ``a`` accepted drafts the step emits ``a + 1`` tokens: the
+    accepted prefix plus one corrected/bonus token.  ``a == 0`` degrades to
+    exactly one ordinary decode token; speculation can never be slower in
+    tokens-per-step.
+
+``p_j`` is the temperature/top-k/top-p filtered distribution from
+``repro.serving.sampling.filter_logits`` — the SAME filter the plain engine
+samples through, so spec and non-spec lanes agree on the target.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.sampling import filter_logits
+
+__all__ = ["verify_batched"]
+
+
+def verify_batched(key, logits, drafts, draft_lens, temperatures, top_ks,
+                   top_ps):
+    """Score K drafts per slot and keep the longest accepted prefix.
+
+    logits      (B, R, V)  one row per lane; row 0 follows the last
+                           committed token, rows 1..R-1 follow the drafts
+    drafts      (B, R-1)   proposed tokens (garbage past ``draft_lens``)
+    draft_lens  (B,)       valid drafts per slot (0 ⇒ plain decode lane)
+    temperatures/top_ks/top_ps   per-slot sampling knobs as in
+                           :func:`repro.serving.sampling.sample_batched`
+
+    Returns ``(out_tokens (B, R) int32, accept_len (B,) int32)``: slot ``b``
+    emits ``out_tokens[b, :accept_len[b] + 1]`` — ``accept_len`` accepted
+    drafts then the corrected/bonus token.  Rows past that are unspecified.
+    All knobs are traced values; one compiled program serves every batch
+    mix, like the plain sampling path.
+    """
+    B, R, V = logits.shape
+    keys = jax.random.split(key, B)
+
+    def one(k, rows, draft, d, temp, kk, pp):
+        greedy = temp <= 0.0
+        row_keys = jax.random.split(k, 2 * R).reshape(R, 2, 2)
+        lg32 = rows.astype(jnp.float32)                     # (R, V)
+        arg = jnp.argmax(lg32, axis=-1).astype(jnp.int32)   # (R,)
+        filt = jax.vmap(lambda r: filter_logits(r, temp, kk, pp))(rows)
+        probs = jax.nn.softmax(filt, axis=-1)               # (R, V)
+
+        # acceptance per draft row j (draft j is judged by row j's logits)
+        j_idx = jnp.arange(R - 1)
+        p_draft = jnp.take_along_axis(probs[:-1], draft[:, None],
+                                      axis=-1)[:, 0]        # (R-1,)
+        u = jax.vmap(jax.random.uniform)(row_keys[:-1, 0])  # (R-1,)
+        acc = jnp.where(greedy, draft == arg[:-1], u < p_draft)
+        acc = acc & (j_idx < d)
+        a = jnp.sum(jnp.cumprod(acc.astype(jnp.int32)))     # accept prefix
+
+        # per-row fallback tokens: the residual sample (reject at row j) and
+        # the ordinary sample (bonus after a full accept).
+        resid = jnp.where(
+            jnp.arange(V)[None, :] == jnp.pad(draft, (0, 1))[:, None],
+            -jnp.inf, filt)
+        t_rej = jax.vmap(jax.random.categorical)(row_keys[:, 1], resid)
+        t_samp = jax.vmap(jax.random.categorical)(row_keys[:, 1], filt)
+        t_rej = jnp.where(greedy, arg, t_rej).astype(jnp.int32)
+        t_samp = jnp.where(greedy, arg, t_samp).astype(jnp.int32)
+
+        # out[j < a] = draft[j]; out[a] = residual if a rejected a draft,
+        # ordinary sample if every valid draft was accepted (a == d).
+        rows_idx = jnp.arange(R)
+        tail = jnp.where(a < d, t_rej, t_samp)              # (R,)
+        out = jnp.where(rows_idx < a, jnp.pad(draft, (0, 1)), tail)
+        return out.astype(jnp.int32), a.astype(jnp.int32)
+
+    return jax.vmap(one)(keys, logits, drafts, draft_lens, temperatures,
+                         top_ks, top_ps)

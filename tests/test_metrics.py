@@ -58,7 +58,8 @@ def test_engine_metrics_summary_keys_and_types():
     assert set(s) == {"backend", "finished", "output_tokens",
                       "mean_ttft_s", "p50_ttft_s", "p99_ttft_s",
                       "mean_tpot_s", "p50_tpot_s", "p99_tpot_s",
-                      "throughput_tok_s"}
+                      "throughput_tok_s", "steps", "tokens_per_step",
+                      "lane_tokens_per_step", "phase_s"}
     assert s["backend"] == "xla"
     assert s["finished"] == 2
     assert s["output_tokens"] == 10
@@ -73,6 +74,31 @@ def test_engine_metrics_empty_run_no_division_by_zero():
     assert s["finished"] == 0
     assert s["throughput_tok_s"] == 0.0
     assert s["mean_ttft_s"] == 0.0 and s["p99_tpot_s"] == 0.0
+
+
+def test_engine_metrics_step_accounting_and_phase_buckets():
+    """record_step: tokens-per-step means emitted OUTPUT tokens per step
+    (speculative decoding pushes it past one per decode lane), lane tokens
+    count the fused program's width, and phase walls accumulate per key."""
+    m = EngineMetrics()
+    m.record_step(num_tokens=8, emitted_tokens=1,
+                  phases={"propose": 0.1, "device": 0.5})
+    m.record_step(num_tokens=4, emitted_tokens=3,
+                  phases={"propose": 0.2, "device": 0.5, "commit": 0.25})
+    s = m.summary()
+    assert s["steps"] == 2
+    assert s["tokens_per_step"] == pytest.approx(2.0)       # (1 + 3) / 2
+    assert s["lane_tokens_per_step"] == pytest.approx(6.0)  # (8 + 4) / 2
+    assert s["phase_s"] == pytest.approx(
+        {"propose": 0.3, "device": 1.0, "commit": 0.25})
+
+
+def test_engine_metrics_zero_steps_no_division_by_zero():
+    s = EngineMetrics().summary()
+    assert s["steps"] == 0
+    assert s["tokens_per_step"] == 0.0
+    assert s["lane_tokens_per_step"] == 0.0
+    assert s["phase_s"] == {}
 
 
 def test_engine_metrics_none_latencies_skip_trackers():

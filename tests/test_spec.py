@@ -1,0 +1,483 @@
+"""Speculative decoding subsystem: proposer registry precedence, the shipped
+ngram / draft-model proposers, batched verify + rejection-accept semantics,
+allocator rollback invariants (refcounts/free-list restored after a
+fully-rejected step), generated-token prefix caching, and the greedy
+spec-vs-baseline parity sweep across the registry-enumerated policy triples
+— speculation changes *speed*, never *tokens*."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig, get_config
+from repro.core.paged_kv import BlockAllocator
+from repro.models.api import build_model
+from repro.serving import policy
+from repro.serving import spec
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.request import RequestState
+from repro.serving.scheduler import Scheduler
+from repro.serving.spec import NgramProposer, verify_batched
+
+KEY = jax.random.PRNGKey(0)
+
+SHIPPED = {"ngram", "draft-model"}
+
+
+def _req(i, prompt, max_new=8, **kw):
+    return Request(req_id=i, prompt=np.asarray(prompt, np.int32),
+                   max_new_tokens=max_new, **kw)
+
+
+# ------------------------------------------------------------------ registry
+def test_shipped_proposers_are_registered():
+    assert SHIPPED <= set(spec.names())
+    assert spec.names()[0] == spec.OFF          # "off" leads the listing
+    assert spec.OFF not in spec.names(include_off=False)
+
+
+def test_resolve_precedence_explicit_scope_config_default():
+    assert spec.resolve() is None               # default: off
+    assert isinstance(spec.resolve(config="ngram"), NgramProposer)
+    with spec.force_proposer("draft-model"):
+        # scope beats config, explicit beats scope
+        assert spec.resolve(config="ngram").name == "draft-model"
+        assert spec.resolve("ngram").name == "ngram"
+        assert spec.resolve("off") is None      # explicit off wins too
+    with spec.force_proposer("off"):
+        assert spec.resolve(config="ngram") is None  # forced off beats config
+    assert spec.resolve(config="off") is None
+
+
+def test_draft_alias_resolves_to_canonical_name():
+    assert spec.get("draft") is spec.get("draft-model")
+    prop = spec.resolve("draft")
+    assert prop.name == "draft-model"
+    with spec.record_resolutions() as log:
+        spec.resolve(config="draft")
+    assert log == ["draft-model"]               # attribution is canonical
+    with spec.force_proposer("draft"):          # scopes normalize too
+        assert spec.forced_proposer() == "draft-model"
+
+
+def test_resolve_strict_on_unknown_names():
+    with pytest.raises(spec.UnknownProposerError):
+        spec.resolve("nope")
+    with pytest.raises(spec.UnknownProposerError):
+        spec.resolve(config="nope")
+    with pytest.raises(spec.UnknownProposerError):
+        with spec.force_proposer("nope"):
+            pass                                # validated on scope entry
+
+
+def test_resolve_instance_passthrough_and_fresh_counters():
+    inst = spec.resolve("ngram")
+    assert spec.resolve(inst) is inst
+    a, b = spec.resolve("ngram"), spec.resolve("ngram")
+    assert a is not b
+    a.count("proposals")
+    assert b.counters == {}
+
+
+def test_record_resolutions_collects_names():
+    with spec.record_resolutions() as log:
+        spec.resolve("ngram")
+        spec.resolve()                          # off is logged too
+    assert log == ["ngram", "off"]
+
+
+# ----------------------------------------------------------------- proposers
+def test_ngram_proposes_continuation_of_most_recent_match():
+    p = NgramProposer()
+    r = _req(0, [7, 1, 2, 3, 7, 1, 2])
+    # suffix [7,1,2] matched at position 0 -> the tokens that followed
+    assert list(p.propose(r, 2)) == [3, 7]
+    # proposal is clipped by the sequence end
+    assert list(p.propose(r, 10)) == [3, 7, 1, 2]
+
+
+def test_ngram_reads_generated_tokens_and_prefers_recent():
+    p = NgramProposer()
+    r = _req(0, [5, 1, 2, 9])
+    r.output = [1, 2, 4, 1, 2]                  # generation looped
+    # suffix [.., 1, 2]: the most recent earlier occurrence (output pos 3)
+    # would run off the end, so the next-most-recent wins -> follows with 4
+    assert list(p.propose(r, 2)) == [4, 1]
+
+
+def test_ngram_no_match_or_tiny_context_is_empty():
+    p = NgramProposer()
+    assert len(p.propose(_req(0, [1, 2, 3, 4]), 3)) == 0   # no repetition
+    assert len(p.propose(_req(0, [1]), 3)) == 0            # too short
+    assert len(p.propose(_req(0, [1, 1, 1]), 0)) == 0      # k == 0
+
+
+def test_draft_model_proposer_is_deterministic_and_in_vocab():
+    cfg = get_config("qwen2-1.5b").reduced(dtype="float32")
+    model = build_model(cfg, remat=False)
+    params = model.init(KEY)
+    p = spec.DraftModelProposer(model=model, params=params, window=16)
+    p.bind(None)                                # injected model: no engine
+    r = _req(0, [3, 1, 4, 1, 5])
+    d1, d2 = p.propose(r, 3), p.propose(r, 3)
+    assert d1.shape == (3,) and d1.dtype == np.int32
+    assert list(d1) == list(d2)
+    assert all(0 <= t < cfg.vocab_size for t in d1)
+    assert p.counters["draft_forwards"] == 6
+
+
+# -------------------------------------------------------------------- verify
+def _verify_greedy(logits, draft, d):
+    out, acc = verify_batched(
+        KEY, jnp.asarray(logits, jnp.float32)[None],
+        jnp.asarray(draft, jnp.int32)[None],
+        jnp.asarray([d], jnp.int32), jnp.zeros((1,), jnp.float32),
+        jnp.zeros((1,), jnp.int32), jnp.ones((1,), jnp.float32))
+    return np.asarray(out)[0], int(np.asarray(acc)[0])
+
+
+def test_verify_greedy_accepts_matching_prefix_and_corrects():
+    V = 8
+    rows = np.full((3, V), -1.0, np.float32)
+    rows[0, 2] = rows[1, 5] = rows[2, 1] = 1.0  # argmax per row: 2, 5, 1
+    out, a = _verify_greedy(rows, [2, 4], d=2)  # draft 2 ok, 4 != 5
+    assert a == 1
+    assert list(out[:2]) == [2, 5]              # accepted + corrected
+    out, a = _verify_greedy(rows, [2, 5], d=2)  # full accept -> bonus row
+    assert a == 2
+    assert list(out[:3]) == [2, 5, 1]
+    out, a = _verify_greedy(rows, [3, 5], d=2)  # first draft wrong
+    assert a == 0
+    assert out[0] == 2
+    out, a = _verify_greedy(rows, [0, 0], d=0)  # no drafts: plain decode
+    assert a == 0
+    assert out[0] == 2
+
+
+def test_verify_acceptance_never_skips_a_rejection():
+    """A rejected draft must gate everything behind it, even if a later
+    draft happens to match its row's argmax."""
+    V = 8
+    rows = np.full((3, V), -1.0, np.float32)
+    rows[0, 2] = rows[1, 5] = rows[2, 1] = 1.0
+    out, a = _verify_greedy(rows, [9 % V, 5], d=2)   # row0 rejects, row1 ok
+    assert a == 0
+    assert out[0] == 2
+
+
+# --------------------------------------- distribution preservation (property)
+@jax.jit
+def _first_emitted(keys, logits, draft):
+    """First emitted token of a stochastic 1-draft verify, per key (N,)."""
+    def one(k):
+        out, _ = verify_batched(
+            k, logits[None], draft[None, None], jnp.ones((1,), jnp.int32),
+            jnp.ones((1,), jnp.float32), jnp.zeros((1,), jnp.int32),
+            jnp.ones((1,), jnp.float32))
+        return out[0, 0]
+    return jax.vmap(one)(keys)
+
+
+def _check_first_token_distribution(draft, lg, n=4000, tol=0.06):
+    logits = jnp.asarray([lg, lg], jnp.float32)           # (R=2, V=4)
+    keys = jax.random.split(jax.random.PRNGKey(draft), n)
+    toks = np.asarray(_first_emitted(keys, logits, jnp.int32(draft)))
+    emp = np.bincount(toks, minlength=len(lg)) / n
+    target = np.asarray(jax.nn.softmax(jnp.asarray(lg, jnp.float32)))
+    tv = 0.5 * np.abs(emp - target).sum()
+    assert tv < tol, (tv, emp, target, draft)
+
+
+def test_rejection_sampling_preserves_target_distribution():
+    """The delta-q accept/residual rule emits the first token EXACTLY from
+    the target distribution p, whatever token the proposer guessed:
+    P(accept d) = p(d), P(reject -> t) = (1 - p(d)) * p(t) / (1 - p(d)).
+
+    Property-based when hypothesis is available; otherwise a fixed sweep
+    over representative cases (a dominant draft, a dominated draft, near-
+    uniform logits, a spread distribution — and every draft position)."""
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        for lg in ([2.0, -2.0, 0.0, 1.0], [0.1, 0.0, -0.1, 0.05],
+                   [-2.0, 1.5, 1.4, 0.0]):
+            for draft in range(4):
+                _check_first_token_distribution(draft, lg)
+        return
+
+    @settings(max_examples=6, deadline=None)
+    @given(draft=st.integers(0, 3),
+           lg=st.lists(st.floats(-2.0, 2.0), min_size=4, max_size=4))
+    def prop(draft, lg):
+        _check_first_token_distribution(draft, lg)
+
+    prop()
+
+
+# ------------------------------------------------- scheduler spec budgeting
+def _decoding_req(alloc, rid, prompt_len, slot=0, max_new=8):
+    r = _req(rid, np.arange(prompt_len), max_new=max_new)
+    alloc.allocate(rid, prompt_len)
+    r.begin_prefill(slot, prompt_len,
+                    active_prompt=np.asarray(r.prompt, np.int32))
+    r.to_state(RequestState.DECODING)
+    r.output = [1]
+    return r
+
+
+def test_scheduler_plans_spec_lanes_and_counts_tokens():
+    alloc = BlockAllocator(num_blocks=8, block_size=4)
+    sched = Scheduler(alloc, max_batch=2, token_budget=8)
+    r = _decoding_req(alloc, 0, prompt_len=4)
+    sched.running[0] = r
+    plan = sched.schedule(spec_drafts={0: np.asarray([7, 8, 9], np.int32)})
+    assert list(plan.spec) == [0]
+    assert plan.decode_tokens(r) == 4
+    assert plan.num_tokens == 4
+
+
+def test_scheduler_splits_budget_between_drafts_and_pending_prefill():
+    alloc = BlockAllocator(num_blocks=16, block_size=4)
+    sched = Scheduler(alloc, max_batch=2, token_budget=4)
+    r = _decoding_req(alloc, 0, prompt_len=4, slot=0)
+    pre = _req(1, np.arange(10), max_new=4)
+    alloc.allocate(1, 0)
+    pre.begin_prefill(1, 0, active_prompt=np.asarray(pre.prompt, np.int32))
+    sched.running = {0: r, 1: pre}
+    plan = sched.schedule(spec_drafts={0: np.asarray([7, 8, 9], np.int32)})
+    # with prefill waiting, drafts get at most half the budget (trimmed to
+    # 2 lanes) and prefill keeps the remainder — slowed, never starved
+    assert list(plan.spec[0]) == [7, 8]
+    assert plan.prefill == [(pre, 2)]
+    assert plan.num_tokens == 5                 # 1 decode + 2 draft + 2 chunk
+
+
+def test_scheduler_trims_drafts_to_token_budget():
+    alloc = BlockAllocator(num_blocks=16, block_size=4)
+    sched = Scheduler(alloc, max_batch=2, token_budget=2)
+    r = _decoding_req(alloc, 0, prompt_len=4)
+    sched.running = {0: r}
+    plan = sched.schedule(spec_drafts={0: np.asarray([7, 8, 9], np.int32)})
+    # no prefill pending: drafts may use the whole budget, but no more —
+    # total lanes stay within #decode + token_budget
+    assert list(plan.spec[0]) == [7, 8]
+    assert plan.num_tokens == 3
+
+
+def test_scheduler_sheds_drafts_before_preempting():
+    alloc = BlockAllocator(num_blocks=1, block_size=4)
+    sched = Scheduler(alloc, max_batch=2, token_budget=8)
+    r = _decoding_req(alloc, 0, prompt_len=3)   # 1 block, pos 3: 1 slot left
+    sched.running[0] = r
+    plan = sched.schedule(spec_drafts={0: np.asarray([7, 8], np.int32)})
+    # drafts would need a second block the pool doesn't have: shed them,
+    # keep the request running its plain one-token step
+    assert plan.spec == {}
+    assert plan.num_tokens == 1
+    assert sched.num_spec_sheds == 1
+    assert sched.num_preemptions == 0
+
+
+# ------------------------------------------------------ rollback invariants
+def test_rollback_fully_rejected_step_allocator_invariants():
+    """reserve K+1 / commit 1 / truncate (the engine's fully-rejected spec
+    step) must restore refcounts and the free list exactly — no leaked
+    blocks, no refcount drift on the speculatively-grown tail."""
+    al = BlockAllocator(num_blocks=8, block_size=4)
+    al.allocate(0, 3)                           # pos 3: one committed block
+    table_before = al.table(0)
+    free_before = al.num_free
+    slots = al.reserve_tokens(0, 4)             # 1 in-block + 3 spilling
+    grown = [b for b in al.table(0) if b not in table_before]
+    assert len(grown) == 1 and al.ref_count(grown[0]) == 1
+    al.commit_tokens(0, 1)                      # only the non-draft token
+    al.truncate(0, al.seq_len(0))               # rewind the rejected tail
+    assert al.table(0) == table_before
+    assert al.num_free == free_before
+    assert al.ref_count(grown[0]) == 0          # back on the free list
+    assert al.seq_len(0) == 4
+    # the next reservation re-issues the rewound position (same offset, and
+    # the just-freed block comes straight back off the free list)
+    slots2 = al.reserve_tokens(0, 1)
+    assert tuple(slots2[0]) == (grown[0], 0)
+    al.commit_tokens(0, 1)
+    assert al.seq_len(0) == 5
+
+
+# --------------------------------------------------------- engine-level spec
+class _ScriptedProposer(spec.Proposer):
+    """Proposes a fixed function of the known baseline continuation —
+    perfect (always accepted) or adversarial (never accepted) drafts."""
+
+    name = "scripted"
+
+    def __init__(self, continuations, vocab, wrong=False):
+        super().__init__()
+        self.continuations = continuations      # req_id -> full output list
+        self.vocab = vocab
+        self.wrong = wrong
+
+    def propose(self, req, k):
+        nxt = self.continuations[req.req_id][len(req.output):][:k]
+        if self.wrong:
+            nxt = [(t + 1) % self.vocab for t in nxt]
+        return np.asarray(nxt, np.int32)
+
+
+@pytest.fixture(scope="module")
+def spec_env():
+    """Shared tiny model + pool-starving shared-prefix workload, plus the
+    non-speculative baseline outputs (the parity oracle)."""
+    cfg = get_config("qwen2-1.5b").reduced(dtype="float32")
+    model = build_model(cfg, remat=False)
+    params = model.init(KEY)
+    rng = np.random.default_rng(7)
+    num_blocks, n_req = 8, 4
+    prefix = rng.integers(0, cfg.vocab_size, (4,), dtype=np.int32)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, cfg.vocab_size, (2 + i,),
+                                            dtype=np.int32)])
+               for i in range(n_req)]
+
+    def run(pol=None, spec_name="off", spec_k=3, proposer=None,
+            num_blocks=num_blocks):
+        serve = ServeConfig(model=cfg.name, kv_block_size=4, max_batch=3,
+                            spec=spec_name, spec_k=spec_k, **(pol or {}))
+        eng = ServingEngine(model, params, cfg, serve, num_blocks=num_blocks,
+                            proposer=proposer)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(req_id=i, prompt=p, max_new_tokens=10,
+                               priority=i % 2,
+                               deadline=float(i) if i % 2 else None))
+        eng.run_until_done()
+        return ({r.req_id: list(r.output) for r in eng.finished},
+                eng.metrics())
+
+    outputs, metrics = run()
+    assert metrics["preemptions"] > 0           # the workload really starves
+    return {"cfg": cfg, "run": run, "outputs": outputs,
+            "num_blocks": num_blocks}
+
+
+def test_ngram_spec_greedy_parity_and_metrics(spec_env):
+    outputs, m = spec_env["run"](spec_name="ngram")
+    assert outputs == spec_env["outputs"]
+    s = m["spec"]
+    assert s["proposer"] == "ngram" and s["k"] == 3
+    assert s["proposed_tokens"] > 0
+    assert 0.0 < s["acceptance_rate"] <= 1.0
+    assert s["tokens_per_decode_lane"] > 1.0
+    assert m["tokens_per_step"] > 0
+    assert m["blocks_free"] == spec_env["num_blocks"]   # no leaked blocks
+    assert set(m["phase_s"]) >= {"propose", "schedule_render", "device",
+                                 "commit"}
+
+
+def test_perfect_proposer_accepts_everything(spec_env):
+    prop = _ScriptedProposer(spec_env["outputs"], spec_env["cfg"].vocab_size)
+    # roomy pool: no draft shedding, so every proposed token gets verified
+    # (outputs are scheduling-invariant, so the baseline still applies)
+    outputs, m = spec_env["run"](proposer=prop, num_blocks=32)
+    assert outputs == spec_env["outputs"]
+    s = m["spec"]
+    assert s["acceptance_rate"] == 1.0
+    assert s["rollback_blocks"] == 0
+    assert s["tokens_per_decode_lane"] > 2.0    # k=3 drafts mostly land
+
+
+def test_adversarial_proposer_rejects_everything_and_rolls_back(spec_env):
+    """Every draft is wrong: outputs must still match the baseline exactly
+    (total rejection degrades to plain decoding), every speculatively
+    reserved block is rewound, and nothing leaks."""
+    prop = _ScriptedProposer(spec_env["outputs"], spec_env["cfg"].vocab_size,
+                             wrong=True)
+    outputs, m = spec_env["run"](proposer=prop)
+    assert outputs == spec_env["outputs"]
+    s = m["spec"]
+    assert s["acceptance_rate"] == 0.0
+    assert s["tokens_per_decode_lane"] == 1.0   # one token per lane, always
+    assert s["rollback_blocks"] > 0             # speculative tails rewound
+    assert m["blocks_free"] == spec_env["num_blocks"]
+
+
+@pytest.mark.slow       # k draft forwards per decode step
+def test_draft_model_spec_greedy_parity(spec_env):
+    outputs, m = spec_env["run"](spec_name="draft-model")
+    assert outputs == spec_env["outputs"]
+    assert m["spec"]["proposer"] == "draft-model"
+    assert m["spec"]["proposed_tokens"] > 0
+
+
+def _policy_triples():
+    """Every registered policy, exercised once: vary one axis at a time off
+    the default triple (new registrations auto-enroll — no list here)."""
+    base = dict(policy.DEFAULTS)
+    triples = [tuple(sorted(base.items()))]
+    for axis in policy.AXES:
+        for name in policy.names(axis):
+            triples.append(tuple(sorted(dict(base, **{axis: name}).items())))
+    return sorted(set(triples))
+
+
+@pytest.mark.slow       # one spec engine run per registered policy
+@pytest.mark.parametrize("triple", _policy_triples(),
+                         ids=lambda t: "/".join(n for _, n in t))
+def test_spec_greedy_parity_across_policy_triples(triple, spec_env):
+    """Acceptance sweep: with --spec ngram, greedy output streams are
+    bit-identical to the non-spec engine under EVERY registered policy
+    triple — speculation composes with admission/preemption/eviction
+    without touching tokens."""
+    outputs, m = spec_env["run"](pol=dict(triple), spec_name="ngram")
+    assert outputs == spec_env["outputs"], (
+        f"spec diverged under policy triple {dict(triple)}")
+    assert m["spec"]["acceptance_rate"] > 0.0
+    assert m["blocks_free"] == spec_env["num_blocks"]
+
+
+# -------------------------------------------- generated-token prefix caching
+def test_decode_blocks_are_hash_registered(spec_env):
+    """Blocks FILLED during decode join the prefix cache (ROADMAP item):
+    the full prompt+generation sequence of a finished request is
+    re-adoptable up to the last full block."""
+    cfg = spec_env["cfg"]
+    model = build_model(cfg, remat=False)
+    params = model.init(KEY)
+    serve = ServeConfig(model=cfg.name, kv_block_size=4, max_batch=1)
+    eng = ServingEngine(model, params, cfg, serve, num_blocks=16)
+    prompt = np.arange(6, dtype=np.int32)
+    eng.submit(Request(req_id=0, prompt=prompt, max_new_tokens=10))
+    eng.run_until_done()
+    seq = np.concatenate([prompt, np.asarray(eng.finished[0].output,
+                                             np.int32)])
+    assert len(seq) == 16
+    # committed KV covers 15 tokens (the final sampled token finishes the
+    # request before its KV lands), so blocks 0..2 are full and hashed —
+    # block 0 by prefill, 1 and 2 by DECODE (the new behaviour under test)
+    assert eng.alloc.peek_prefix(seq) == 12
+    # and a second identical request actually adopts the cached blocks
+    eng.submit(Request(req_id=1, prompt=seq, max_new_tokens=2))
+    hits_before = eng.alloc.prefix_hits
+    eng.run_until_done()
+    assert eng.alloc.prefix_hits - hits_before == 3
+
+
+def test_spec_generated_blocks_registered_with_true_content(spec_env):
+    """The spec path hashes decode blocks under their TRUE token content —
+    including accepted draft tokens committed before they land in
+    req.output.  peek_prefix recomputes the hash from the actual sequence,
+    so a hit proves key == content for every full committed block."""
+    cfg = spec_env["cfg"]
+    model = build_model(cfg, remat=False)
+    params = model.init(KEY)
+    serve = ServeConfig(model=cfg.name, kv_block_size=4, max_batch=1,
+                        spec="ngram", spec_k=3)
+    eng = ServingEngine(model, params, cfg, serve, num_blocks=16)
+    prompt = np.arange(6, dtype=np.int32)
+    eng.submit(Request(req_id=0, prompt=prompt, max_new_tokens=10))
+    eng.run_until_done()
+    assert eng.metrics()["spec"]["accepted_tokens"] > 0
+    seq = np.concatenate([prompt, np.asarray(eng.finished[0].output,
+                                             np.int32)])
+    committed = len(seq) - 1                    # last token's KV never lands
+    assert eng.alloc.peek_prefix(seq) == (committed // 4) * 4

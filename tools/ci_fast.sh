@@ -51,3 +51,43 @@ for res in results:
             f"[{triple}] {name}: finished={derived['finished']} != 3")
 print(f"policy smoke OK: {len(results)} triples x 3 scenarios")
 PY
+
+# Speculative-decoding smoke: off vs ngram through the same deterministic
+# scenario set (REPRO_BACKEND=ref + greedy + fixed seeds). Checks that each
+# JSON row is attributed to the resolved proposer, that the ngram pass
+# actually lands accepted drafts on the repetitive-suffix scenario
+# (acceptance rate > 0 AND > 1 output token per decode lane — the
+# multi-token-per-step win), and that speculation changes no completion
+# counts. draft-model is excluded here by design: k extra draft forwards
+# per decode step make it the slow sweep.
+SPEC_SMOKE_JSON="$(mktemp /tmp/spec_smoke.XXXXXX.json)"
+trap 'rm -f "$POLICY_SMOKE_JSON" "$SPEC_SMOKE_JSON"' EXIT
+REPRO_BENCH_SMOKE=1 REPRO_BACKEND=ref \
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run --only llm_e2e --spec off,ngram \
+    --json "$SPEC_SMOKE_JSON" >/dev/null
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python - "$SPEC_SMOKE_JSON" <<'PY'
+import json, sys
+
+results = {r["requested_spec"]: r for r in json.load(open(sys.argv[1]))}
+assert set(results) == {"off", "ngram"}, sorted(results)
+for name, res in results.items():
+    assert res["resolved_spec"] == [name], (name, res["resolved_spec"])
+    rows = {r["name"]: r for r in res["rows"]}
+    for scen in ("llm_burst_n3", "llm_repeat_n3"):
+        assert scen in rows, f"[{name}] missing scenario row {scen}"
+        assert rows[scen]["spec"] == name, (
+            f"[{name}] row {scen} attributed to {rows[scen]['spec']!r}")
+        derived = dict(kv.split("=", 1) for kv in
+                       rows[scen]["derived"].split(";"))
+        assert derived["finished"] == "3", (
+            f"[{name}] {scen}: finished={derived['finished']} != 3")
+rep = dict(kv.split("=", 1) for kv in
+           {r["name"]: r for r in results["ngram"]["rows"]}
+           ["llm_repeat_n3"]["derived"].split(";"))
+assert float(rep["spec_accept"]) > 0, rep
+assert float(rep["tok_per_lane"]) > 1, rep
+print(f"spec smoke OK: ngram accept={rep['spec_accept']} "
+      f"tok/lane={rep['tok_per_lane']}")
+PY
