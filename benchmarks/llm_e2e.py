@@ -37,6 +37,26 @@ from repro.config import ServeConfig, get_config
 from repro.models.api import build_model
 from repro.serving.engine import Request, ServingEngine
 
+_MESH = None
+
+
+def _mesh():
+    """The scenario engines' mesh: sharded ONLY on explicit opt-in.
+
+    ``benchmarks/run.py --devices N,M`` re-runs this module in subprocesses
+    with forced host device counts AND ``REPRO_BENCH_DEVICES=<n>``, so the
+    SAME scenarios attribute rows to 1-device and mesh runs (``devices=``
+    in the derived string).  The env signal — not ambient device count —
+    gates the mesh: a mesh engine pins the ``sharded`` backend, which would
+    silently defeat a ``--backend`` sweep on a multi-device host.
+    """
+    global _MESH
+    want = int(os.environ.get("REPRO_BENCH_DEVICES", "0") or 0)
+    if _MESH is None and want > 1:
+        from repro.launch.mesh import make_serving_mesh
+        _MESH = make_serving_mesh(model=want)
+    return _MESH
+
 
 def _drain(engine) -> float:
     t0 = time.time()
@@ -57,6 +77,7 @@ def _emit_engine(tag: str, engine, dt: float) -> None:
          f"finished={m['finished']};"
          f"prefix_hit_rate={m['prefix_hit_rate']:.2f};"
          f"backend={m['backend']};"
+         f"devices={m['devices']};"
          f"policies={m['admission_policy']}/{m['preemption_policy']}/"
          f"{m['eviction_policy']};"
          f"spec={s['proposer']};"
@@ -108,7 +129,8 @@ def run(quick: bool = True) -> None:
         for max_batch in ([2] if quick else [2, 8, 32]):
             serve = ServeConfig(model=cfg.name, kv_block_size=8,
                                 max_batch=max_batch)
-            engine = ServingEngine(model, params, cfg, serve, num_blocks=256)
+            engine = ServingEngine(model, params, cfg, serve, num_blocks=256,
+                               mesh=_mesh())
             for r in var_requests(n_req):
                 engine.submit(r)
             _emit_engine(f"llm_engine_maxbatch{max_batch}", engine,
@@ -117,7 +139,8 @@ def run(quick: bool = True) -> None:
     # bursty arrivals: the whole wave lands at t0 and queues behind max_batch
     n_burst = 3 if smoke else (6 if quick else 32)
     serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=2)
-    engine = ServingEngine(model, params, cfg, serve, num_blocks=256)
+    engine = ServingEngine(model, params, cfg, serve, num_blocks=256,
+                           mesh=_mesh())
     for r in var_requests(n_burst):
         engine.submit(r)
     _emit_engine(f"llm_burst_n{n_burst}", engine, _drain(engine))
@@ -127,14 +150,16 @@ def run(quick: bool = True) -> None:
     plen = 16
     prefix = rng.integers(0, cfg.vocab_size, (plen,), dtype=np.int32)
     serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=2)
-    eng_shared = ServingEngine(model, params, cfg, serve, num_blocks=256)
+    eng_shared = ServingEngine(model, params, cfg, serve, num_blocks=256,
+                               mesh=_mesh())
     for i in range(n_pfx):
         tail = rng.integers(0, cfg.vocab_size, (4,), dtype=np.int32)
         eng_shared.submit(Request(req_id=i,
                                   prompt=np.concatenate([prefix, tail]),
                                   max_new_tokens=4))
     dt = _drain(eng_shared)
-    eng_indep = ServingEngine(model, params, cfg, serve, num_blocks=256)
+    eng_indep = ServingEngine(model, params, cfg, serve, num_blocks=256,
+                              mesh=_mesh())
     for i in range(n_pfx):
         eng_indep.submit(Request(
             req_id=i,
@@ -151,7 +176,8 @@ def run(quick: bool = True) -> None:
 
     # memory pressure: pool below the working set forces preemption
     serve = ServeConfig(model=cfg.name, kv_block_size=4, max_batch=3)
-    engine = ServingEngine(model, params, cfg, serve, num_blocks=10)
+    engine = ServingEngine(model, params, cfg, serve, num_blocks=10,
+                           mesh=_mesh())
     for i in range(3):
         engine.submit(Request(
             req_id=i,
@@ -171,7 +197,8 @@ def run(quick: bool = True) -> None:
     # here (the --spec sweep's showcase scenario)
     n_rep = 3 if smoke else (6 if quick else 16)
     serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=2)
-    engine = ServingEngine(model, params, cfg, serve, num_blocks=256)
+    engine = ServingEngine(model, params, cfg, serve, num_blocks=256,
+                           mesh=_mesh())
     for i in range(n_rep):
         motif = rng.integers(0, cfg.vocab_size, (3,), dtype=np.int32)
         engine.submit(Request(req_id=i, prompt=np.tile(motif, 4),

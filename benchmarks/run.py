@@ -29,6 +29,17 @@ sweeps, only ``SPEC_SENSITIVE`` modules repeat per proposer.  The
 as a slow sweep (it is skipped under ``REPRO_BENCH_SMOKE=1``; the CI smoke
 sweeps ``off,ngram`` only).
 
+``--devices 1,2,4`` sweeps host device counts: the XLA device count is
+fixed at first jax init, so each count re-runs the selected modules in a
+SUBPROCESS under ``XLA_FLAGS=--xla_force_host_platform_device_count=<n>``.
+With > 1 device the llm_e2e scenario engines build a serving mesh
+(``repro.launch.mesh.make_serving_mesh``) and run the sharded fused step
+(docs/sharded_serving.md); every ``--json`` record and row is stamped with
+``devices=<n>``, so single-vs-mesh throughput is attributable per count —
+the paper-style scale-out comparison for the serving stack.  ``--devices``
+composes with the other sweep flags (they are forwarded to each
+subprocess).
+
 | module                 | paper figure/table |
 |------------------------|--------------------|
 | gemm_roofline          | Fig 4, 5, 7        |
@@ -45,7 +56,10 @@ from __future__ import annotations
 import argparse
 import itertools
 import json
+import os
+import subprocess
 import sys
+import tempfile
 import time
 import traceback
 
@@ -124,8 +138,82 @@ def _resolved_triple(plog):
         for a in policy_lib.AXES)
 
 
+def _sweep_devices(args) -> int:
+    """Re-run the selected modules once per host device count.
+
+    The XLA host-platform device count is frozen at first jax init, so each
+    count gets its own subprocess with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=<n>`` — the child is
+    this very module minus ``--devices``/``--json``, plus a temp ``--json``
+    whose records the parent merges with a ``devices`` stamp on every
+    record and row.
+    """
+    counts = []
+    for c in args.devices.split(","):
+        try:
+            counts.append(int(c))
+        except ValueError:
+            raise SystemExit(f"--devices: not a device count: {c!r}")
+        if counts[-1] < 1:
+            raise SystemExit(f"--devices: device counts are >= 1: {c!r}")
+    child_args, skip = [], False
+    for a in sys.argv[1:]:
+        if skip:
+            skip = False
+            continue
+        if a in ("--devices", "--json"):
+            skip = True
+            continue
+        if a.startswith(("--devices=", "--json=")):
+            continue
+        child_args.append(a)
+    merged, failures = [], 0
+    for n in counts:
+        print(f"# devices sweep: {n}", file=sys.stderr)
+        env = dict(os.environ)
+        # APPEND the forced count: XLA flag parsing is last-occurrence-wins,
+        # so a pre-existing --xla_force_host_platform_device_count in the
+        # user's XLA_FLAGS must not silently override the sweep.
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" --xla_force_host_platform_device_count={n}"
+                            ).strip()
+        # Engine-building modules (llm_e2e) opt into a serving mesh ONLY on
+        # this explicit signal — ambient multi-device hosts keep running the
+        # single-device engine so --backend sweeps stay comparable.
+        env["REPRO_BENCH_DEVICES"] = str(n)
+        fd, tmp = tempfile.mkstemp(suffix=".json", prefix="bench_devices_")
+        os.close(fd)
+        try:
+            r = subprocess.run(
+                [sys.executable, "-m", "benchmarks.run", *child_args,
+                 "--json", tmp], env=env)
+            failures += r.returncode != 0
+            try:
+                with open(tmp) as f:
+                    results = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                results = []
+            for res in results:
+                res["devices"] = n
+                for row in res["rows"]:
+                    row["devices"] = n
+            merged.extend(results)
+        finally:
+            os.unlink(tmp)
+        print(f"# devices={n} done", file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(merged, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    return 1 if failures else 0
+
+
 def main() -> None:
-    p = argparse.ArgumentParser()
+    # allow_abbrev=False: _sweep_devices re-invokes this module with
+    # --devices/--json stripped from sys.argv BY EXACT SPELLING — an
+    # abbreviated `--device` would survive the strip, re-trigger the sweep
+    # in every child and fork forever.
+    p = argparse.ArgumentParser(allow_abbrev=False)
     p.add_argument("--only", default=None, help="comma-separated module list")
     p.add_argument("--full", action="store_true")
     p.add_argument("--backend", default=None,
@@ -142,11 +230,20 @@ def main() -> None:
                    help="comma-separated speculative-proposer sweep (e.g. "
                         "off,ngram,draft-model); each name scopes the run "
                         "via repro.serving.spec.force_proposer")
+    p.add_argument("--devices", default=None,
+                   help="comma-separated host device counts (e.g. 1,2,4); "
+                        "each count re-runs the selected modules in a "
+                        "subprocess with XLA_FLAGS=--xla_force_host_"
+                        "platform_device_count=<n> — multi-device passes "
+                        "run the sharded serving engine and every JSON "
+                        "row is stamped devices=<n>")
     p.add_argument("--json", default=None,
                    help="write per-backend/per-policy/per-proposer result "
                         "rows (+ resolved (op, backend), (axis, policy) and "
                         "proposer names) to this path")
     args = p.parse_args()
+    if args.devices is not None:
+        raise SystemExit(_sweep_devices(args))
     mods = args.only.split(",") if args.only else MODULES
     backends = args.backend.split(",") if args.backend else [None]
     policies = (_parse_policy_triples(args.policy) if args.policy

@@ -344,6 +344,12 @@ class ServeConfig:
     # and the max draft tokens verified per request per step.
     spec: str = "off"              # off | ngram | draft-model
     spec_k: int = 4
+    # Mesh-native serving (docs/sharded_serving.md): device count of the
+    # serving mesh's model axis. 0/1 = single-device engine; > 1 makes
+    # ``repro.launch.serve`` build a mesh (repro.launch.mesh) and the engine
+    # run the sharded fused step — params TP-sharded, KV pool
+    # sequence-sharded, per-layer log-sum-exp combine over the axis.
+    devices: int = 0
     parallel: ParallelConfig = field(default_factory=ParallelConfig)
     seed: int = 0
 

@@ -20,6 +20,15 @@ Reproduces the paper's §4.2 vLLM case study as a TPU-native op pair:
   attends causally to its request's pool blocks. With one token per request
   it reduces to the opt path; with a chunk it is prefill-in-the-decode-step,
   which is what lets the serving engine run ONE fused program per step.
+* :func:`paged_attention_chunked_sharded` — the two combined: the chunked
+  math over a sequence-sharded KV pool inside ``shard_map``. Each rank holds
+  a shard of the pool plus ITS OWN local BlockList slice
+  (``BlockAllocator.build_sharded_block_lists``), computes flash-style
+  partials (running max / sumexp / weighted-V) for every query lane against
+  only local blocks, and the partials are log-sum-exp-combined across the
+  mesh axis with (T, H)-sized collectives — the KV never moves.  This is
+  the sharded serving engine's per-layer attention (docs/sharded_serving.md)
+  and the ``sharded`` backend of the ``paged_attention_chunked`` op family.
 
 All math: q (B, H, HD) single decode token (or (T, H, HD) flat token lanes
 for the chunked op); pool (NB, BS, KV, HD). GQA handled by grouping H into
@@ -150,10 +159,30 @@ def paged_attention_chunked(q, pool_k, pool_v, block_list, block_req,
     request this computes exactly :func:`paged_attention_opt`.
     """
     T, H, HD = q.shape
+    scale = sm_scale if sm_scale is not None else HD ** -0.5
+    m, l, o = _chunked_partials(q, pool_k, pool_v, block_list, block_req,
+                                block_pos, kv_lens, token_req, token_pos,
+                                scale)
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(T, H, HD).astype(q.dtype)
+
+
+def _chunked_partials(q, pool_k, pool_v, block_list, block_req, block_pos,
+                      kv_lens, token_req, token_pos, scale: float):
+    """Per-lane flash partials of the chunked math over a BlockList slice.
+
+    Returns ``(m, l, o)`` with shapes (T, KV, G), (T, KV, G), (T, KV, G, HD):
+    the running max, sum of exponentials and weighted-V accumulator of every
+    query lane against ONLY the blocks in ``block_list``.  With the full
+    BlockList this normalizes to :func:`paged_attention_chunked`; with a
+    per-shard slice the partials are what the sharded combine reduces.  A
+    lane that owns no block here has ``m == -1e30`` and ``l == 0`` — the
+    combine's exp-correction weighs it out exactly.
+    """
+    T, H, HD = q.shape
     NB, BS, KV, _ = pool_k.shape
     B = kv_lens.shape[0]
     G = H // KV
-    scale = sm_scale if sm_scale is not None else HD ** -0.5
 
     k = jnp.take(pool_k, block_list, axis=0)              # (Tb, BS, KV, HD)
     v = jnp.take(pool_v, block_list, axis=0)
@@ -174,6 +203,35 @@ def paged_attention_chunked(q, pool_k, pool_v, block_list, block_req,
     p = jnp.where(valid[:, None, None], p, 0.0)
     l = p.sum(axis=(-2, -1))                              # (T, KV, G)
     o = jnp.einsum("tkgus,uskd->tkgd", p.astype(v.dtype), v).astype(jnp.float32)
+    return m, l, o
+
+
+def paged_attention_chunked_sharded(q, pool_k, pool_v, block_list, block_req,
+                                    block_pos, kv_lens, token_req, token_pos,
+                                    *, axis: str,
+                                    sm_scale: Optional[float] = None):
+    """Chunked paged attention over a sequence-sharded pool (inside shard_map).
+
+    The chunked generalization of :func:`paged_attention_sharded`: every
+    query *lane* (decode tokens, prompt-chunk tokens, speculative draft
+    lanes — anything :func:`paged_attention_chunked` accepts) computes
+    flash partials against its rank's pool shard and LOCAL BlockList slice
+    (built by ``BlockAllocator.build_sharded_block_lists``), then the
+    per-rank (max, sumexp, weighted-V) triples are log-sum-exp-combined
+    across mesh axis ``axis`` with (T, H)-sized collectives.  The sequence
+    dimension never moves; lanes whose blocks all live on other ranks are
+    weighed out by the exp correction.  Padding lanes produce zeros, like
+    the single-device op.
+    """
+    T, H, HD = q.shape
+    scale = sm_scale if sm_scale is not None else HD ** -0.5
+    m_r, l_r, o_r = _chunked_partials(q, pool_k, pool_v, block_list,
+                                      block_req, block_pos, kv_lens,
+                                      token_req, token_pos, scale)
+    m = jax.lax.pmax(m_r, axis)
+    corr = jnp.exp(m_r - m)
+    l = jax.lax.psum(l_r * corr, axis)
+    o = jax.lax.psum(o_r * corr[..., None], axis)
     out = o / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(T, H, HD).astype(q.dtype)
 

@@ -19,6 +19,11 @@ Backend names
 ``pallas``            compiled Pallas kernel (TPU only)
 ``pallas_interpret``  the same kernel in interpret mode (any platform; slow —
                       never chosen by auto, used for validation)
+``sharded``           shard_map scale-out form (per-shard partials + mesh
+                      collectives); gated on mesh presence (a ``mesh=`` hint
+                      in the CallSpec kwargs, or >1 local device) and never
+                      auto-preferred over the single-device forms — a mesh
+                      is something a caller opts into, not a faster kernel
 
 Resolution precedence (highest wins)
 ------------------------------------
@@ -52,24 +57,29 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tupl
 import jax
 
 __all__ = [
-    "REF", "XLA", "PALLAS", "PALLAS_INTERPRET", "BACKENDS", "ENV_VAR",
-    "BackendUnavailableError", "CallSpec", "Impl", "OpFamily",
+    "REF", "XLA", "PALLAS", "PALLAS_INTERPRET", "SHARDED", "BACKENDS",
+    "ENV_VAR", "BackendUnavailableError", "CallSpec", "Impl", "OpFamily",
     "op", "get_op", "list_ops", "resolve", "force_backend", "forced_backend",
-    "record_resolutions", "on_tpu",
+    "record_resolutions", "on_tpu", "mesh_present",
 ]
 
 REF = "ref"
 XLA = "xla"
 PALLAS = "pallas"
 PALLAS_INTERPRET = "pallas_interpret"
-BACKENDS = (REF, XLA, PALLAS, PALLAS_INTERPRET)
+SHARDED = "sharded"
+BACKENDS = (REF, XLA, PALLAS, PALLAS_INTERPRET, SHARDED)
 
 ENV_VAR = "REPRO_BACKEND"
 
 # Auto selection picks the highest-ranked *supported* implementation.
 # pallas_interpret ranks below everything: it is a validation tool, orders of
 # magnitude slower than the jnp forms — only an explicit request selects it.
-_DEFAULT_RANK = {PALLAS: 30, XLA: 20, REF: 10, PALLAS_INTERPRET: 0}
+# sharded sits below ref: scale-out is opted into (a mesh-holding caller
+# resolves it explicitly), auto keeps picking the single-device forms even on
+# multi-device hosts.
+_DEFAULT_RANK = {PALLAS: 30, XLA: 20, REF: 10, SHARDED: 5,
+                 PALLAS_INTERPRET: 0}
 
 _AUTO_NAMES = (None, "auto", "")
 
@@ -85,7 +95,11 @@ class CallSpec:
     ``args``/``kwargs`` are the actual call operands (possibly tracers, or
     empty when resolving ahead of any call, as the serving engine does at
     init); capability predicates must treat missing operands as "supported"
-    and only reject on positive evidence.
+    and only reject on positive evidence.  :func:`mesh_present` is the one
+    deliberate exception: a ``sharded`` impl is uncallable without a device
+    fabric, and "one local device and no mesh hint" IS positive evidence of
+    its absence — callers resolving ``sharded`` ahead of a call must carry
+    their mesh in ``kwargs`` (the sharded serving engine does).
     """
 
     platform: str                                  # "cpu" | "tpu" | "gpu"
@@ -96,6 +110,21 @@ class CallSpec:
 def on_tpu(spec: CallSpec) -> bool:
     """Capability predicate for compiled Pallas kernels."""
     return spec.platform == "tpu"
+
+
+def mesh_present(spec: CallSpec) -> bool:
+    """Capability predicate for ``sharded`` (shard_map) implementations.
+
+    Positive evidence of a mesh: the caller resolved with a ``mesh=`` kwarg
+    in its :class:`CallSpec` (the serving engine does, at init), or the host
+    exposes more than one local device (``XLA_FLAGS=
+    --xla_force_host_platform_device_count`` sweeps, real multi-chip hosts).
+    A bare single-device call rejects, so the parity suite skips the
+    collective path where no collective can run.
+    """
+    if spec.kwargs.get("mesh") is not None:
+        return True
+    return len(jax.devices()) > 1
 
 
 def _always(spec: CallSpec) -> bool:
@@ -206,10 +235,11 @@ class OpFamily:
                  ) -> Callable[[Callable], Callable]:
         """Decorator: register ``fn`` as this op's ``backend`` implementation.
 
-        ``supports`` defaults to platform=="tpu" for ``pallas`` and to
-        always-true otherwise; compose extra shape/dtype constraints by
-        passing a predicate (it replaces, not augments, the default — include
-        :func:`on_tpu` yourself for compiled-pallas impls).
+        ``supports`` defaults to platform=="tpu" for ``pallas``, mesh
+        presence for ``sharded`` and to always-true otherwise; compose extra
+        shape/dtype constraints by passing a predicate (it replaces, not
+        augments, the default — include :func:`on_tpu` /
+        :func:`mesh_present` yourself for those backends).
         """
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
@@ -219,7 +249,8 @@ class OpFamily:
         def deco(fn: Callable) -> Callable:
             pred = supports
             if pred is None:
-                pred = {PALLAS: on_tpu}.get(backend, _always)
+                pred = {PALLAS: on_tpu, SHARDED: mesh_present}.get(
+                    backend, _always)
             self._impls[backend] = Impl(
                 op=self.name, backend=backend, fn=fn, supports=pred,
                 rank=_DEFAULT_RANK[backend] if rank is None else rank)

@@ -38,7 +38,11 @@ Per scheduling step the allocator also renders the device layouts:
   * a padded 2D **BlockTable** (B, max_blocks)  — the baseline layout whose
     zero-padding induces redundant gathers (paper Fig 16a), or
   * a flat 1D **BlockList** of only *effectual* blocks plus per-block request
-    ids / positions — the paper's optimized layout (Fig 16b).
+    ids / positions — the paper's optimized layout (Fig 16b), or
+  * per-shard **local BlockLists** (``build_sharded_block_lists``) for the
+    sequence-sharded chunked path: each mesh rank gets the slice of the
+    BlockList its pool shard can serve, with LOCAL pool indices
+    (docs/sharded_serving.md).
 
 Device side: the pool is a dense array (num_blocks, block_size, KV, HD) per
 layer (stacked over layers for scan). ``append_to_pool`` writes one new token
@@ -84,7 +88,13 @@ class BlockAllocator:
 
     num_blocks: int
     block_size: int
-    num_shards: int = 1          # model-axis shards for round-robin placement
+    # Sequence-sharding over a mesh axis: the device pool is split
+    # CONTIGUOUSLY into ``num_shards`` equal slices, so physical block ``b``
+    # lives on shard ``b // (num_blocks // num_shards)`` at local index
+    # ``b % (num_blocks // num_shards)`` — exactly the slice shard_map hands
+    # each rank when the pool array is sharded on its block dimension.  The
+    # free list is interleaved across shards so allocation stays balanced.
+    num_shards: int = 1
     # Cached-free eviction scorer: an ``EvictionPolicy`` from
     # ``repro.serving.policy`` (duck-typed here — core stays importable
     # without the serving layer; the registered default is resolved lazily on
@@ -113,7 +123,27 @@ class BlockAllocator:
     blocks_allocated: int = 0    # total fresh-block grabs (prefix hits skip it)
 
     def __post_init__(self):
-        self._free = list(range(self.num_blocks - 1, -1, -1))
+        if self.num_shards > 1:
+            assert self.num_blocks % self.num_shards == 0, (
+                self.num_blocks, self.num_shards)
+            # Pop order cycles shards (0, per, 2*per, ..., 1, per+1, ...):
+            # consecutive allocations land on different ranks, so per-shard
+            # BlockList fills — and therefore per-rank attention work — stay
+            # balanced instead of filling shard 0 first.
+            per = self.blocks_per_shard
+            order = [s * per + i for i in range(per)
+                     for s in range(self.num_shards)]
+            self._free = list(reversed(order))
+        else:
+            self._free = list(range(self.num_blocks - 1, -1, -1))
+
+    @property
+    def blocks_per_shard(self) -> int:
+        return self.num_blocks // self.num_shards
+
+    def shard_of(self, block: int) -> int:
+        """Owning mesh rank of a physical block (contiguous pool slices)."""
+        return block // self.blocks_per_shard
 
     # -- block bookkeeping --------------------------------------------------
     def _eviction(self) -> Any:
@@ -396,30 +426,45 @@ class BlockAllocator:
         return (np.asarray(lists, np.int32), np.asarray(reqs, np.int32),
                 np.asarray(poss, np.int32), lens)
 
-    def build_sharded_block_lists(self, req_ids: List[int], max_per_shard: int
-                                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-        """BlockList split round-robin across ``num_shards`` model ranks.
+    def build_sharded_block_lists(self, req_slots: List[Tuple[int, int]],
+                                  pad_req: int,
+                                  min_per_shard: Optional[int] = None,
+                                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-shard LOCAL BlockLists — the chunked sharded path's render.
 
-        Block k of request i goes to shard (k % num_shards); each shard's list
-        is padded to ``max_per_shard``. Used by the shard_map flash-decoding
-        paged attention (sequence sharded over the model axis).
-        Returns (block_list (S, M), block_req (S, M), block_pos (S, M), seq_lens).
+        The sharded sibling of the flat list the engine renders per step:
+        each entry of a request's table lands on its PHYSICAL owner shard
+        (``shard_of``) as a LOCAL pool index (``block % blocks_per_shard``),
+        keyed by the caller-supplied slot id (``req_slots`` is
+        ``[(req_id, slot), ...]``) with its ordinal block position.  Sharding
+        the resulting (S, M) arrays on dim 0 hands every shard_map rank
+        exactly the slice of the BlockList its pool shard can serve —
+        ``paged_attention_chunked_sharded`` combines the partials.
+
+        ``M`` is ``min_per_shard`` (default ``blocks_per_shard``, mirroring
+        the single-device render's pool-size capacity) grown by
+        power-of-two doubling when prefix-shared tables overflow it, so the
+        engine's jit cache stays O(log) programs.  Padding entries carry
+        ``pad_req`` (an out-of-range slot id ⇒ masked by the kernel).
+        Returns ``(block_list, block_req, block_pos)``, each (S, M) int32.
         """
         S = self.num_shards
-        per: List[List[Tuple[int, int, int]]] = [[] for _ in range(S)]
-        lens = np.zeros((len(req_ids),), np.int32)
-        for i, r in enumerate(req_ids):
+        per_shard = self.blocks_per_shard
+        entries: List[List[Tuple[int, int, int]]] = [[] for _ in range(S)]
+        for r, slot in req_slots:
             for k, b in enumerate(self._tables[r]):
-                per[k % S].append((b, i, k))
-            lens[i] = self._lens[r]
-        bl = np.zeros((S, max_per_shard), np.int32)
-        br = np.full((S, max_per_shard), len(req_ids), np.int32)
-        bp = np.zeros((S, max_per_shard), np.int32)
+                entries[b // per_shard].append((b % per_shard, slot, k))
+        cap = min_per_shard if min_per_shard is not None else per_shard
+        need = max((len(e) for e in entries), default=0)
+        while cap < need:
+            cap *= 2
+        bl = np.zeros((S, cap), np.int32)
+        br = np.full((S, cap), pad_req, np.int32)
+        bp = np.zeros((S, cap), np.int32)
         for s in range(S):
-            assert len(per[s]) <= max_per_shard, (len(per[s]), max_per_shard)
-            for j, (b, i, k) in enumerate(per[s]):
-                bl[s, j], br[s, j], bp[s, j] = b, i, k
-        return bl, br, bp, lens
+            for j, (b, slot, k) in enumerate(entries[s]):
+                bl[s, j], br[s, j], bp[s, j] = b, slot, k
+        return bl, br, bp
 
     def write_slots(self, req_ids: List[int]) -> np.ndarray:
         """(B, 2) [block, offset] where the NEXT token of each request lands.

@@ -1,10 +1,17 @@
-"""Version compatibility for Pallas TPU APIs.
+"""Version compatibility for jax APIs the kernels/serving stack touches.
 
-jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and back,
-depending on release line); resolve whichever this install provides once so
-every kernel call site stays version-agnostic.
+* jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
+  back, depending on release line); resolve whichever this install provides
+  once so every kernel call site stays version-agnostic.
+* ``shard_map`` graduated from ``jax.experimental.shard_map`` to the top
+  level around 0.5; the sharded serving path imports it from here.
 """
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
     pltpu, "TPUCompilerParams")
+
+try:                                    # jax >= 0.5 exposes it at top level
+    from jax import shard_map
+except ImportError:                     # pragma: no cover - version compat
+    from jax.experimental.shard_map import shard_map  # noqa: F401

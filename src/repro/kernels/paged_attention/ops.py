@@ -13,17 +13,28 @@ The jnp BlockList form (``repro.core.attention_api``) is registered as both
 path — segment-softmax, only effectual blocks gathered), so auto resolution
 on CPU picks it while perf attribution still distinguishes the two roles.
 The Pallas kernels register as ``pallas`` (TPU) and ``pallas_interpret``.
+The chunked family additionally registers ``sharded``: the shard_map
+log-sum-exp combine (``paged_attention_chunked_sharded``), capability-gated
+on mesh presence (``dispatch.mesh_present``) — the standalone form splits
+the flat BlockList across a 1-D mesh over every local device, which is both
+the parity harness for the collective math and the single-resolver home of
+the sharded serving engine's per-layer attention (the engine runs the same
+kernel under its own mesh with a sequence-sharded pool; see
+docs/sharded_serving.md).
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core import dispatch
 from repro.core.attention_api import (
-    paged_attention_chunked as _chunked_jnp, paged_attention_opt)
+    paged_attention_chunked as _chunked_jnp,
+    paged_attention_chunked_sharded, paged_attention_opt)
+from repro.kernels.compat import shard_map as _shard_map
 from repro.kernels.paged_attention.kernel import (
     paged_attention_chunked_pallas, paged_attention_pallas)
 
@@ -130,3 +141,47 @@ def _chunked_interpret(q, pool_k, pool_v, block_list, block_req, block_pos,
     return paged_attention_chunked_pallas(
         q, pool_k, pool_v, block_list, block_req, block_pos, kv_lens,
         token_req, token_pos, q_chunk=q_chunk, interpret=True)
+
+
+@lru_cache(maxsize=None)
+def _sharded_chunked_fn(ndev: int):
+    """Jitted shard_map combine over a 1-D mesh of ``ndev`` local devices.
+
+    Cached per device count so repeated calls hit ONE jit cache entry (the
+    registry rule: impls are registered pre-jitted; a fresh closure per
+    call would retrace every time).
+    """
+    mesh = jax.make_mesh((ndev,), ("seq",))
+    fn = _shard_map(
+        partial(paged_attention_chunked_sharded, axis="seq"),
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P("seq"), P("seq"), P("seq"), P(), P(),
+                  P()),
+        out_specs=P(), check_rep=False)
+    return jax.jit(fn)
+
+
+@_CHUNKED.register("sharded")
+def _chunked_sharded(q, pool_k, pool_v, block_list, block_req, block_pos,
+                     kv_lens, token_req, token_pos, *, q_chunk: int = 16):
+    """Family-signature wrapper around the shard_map chunked combine.
+
+    Splits the flat BlockList contiguously across a 1-D mesh over every
+    local device (the pool stays replicated — a global BlockList has global
+    pool indices) and runs ``paged_attention_chunked_sharded`` per rank.
+    The serving engine goes further (sequence-sharded pool + local index
+    translation) but reduces to the same per-rank kernel; this form is what
+    the registry-enumerated parity suite and standalone callers exercise.
+    """
+    del q_chunk                      # tiling is a kernel-backend concern
+    ndev = len(jax.devices())
+    B = kv_lens.shape[0]
+    Tb = block_list.shape[0]
+    pad = -Tb % ndev
+    if pad:
+        block_list = jnp.pad(block_list, (0, pad))
+        block_req = jnp.pad(block_req, (0, pad), constant_values=B)
+        block_pos = jnp.pad(block_pos, (0, pad))
+    return _sharded_chunked_fn(ndev)(q, pool_k, pool_v, block_list,
+                                     block_req, block_pos, kv_lens,
+                                     token_req, token_pos)

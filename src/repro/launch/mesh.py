@@ -24,6 +24,27 @@ def make_smoke_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_serving_mesh(model: int = 0):
+    """(1, model) mesh for the sharded serving engine.
+
+    ``model`` is the model-axis device count (``ServeConfig.devices``);
+    0 means "all local devices".  An explicit count the host cannot supply
+    raises — silently serving on fewer devices than requested would make
+    every ``devices=``-attributed number a lie.  The engine TP-shards
+    params over ``model`` and sequence-shards the KV pool's block dimension
+    over it — the data axis exists (size 1) so ``ShardingRules`` sees its
+    usual axis names (docs/sharded_serving.md).
+    """
+    n = len(jax.devices())
+    if model > n:
+        raise ValueError(
+            f"make_serving_mesh: {model} model-axis devices requested but "
+            f"only {n} local device(s) exist (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={model} on CPU hosts)")
+    model = n if model <= 0 else model
+    return jax.make_mesh((1, model), ("data", "model"))
+
+
 def data_axes(mesh) -> tuple:
     """Batch-sharding axes for a mesh (includes 'pod' when present)."""
     names = mesh.axis_names

@@ -42,6 +42,12 @@ def main() -> None:
     p.add_argument("--spec-k", type=int, default=4,
                    help="max draft tokens proposed+verified per request "
                         "per step")
+    p.add_argument("--devices", type=int, default=0,
+                   help="model-axis device count of the serving mesh "
+                        "(docs/sharded_serving.md); 0/1 = single-device "
+                        "engine, > 1 builds a mesh via repro.launch.mesh "
+                        "and runs the sharded fused step (greedy streams "
+                        "stay bit-identical)")
     args = p.parse_args()
 
     cfg = get_config(args.arch)
@@ -53,9 +59,11 @@ def main() -> None:
                         max_batch=args.requests, backend=args.backend,
                         admission=args.admission, preemption=args.preemption,
                         eviction=args.eviction, spec=args.spec,
-                        spec_k=args.spec_k)
+                        spec_k=args.spec_k, devices=args.devices)
     total_blocks = args.requests * (
         -(-(args.prompt_len + args.max_new) // args.block_size) + 1)
+    # ServeConfig.devices > 1 makes the engine build the serving mesh itself
+    # (repro.launch.mesh.make_serving_mesh) and run the sharded fused step.
     engine = ServingEngine(model, params, cfg, serve,
                            num_blocks=total_blocks)
 
@@ -72,7 +80,8 @@ def main() -> None:
     m = engine.metrics()
     print(f"served {m['finished']} requests, {m['output_tokens']} tokens "
           f"in {dt:.2f}s ({m['output_tokens']/dt:.1f} tok/s) "
-          f"[backend={m['backend']}]")
+          f"[backend={m['backend']} devices={m['devices']} "
+          f"mesh={m['mesh_shape']}]")
     print(f"TTFT p50 {m['p50_ttft_s']*1e3:.1f} / p99 {m['p99_ttft_s']*1e3:.1f} ms  "
           f"TPOT p50 {m['p50_tpot_s']*1e3:.1f} / p99 {m['p99_tpot_s']*1e3:.1f} ms")
     print(f"preemptions {m['preemptions']}  "

@@ -275,8 +275,52 @@ class TransformerLM:
         logits = unembed(params.get("head", params["embed"]), x)[:, 0]
         return logits, {"k": pk, "v": pv}
 
+    def _sharded_append_attend(self, mesh, axis, q, k_new, v_new, pk, pv,
+                               lists):
+        """One layer's pool append + attention under shard_map (mesh path).
+
+        ``pk``/``pv`` are sequence-sharded on their block dimension over
+        ``axis``; ``block_list``/``block_req``/``block_pos`` are the (S, M)
+        per-shard LOCAL BlockLists from
+        ``BlockAllocator.build_sharded_block_lists``.  Each rank translates
+        the global write slots to local indices (non-owned lanes get an
+        out-of-bounds sentinel the scatter drops), appends its lanes'
+        KV to its pool shard, computes chunked flash partials against its
+        local list, and the log-sum-exp combine
+        (:func:`attention_api.paged_attention_chunked_sharded`) reduces
+        across ``axis`` — the KV never leaves its shard.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        from repro.kernels.compat import shard_map
+
+        def local(q, k_new, v_new, pk, pv, bl, br, bp, kv_lens, token_req,
+                  token_pos, slots):
+            s = jax.lax.axis_index(axis)
+            per = pk.shape[0]                       # local blocks per shard
+            blk = slots[:, 0]
+            # Non-owned lanes -> index == per: out of local bounds, dropped.
+            local_blk = jnp.where(blk // per == s, blk - s * per, per)
+            lslots = jnp.stack([local_blk, slots[:, 1]], axis=-1)
+            pk = paged_kv.append_to_pool(pk, k_new, lslots)
+            pv = paged_kv.append_to_pool(pv, v_new, lslots)
+            ctx = attention_api.paged_attention_chunked_sharded(
+                q, pk, pv, bl[0], br[0], bp[0], kv_lens, token_req,
+                token_pos, axis=axis)
+            return pk, pv, ctx
+
+        fn = shard_map(
+            local, mesh=mesh,
+            in_specs=(P(), P(), P(), P(axis), P(axis), P(axis), P(axis),
+                      P(axis), P(), P(), P(), P()),
+            out_specs=(P(axis), P(axis), P()), check_rep=False)
+        return fn(q, k_new, v_new, pk, pv, lists["block_list"],
+                  lists["block_req"], lists["block_pos"], lists["kv_lens"],
+                  lists["token_req"], lists["token_pos"], lists["slots"])
+
     def decode_tokens_paged(self, params, pools, lists, tokens, *,
-                            attn_backend: Optional[str] = None):
+                            attn_backend: Optional[str] = None,
+                            mesh=None, axis: Optional[str] = None):
         """Fused chunked-prefill + decode over flat token lanes.
 
         The serving engine's single compiled program: each lane of ``tokens``
@@ -287,7 +331,9 @@ class TransformerLM:
         (:func:`attention_api.paged_attention_chunked`).
 
         lists:
-          block_list/block_req/block_pos   flat BlockList keyed by slot id
+          block_list/block_req/block_pos   flat BlockList keyed by slot id —
+                          or, with ``mesh`` set, the (S, M) per-shard LOCAL
+                          lists from ``build_sharded_block_lists``
           kv_lens   (B,)  valid KV per slot after this step's append
           token_req (T,)  owning slot of each lane (>= B ⇒ padding lane)
           token_pos (T,)  absolute position of each lane's token
@@ -298,6 +344,13 @@ class TransformerLM:
                           carries its last committed token plus K drafted
                           tokens, and needs a logit row per lane to judge
                           every draft in this ONE forward
+
+        ``mesh``/``axis`` set ⇒ the mesh-native serving path: the pool is
+        sequence-sharded on its block dimension over ``axis`` and each
+        layer's append + attention runs under shard_map
+        (:meth:`_sharded_append_attend`); everything outside attention is
+        ordinary global-array code that GSPMD partitions against the
+        TP-sharded params (``distributed.sharding.ShardingRules``).
 
         Returns (logits, new pools): logits (B, V) at each slot's
         ``last_lane``, or (B, R, V) at ``logit_lanes`` when present.
@@ -312,13 +365,20 @@ class TransformerLM:
             h = rmsnorm(lp["ln1"], x[:, None], cfg.norm_eps)
             q, k_new, v_new = attn_lib.project_qkv(lp["attn"], h, a,
                                                    token_pos[:, None])
-            # Padding lanes carry out-of-bounds slots -> scatter drops them.
-            pk = paged_kv.append_to_pool(pk, k_new[:, 0], lists["slots"])
-            pv = paged_kv.append_to_pool(pv, v_new[:, 0], lists["slots"])
-            ctx = attention_api.paged_attention_chunked_op(
-                q[:, 0], pk, pv, lists["block_list"], lists["block_req"],
-                lists["block_pos"], lists["kv_lens"], lists["token_req"],
-                token_pos, backend=attn_backend)
+            if mesh is not None:
+                pk, pv, ctx = self._sharded_append_attend(
+                    mesh, axis or "model", q[:, 0], k_new[:, 0],
+                    v_new[:, 0], pk, pv, lists)
+            else:
+                # Padding lanes carry out-of-bounds slots -> scatter drops
+                # them.
+                pk = paged_kv.append_to_pool(pk, k_new[:, 0], lists["slots"])
+                pv = paged_kv.append_to_pool(pv, v_new[:, 0], lists["slots"])
+                ctx = attention_api.paged_attention_chunked_op(
+                    q[:, 0], pk, pv, lists["block_list"],
+                    lists["block_req"], lists["block_pos"],
+                    lists["kv_lens"], lists["token_req"], token_pos,
+                    backend=attn_backend)
             x = x + jnp.einsum("be,ed->bd", ctx.reshape(x.shape[0], -1),
                                lp["attn"]["wo"])
             h = rmsnorm(lp["ln2"], x[:, None], cfg.norm_eps)

@@ -42,7 +42,15 @@ Step anatomy (the paper's BlockList optimization, end-to-end):
     corrected/bonus token and rewinds speculatively reserved KV blocks;
   * TTFT / TPOT percentiles, throughput, preemption / prefix-hit /
     speculation counters and per-step-phase timing buckets via
-    ``repro.serving.metrics`` (paper Fig 17e metrics).
+    ``repro.serving.metrics`` (paper Fig 17e metrics);
+  * with a ``mesh`` (built via ``repro.launch.mesh``), the SAME engine runs
+    mesh-native: params are TP-sharded by ``distributed.sharding``'s rules,
+    the KV pool is sequence-sharded on its block dimension, each layer's
+    append + attention runs under shard_map with per-shard local BlockLists
+    and a log-sum-exp combine (``paged_attention_chunked_sharded``, pinned
+    through the registry as the ``sharded`` backend), and greedy output
+    streams stay bit-identical to the single-device engine — the scheduler
+    and StepPlan are device-count-agnostic (docs/sharded_serving.md).
 """
 from __future__ import annotations
 
@@ -76,14 +84,30 @@ class ServingEngine:
                  *, num_blocks: Optional[int] = None, eos_id: int = -1,
                  token_budget: Optional[int] = None, seed: int = 0,
                  admission=None, preemption=None, eviction=None,
-                 proposer=None):
+                 proposer=None, mesh=None):
         self.model = model
-        self.params = params
         self.cfg = cfg
         self.serve = serve
         self.eos_id = eos_id
+        # Mesh-native serving: a jax Mesh (repro.launch.mesh) turns every
+        # step into the sharded fused program — params TP-sharded via the
+        # repo-wide ShardingRules, KV pool sequence-sharded over the model
+        # axis, per-layer attention combined across it.  ``None`` falls
+        # back to ``ServeConfig.devices`` (the config-level knob; a count
+        # the host can't supply raises in make_serving_mesh rather than
+        # silently serving single-device), else the single-device engine,
+        # byte-for-byte the old behaviour; the scheduler below never sees
+        # the difference.
+        if mesh is None and serve.devices > 1:
+            from repro.launch.mesh import make_serving_mesh
+            mesh = make_serving_mesh(model=serve.devices)
+        self.mesh = mesh
+        self.mesh_axis = serve.parallel.model_axis
+        S = int(mesh.shape[self.mesh_axis]) if mesh is not None else 1
+        self.shards = S
         bs = serve.kv_block_size
         nb = num_blocks or serve.max_blocks or serve.max_batch * 64
+        nb = -(-nb // S) * S            # pool splits into equal shard slices
         a = cfg.attention
         # Resolve the serving-policy triple ONCE through the policy registry
         # (explicit ctor args > force_policies scope > ServeConfig > default)
@@ -99,10 +123,22 @@ class ServingEngine:
                           (policy_lib.EVICTION, evi))}
         self._policy_objs = (adm, pre, evi)
         self.alloc = BlockAllocator(num_blocks=nb, block_size=bs,
-                                    eviction_policy=evi)
+                                    num_shards=S, eviction_policy=evi)
         pk, pv = make_pool(cfg.num_layers, nb, bs, a.num_kv_heads, a.head_dim,
                            jnp.dtype(cfg.dtype))
         self.pools = {"k": pk, "v": pv}
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+
+            from repro.distributed.sharding import ShardingRules
+            rules = ShardingRules(mesh, head_dim=a.head_dim)
+            params = jax.device_put(params,
+                                    rules.named(rules.params_tree(params)))
+            pool_sh = NamedSharding(mesh, P(None, self.mesh_axis))
+            self.pools = {k: jax.device_put(v, pool_sh)
+                          for k, v in self.pools.items()}
+        self.params = params
         self.B = serve.max_batch
         self.max_total = nb
         self.scheduler = Scheduler(
@@ -116,16 +152,32 @@ class ServingEngine:
         # force_backend scopes still win, explicit args would win over both).
         # The resolved name is pinned for every step so perf numbers are
         # attributable to one implementation, and exposed via metrics().
-        self.attn_backend = dispatch.resolve(
-            "paged_attention_chunked", config=serve.backend).backend
+        # A mesh pins the ``sharded`` backend explicitly (strict resolve —
+        # the CallSpec carries the mesh as the capability evidence): the
+        # per-layer combine is not a preference a config hint can override,
+        # it is what makes the sequence-sharded pool computable at all.
+        if mesh is not None:
+            self.attn_backend = dispatch.resolve(
+                "paged_attention_chunked", dispatch.SHARDED,
+                spec=dispatch.CallSpec(platform=jax.default_backend(),
+                                       kwargs={"mesh": mesh})).backend
+        else:
+            self.attn_backend = dispatch.resolve(
+                "paged_attention_chunked", config=serve.backend).backend
         self._metrics = EngineMetrics(backend=self.attn_backend)
         self._key = jax.random.PRNGKey(seed)
         self._step_count = 0
-        attn_backend = self.attn_backend
+        # Inside the sharded program the combine is called directly under
+        # shard_map (the registry pinned the name above for attribution);
+        # the single-device program threads the resolved name through the
+        # chunked op family as before.
+        attn_backend = None if mesh is not None else self.attn_backend
+        mesh_axis = self.mesh_axis if mesh is not None else None
 
         def fused(params, pools, lists, tokens, key, temps, top_ks, top_ps):
             logits, pools = model.decode_tokens_paged(
-                params, pools, lists, tokens, attn_backend=attn_backend)
+                params, pools, lists, tokens, attn_backend=attn_backend,
+                mesh=mesh, axis=mesh_axis)
             nxt = sampling_lib.sample_batched(key, logits, temps, top_ks,
                                               top_ps)
             return nxt, pools
@@ -138,6 +190,20 @@ class ServingEngine:
         # the engine runs the spec step: same fused forward (logit rows at
         # every draft lane via ``logit_lanes``) + batched rejection-accept.
         self.proposer = spec_lib.resolve(proposer, config=serve.spec)
+        if (self.proposer is not None
+                and not getattr(self.proposer, "deterministic", True)):
+            # verify_batched's delta-q acceptance rule treats the draft
+            # distribution as a point mass — exact ONLY for deterministic
+            # proposers.  A stochastic proposer reaching it would silently
+            # skew the sampling distribution, so fail at adoption, not at
+            # verify (docs/spec_decoding.md, "Be deterministic").
+            raise ValueError(
+                f"proposer {self.proposer.name!r} declares "
+                "deterministic=False: verify_batched's delta-q rejection "
+                "rule assumes the draft distribution is a point mass, so a "
+                "stochastic proposer would bias the emitted distribution. "
+                "Thread its q distribution through verify_batched or use a "
+                "deterministic proposer (see docs/spec_decoding.md).")
         self.spec_k = max(1, serve.spec_k) if self.proposer else 0
         self._spec_counters = {"steps": 0, "drafted_steps": 0,
                                "decode_lanes": 0, "proposed_tokens": 0,
@@ -149,7 +215,8 @@ class ServingEngine:
             def fused_spec(params, pools, lists, tokens, key, temps, top_ks,
                            top_ps, drafts, draft_lens):
                 logits, pools = model.decode_tokens_paged(
-                    params, pools, lists, tokens, attn_backend=attn_backend)
+                    params, pools, lists, tokens, attn_backend=attn_backend,
+                    mesh=mesh, axis=mesh_axis)
                 out, acc = spec_lib.verify_batched(
                     key, logits, drafts, draft_lens, temps, top_ks, top_ps)
                 return out, acc, pools
@@ -254,22 +321,31 @@ class ServingEngine:
         # Block lists AFTER reservations (tables may have grown / CoW'd).
         # A prefix-shared block is effectual for EVERY holder, so the entry
         # count can exceed the pool size — bucket the capacity like T.
-        tables = {req.req_id: alloc.table(req.req_id)
-                  for req, _, _ in committed}
-        needed = sum(len(t) for t in tables.values())
-        cap = (self.max_total if needed <= self.max_total
-               else _bucket(needed, lo=self.max_total))
-        bl = np.zeros((cap,), np.int32)
-        br = np.full((cap,), Bs, np.int32)
-        bp = np.zeros((cap,), np.int32)
-        cursor = 0
-        for req, _, _ in committed:
-            table = tables[req.req_id]
-            n = len(table)
-            bl[cursor:cursor + n] = table
-            br[cursor:cursor + n] = req.slot
-            bp[cursor:cursor + n] = np.arange(n)
-            cursor += n
+        # With a mesh the allocator renders per-shard LOCAL lists instead
+        # (same slot keys, same bucketing per shard slice): the fused
+        # program shards them over the model axis and every rank attends
+        # against exactly the BlockList slice its pool shard serves.
+        if self.mesh is not None:
+            bl, br, bp = alloc.build_sharded_block_lists(
+                [(req.req_id, req.slot) for req, _, _ in committed],
+                pad_req=Bs)
+        else:
+            tables = {req.req_id: alloc.table(req.req_id)
+                      for req, _, _ in committed}
+            needed = sum(len(t) for t in tables.values())
+            cap = (self.max_total if needed <= self.max_total
+                   else _bucket(needed, lo=self.max_total))
+            bl = np.zeros((cap,), np.int32)
+            br = np.full((cap,), Bs, np.int32)
+            bp = np.zeros((cap,), np.int32)
+            cursor = 0
+            for req, _, _ in committed:
+                table = tables[req.req_id]
+                n = len(table)
+                bl[cursor:cursor + n] = table
+                br[cursor:cursor + n] = req.slot
+                bp[cursor:cursor + n] = np.arange(n)
+                cursor += n
         lists = {
             "block_list": jnp.asarray(bl), "block_req": jnp.asarray(br),
             "block_pos": jnp.asarray(bp), "kv_lens": jnp.asarray(kv_lens),
@@ -294,18 +370,26 @@ class ServingEngine:
         (blocks and tokens); a request preempted in the fit loop simply
         drops its draft.  The draft length is clamped so the step can never
         emit past ``max_new_tokens`` — the worst-case block bound checked at
-        submit() is unchanged by speculation.
+        submit() is unchanged by speculation.  All requests go through ONE
+        ``propose_batch`` call so proposers with a device-side rollout
+        (draft-model) amortize it across the batch instead of running
+        per-request host loops.
         """
+        pend = [(req, min(self.spec_k,
+                          req.max_new_tokens - len(req.output) - 1))
+                for req in self.scheduler.running.values()
+                if req.state is RequestState.DECODING]
+        if not pend:
+            return {}
+        raw = self.proposer.propose_batch(pend)
         drafts: Dict[int, np.ndarray] = {}
-        for req in self.scheduler.running.values():
-            if req.state is not RequestState.DECODING:
-                continue
-            k = min(self.spec_k, req.max_new_tokens - len(req.output) - 1)
-            d = (self.proposer.propose(req, k) if k > 0
-                 else np.zeros((0,), np.int32))
+        for req, _ in pend:
+            d = raw.get(req.req_id)
+            d = (np.zeros((0,), np.int32) if d is None
+                 else np.asarray(d, np.int32))
             self.proposer.on_propose(req, len(d))
             if len(d):
-                drafts[req.req_id] = np.asarray(d, np.int32)
+                drafts[req.req_id] = d
         return drafts
 
     def step(self) -> int:
@@ -451,7 +535,16 @@ class ServingEngine:
     def metrics(self) -> Dict[str, float]:
         m = self._metrics.summary()
         hits, misses = self.alloc.prefix_hits, self.alloc.prefix_misses
+        # Mesh attribution: the shape the fused program ran on (axis name ->
+        # size; None for the single-device engine) and the device count, so
+        # a --devices sweep row is attributable to one mesh like rows are to
+        # one backend/policy/proposer.
+        mesh_shape = (dict(self.mesh.shape) if self.mesh is not None
+                      else None)
         m.update({
+            "mesh_shape": mesh_shape,
+            "devices": (int(np.prod(list(mesh_shape.values())))
+                        if mesh_shape else 1),
             "blocks_free": self.alloc.num_free,
             "preemptions": self.scheduler.num_preemptions,
             "slot_compactions": self.scheduler.num_slot_compactions,

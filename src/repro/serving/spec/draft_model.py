@@ -8,16 +8,20 @@ in one fused target forward.  The draft is deliberately greedy/deterministic
 — the delta-distribution acceptance rule in ``repro.serving.spec.verify``
 needs no draft probabilities and greedy serving stays bit-reproducible.
 
-Cost model: the draft runs ``k`` single-sequence forwards per proposal on a
-model ``depth_frac`` as deep as the target, over a clipped context window of
-``window`` tokens (padded right to a power-of-two bucket so the jit cache
-holds O(log window) programs, not one per context length — right-padding is
-sound because causal attention never lets position ``i`` see ``j > i``).
+Cost model: the engine proposes through :meth:`propose_batch`, which rolls
+out ALL requests' drafts together — ``k_max`` forwards of a (B, L) batch per
+step instead of ``sum_i k_i`` single-sequence forwards (the PR 4 follow-up in
+ROADMAP).  The draft model is ``depth_frac`` as deep as the target and reads
+a clipped context window of ``window`` tokens; batch and length are padded
+right to power-of-two buckets so the jit cache holds O(log B * log window)
+programs (right-padding is sound because causal attention never lets
+position ``i`` see ``j > i``, and rows are independent — the batched rollout
+proposes exactly what the per-request form would).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -45,6 +49,7 @@ class DraftModelProposer(Proposer):
         self.window = window
         self.seed = seed
         self._fn = None
+        self._batch_fn = None
 
     def bind(self, engine) -> None:
         if self.model is None:
@@ -67,7 +72,15 @@ class DraftModelProposer(Proposer):
             logits, _ = self.model.forward(params, toks)
             return jnp.argmax(logits[0, idx], axis=-1).astype(jnp.int32)
 
+        def greedy_next_batch(params, toks, idxs):
+            # toks (Bb, Lb) right-padded; idxs (Bb,) each row's last real
+            # position — ONE forward advances every request's rollout.
+            logits, _ = self.model.forward(params, toks)
+            rows = logits[jnp.arange(toks.shape[0]), idxs]      # (Bb, V)
+            return jnp.argmax(rows, axis=-1).astype(jnp.int32)
+
         self._fn = jax.jit(greedy_next)
+        self._batch_fn = jax.jit(greedy_next_batch)
 
     def propose(self, req: Request, k: int) -> np.ndarray:
         if k <= 0:
@@ -87,4 +100,42 @@ class DraftModelProposer(Proposer):
             out[j] = tok
             buf[0, L + j] = tok
         self.count("draft_forwards", k)
+        return out
+
+    def propose_batch(self, reqs: List[Tuple[Request, int]]
+                      ) -> Dict[int, np.ndarray]:
+        """All requests' rollouts in ``k_max`` BATCHED forwards.
+
+        Rows are causally independent, so round ``j`` of the (Bb, Lb)
+        forward computes every request's next greedy token at once; a row
+        whose ``k`` budget is exhausted just stops consuming its lane.
+        Proposes exactly what per-request :meth:`propose` would.
+        """
+        import jax.numpy as jnp
+        out = {req.req_id: np.zeros((0,), np.int32) for req, _ in reqs}
+        live = [(req, k) for req, k in reqs if k > 0]
+        if not live or self._batch_fn is None:
+            return out                  # no budget, or never bound
+        ctxs = [req.resume_tokens()[-self.window:] for req, _ in live]
+        lens = np.asarray([len(c) for c in ctxs], np.int32)
+        kmax = max(k for _, k in live)
+        Bb = bucket_pow2(len(live), lo=1)
+        Lb = bucket_pow2(int(lens.max()) + kmax, lo=16)
+        buf = np.zeros((Bb, Lb), np.int32)
+        for i, c in enumerate(ctxs):
+            buf[i, :len(c)] = c
+        idxs = np.zeros((Bb,), np.int32)
+        idxs[:len(live)] = lens - 1
+        drafts = np.zeros((len(live), kmax), np.int32)
+        for j in range(kmax):
+            toks = np.asarray(self._batch_fn(self.params, jnp.asarray(buf),
+                                             jnp.asarray(idxs + j)))
+            for i, (_, k) in enumerate(live):
+                if j < k:
+                    drafts[i, j] = toks[i]
+                    buf[i, lens[i] + j] = toks[i]
+        self.count("draft_forwards", kmax)
+        self.count("batched_rollouts")
+        for i, (req, k) in enumerate(live):
+            out[req.req_id] = drafts[i, :k]
         return out

@@ -64,11 +64,21 @@ class UnknownProposerError(ValueError):
 class Proposer:
     """Base class: a registry name + per-run counters.
 
-    Subclasses implement :meth:`propose`; :meth:`bind` runs once when the
-    engine adopts the proposer (build a draft model, size windows, ...).
+    Subclasses implement :meth:`propose` (and optionally the batched
+    :meth:`propose_batch`); :meth:`bind` runs once when the engine adopts
+    the proposer (build a draft model, size windows, ...).
+
+    ``deterministic`` is a capability declaration, not a hint: the delta-q
+    acceptance rule in ``repro.serving.spec.verify`` treats the draft
+    distribution as a point mass, which is exact ONLY when ``propose`` is a
+    pure function of request state.  A proposer that samples its drafts
+    must set ``deterministic = False`` — the engine then refuses to adopt
+    it with a clear error instead of silently biasing the emitted
+    distribution (docs/spec_decoding.md).
     """
 
     name: str = ""               # set by @register
+    deterministic: bool = True   # propose() is a pure function of req state
 
     def __init__(self) -> None:
         self.counters: Dict[str, int] = {}
@@ -88,6 +98,22 @@ class Proposer:
         request decodes normally this step.
         """
         raise NotImplementedError
+
+    def propose_batch(self, reqs: List[Tuple[Request, int]]
+                      ) -> Dict[int, np.ndarray]:
+        """Drafts for a whole step's DECODING requests in one call.
+
+        ``reqs`` is ``[(request, k), ...]`` (``k <= 0`` ⇒ no budget: return
+        empty).  The engine always proposes through this entry point so a
+        proposer with device-side work (the draft-model rollout) can batch
+        it across requests; the default just loops :meth:`propose`, which
+        is exactly right for host-side proposers like ``ngram``.  Must be
+        equivalent to the per-request form: ``out[req.req_id] ==
+        propose(req, k)`` for every pair.
+        """
+        return {req.req_id: (self.propose(req, k) if k > 0
+                             else np.zeros((0,), np.int32))
+                for req, k in reqs}
 
     # -- bookkeeping the engine drives --------------------------------------
     def on_propose(self, req: Request, drafted: int) -> None:

@@ -108,6 +108,80 @@ def test_paged_attention_chunked_kernel_sweep(NB, BS, KV, hd, H, lens,
     np.testing.assert_allclose(np.asarray(out)[-2:], 0.0)
 
 
+def test_paged_attention_chunked_sharded_equals_chunked():
+    """Sequence-sharded chunked combine vs the single-device chunked oracle:
+    mixed decode/prefill/draft-style lanes over a pool sharded into 4
+    contiguous slices, with per-shard LOCAL BlockLists rendered by
+    ``build_sharded_block_lists`` — plus the registry's ``sharded`` backend
+    (flat-list split, replicated pool) on the same inputs."""
+    from conftest import run_multidevice
+    snippet = """
+    import jax, jax.numpy as jnp, numpy as np
+    from functools import partial
+    from jax.sharding import PartitionSpec as P
+    from repro.core.attention_api import (
+        paged_attention_chunked, paged_attention_chunked_sharded)
+    from repro.core.dispatch import get_op
+    from repro.core.paged_kv import BlockAllocator
+    from repro.kernels.compat import shard_map
+
+    SHARDS, BS, KV, hd, H = 4, 8, 2, 32, 8
+    NB = SHARDS * 6
+    lens, chunks = [13, 8, 21], [1, 4, 2]      # decode + prefill-chunk lanes
+    B = len(lens)
+    al = BlockAllocator(num_blocks=NB, block_size=BS, num_shards=SHARDS)
+    for r, L in enumerate(lens):
+        al.allocate(r, L)
+    kv_lens = jnp.asarray(lens, jnp.int32)
+    treq, tpos = [], []
+    for r, c in enumerate(chunks):             # last c positions of req r
+        treq += [r] * c
+        tpos += list(range(lens[r] - c, lens[r]))
+    treq += [B, B]                             # padding lanes
+    tpos += [0, 0]
+    T = len(treq)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    pk = jax.random.normal(ks[0], (NB, BS, KV, hd), jnp.float32)
+    pv = jax.random.normal(ks[1], (NB, BS, KV, hd), jnp.float32)
+    q = jax.random.normal(ks[2], (T, H, hd), jnp.float32)
+    treq = jnp.asarray(treq, jnp.int32)
+    tpos = jnp.asarray(tpos, jnp.int32)
+
+    bl, br, bp, _ = al.build_block_list(list(range(B)), max_total=NB)
+    ref = paged_attention_chunked(q, pk, pv, jnp.asarray(bl),
+                                  jnp.asarray(br), jnp.asarray(bp),
+                                  kv_lens, treq, tpos)
+
+    # engine form: sequence-sharded pool + per-shard LOCAL lists
+    sbl, sbr, sbp = al.build_sharded_block_lists(
+        [(r, r) for r in range(B)], pad_req=B)
+    mesh = jax.make_mesh((SHARDS,), ("model",))
+    fn = shard_map(
+        lambda q, pk, pv, bl, br, bp: paged_attention_chunked_sharded(
+            q, pk, pv, bl[0], br[0], bp[0], kv_lens, treq, tpos,
+            axis="model"),
+        mesh=mesh,
+        in_specs=(P(), P("model"), P("model"), P("model"), P("model"),
+                  P("model")),
+        out_specs=P(), check_rep=False)
+    out = jax.jit(fn)(q, pk, pv, jnp.asarray(sbl), jnp.asarray(sbr),
+                      jnp.asarray(sbp))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(out)[-2:], 0.0)  # pad lanes
+
+    # registry form: the auto-enrolled `sharded` backend on the flat list
+    fam = get_op("paged_attention_chunked")
+    out2 = fam(q, pk, pv, jnp.asarray(bl), jnp.asarray(br), jnp.asarray(bp),
+               kv_lens, treq, tpos, backend="sharded")
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+    print("OK")
+    """
+    r = run_multidevice(snippet, n_devices=4)
+    assert "OK" in r.stdout, (r.stdout[-300:], r.stderr[-2500:])
+
+
 @pytest.mark.parametrize("R,D,B,T,L,dtype", [
     (64, 128, 3, 4, 5, jnp.float32),
     (32, 256, 2, 10, 20, jnp.float32),

@@ -40,6 +40,40 @@ def test_allocator_reserve_commit():
     assert len(set(s[0] for s in slots)) == 3  # 3 blocks touched
 
 
+def test_sharded_allocator_interleaves_and_localizes():
+    """num_shards > 1: the free list cycles shards (balanced fills) and
+    build_sharded_block_lists renders slot-keyed LOCAL indices on each
+    block's physical owner shard, bucketing capacity past the slice size."""
+    al = BlockAllocator(num_blocks=12, block_size=4, num_shards=4)
+    assert al.blocks_per_shard == 3
+    blocks = al.allocate(7, 12)                   # 3 blocks, one per shard
+    assert sorted(al.shard_of(b) for b in blocks) == [0, 1, 2]
+    assert [b % al.blocks_per_shard for b in blocks] == [0, 0, 0]
+    al.allocate(9, 4)                             # next pop: shard 3
+    assert al.shard_of(al.table(9)[0]) == 3
+
+    bl, br, bp = al.build_sharded_block_lists([(7, 0), (9, 1)], pad_req=2)
+    assert bl.shape == br.shape == bp.shape == (4, 3)
+    for s in range(4):
+        for j in range(3):
+            if br[s, j] == 2:                     # padding entry
+                continue
+            req = 7 if br[s, j] == 0 else 9
+            blk = al.table(req)[bp[s, j]]
+            assert al.shard_of(blk) == s          # physical owner
+            assert bl[s, j] == blk % al.blocks_per_shard
+    # every real table entry appears exactly once across shards
+    assert int((br != 2).sum()) == len(al.table(7)) + len(al.table(9))
+    # capacity grows by doubling when shared blocks overflow a slice
+    al2 = BlockAllocator(num_blocks=4, block_size=4, num_shards=2)
+    for r in range(4):
+        al2._tables[r] = [0, 1]                   # all on shard 0
+        al2._lens[r] = 8
+    bl2, _, _ = al2.build_sharded_block_lists(
+        [(r, r) for r in range(4)], pad_req=4)
+    assert bl2.shape == (2, 8)                    # 8 entries on shard 0
+
+
 def test_block_table_vs_list_equivalence():
     al = BlockAllocator(num_blocks=32, block_size=4)
     al._free = np.random.RandomState(3).permutation(32).tolist()

@@ -126,6 +126,48 @@ def test_draft_model_proposer_is_deterministic_and_in_vocab():
     assert p.counters["draft_forwards"] == 6
 
 
+def test_propose_batch_default_matches_propose():
+    """The base-class batched entry point must loop propose() exactly
+    (k <= 0 rows come back empty without touching propose)."""
+    p, q = NgramProposer(), NgramProposer()
+    r0 = _req(0, [1, 2, 3, 1, 2])
+    r1 = _req(1, [4, 4, 4, 4])
+    r2 = _req(2, [9, 8, 7])
+    out = p.propose_batch([(r0, 3), (r1, 2), (r2, 0)])
+    assert set(out) == {0, 1, 2}
+    assert list(out[0]) == list(q.propose(r0, 3))
+    assert list(out[1]) == list(q.propose(r1, 2))
+    assert len(out[2]) == 0
+
+
+def test_draft_model_propose_batch_matches_per_request():
+    """The batched rollout (ROADMAP: one bucketed forward per round instead
+    of per-request host loops) proposes EXACTLY what per-request propose
+    would, in k_max forwards instead of sum(k_i)."""
+    cfg = get_config("qwen2-1.5b").reduced(dtype="float32")
+    model = build_model(cfg, remat=False)
+    params = model.init(KEY)
+    pb = spec.DraftModelProposer(model=model, params=params, window=16)
+    ps = spec.DraftModelProposer(model=model, params=params, window=16)
+    pb.bind(None)
+    ps.bind(None)
+    rng = np.random.default_rng(3)
+    reqs = []
+    for i, k in enumerate([3, 1, 2, 0]):
+        r = _req(i, rng.integers(0, cfg.vocab_size,
+                                 (int(rng.integers(2, 12)),), dtype=np.int32))
+        r.output = [int(t) for t in
+                    rng.integers(0, cfg.vocab_size, (i,), dtype=np.int32)]
+        reqs.append((r, k))
+    batched = pb.propose_batch(reqs)
+    for r, k in reqs:
+        solo = ps.propose(r, k)
+        assert list(batched[r.req_id]) == list(solo), (r.req_id, k)
+    assert pb.counters["draft_forwards"] == 3           # k_max rounds
+    assert pb.counters["batched_rollouts"] == 1
+    assert ps.counters["draft_forwards"] == 6           # sum of k_i
+
+
 # -------------------------------------------------------------------- verify
 def _verify_greedy(logits, draft, d):
     out, acc = verify_batched(
@@ -358,6 +400,21 @@ def spec_env():
     assert metrics["preemptions"] > 0           # the workload really starves
     return {"cfg": cfg, "run": run, "outputs": outputs,
             "num_blocks": num_blocks}
+
+
+def test_stochastic_proposer_refused_at_adoption(spec_env):
+    """deterministic=False is a declared capability the delta-q rule cannot
+    serve: the engine must refuse adoption with a clear error instead of
+    silently biasing the emitted distribution."""
+    class _StochasticProposer(spec.Proposer):
+        name = "stochastic-test"
+        deterministic = False
+
+        def propose(self, req, k):       # pragma: no cover - never reached
+            return np.zeros((0,), np.int32)
+
+    with pytest.raises(ValueError, match="delta-q|deterministic"):
+        spec_env["run"](proposer=_StochasticProposer())
 
 
 def test_ngram_spec_greedy_parity_and_metrics(spec_env):
