@@ -50,6 +50,7 @@ subprocess).
 | paged_attention_bench  | Fig 17 a-c (S4.2)  |
 | recsys_e2e             | Fig 11 / Table 3   |
 | llm_e2e                | Fig 12, 17 d-e     |
+| saturation             | S4.2 pipeline      |
 """
 from __future__ import annotations
 
@@ -77,12 +78,13 @@ MODULES = [
     "paged_attention_bench",
     "recsys_e2e",
     "llm_e2e",
+    "saturation",
 ]
 
 # Modules that build serving engines — the only ones whose numbers can
 # depend on the serving-policy triple. A --policy sweep re-runs just these
 # per triple; everything else runs once (under the first triple's scope).
-POLICY_SENSITIVE = {"llm_e2e"}
+POLICY_SENSITIVE = {"llm_e2e", "saturation"}
 # Likewise for the speculative-decoding proposer (--spec sweep).
 SPEC_SENSITIVE = {"llm_e2e"}
 

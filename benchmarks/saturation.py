@@ -1,0 +1,137 @@
+"""Saturation + DMA-vs-compute profile for the async overlapped engine loop
+(docs/async_engine.md):
+
+  * ``llm_saturation_*`` — offered load >> capacity: a whole wave of
+    requests lands at t0 against a small batch and a tight KV pool, so the
+    engine is never idle and every step's host work (propose / schedule /
+    render / commit) competes with device execution. Run twice — overlap
+    off (serial build->resolve) vs on (build N+1 while N executes) — the
+    throughput delta is the pipeline win, and ``device_frac`` (device phase
+    wall over total phase wall) rises under overlap because host buckets
+    hide inside the device window.
+  * ``paged_dma_profile_*`` — the chunked paged-attention kernel's
+    multi-buffered KV-page prefetch ring, swept over prefetch depth x page
+    (block) size at fixed total KV. Depth 0 is the BlockSpec-pipelined
+    serial path; depth >= 2 runs the manual DMA ring. Each row attributes
+    the bytes a lane step must move vs the flash-update flops it must
+    compute, so the depth that balances DMA against compute is readable
+    from the JSON, not guessed.
+
+Every row carries ``overlap=``/``prefetch_depth=`` (engine rows) or
+``depth=``/``page=`` (kernel rows) so ``benchmarks/run.py --json`` sweeps
+stay attributable per configuration (the BENCH_006.json baseline).
+``REPRO_BENCH_SMOKE=1`` shrinks both sweeps to the deterministic minimum.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.config import ServeConfig, get_config
+from repro.core.paged_kv import BlockAllocator
+from repro.serving.engine import Request, ServingEngine
+
+
+def _saturated_engine(model, params, cfg, *, overlap: bool, n_req: int,
+                      max_batch: int, num_blocks: int) -> ServingEngine:
+    serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=max_batch,
+                        overlap=overlap)
+    eng = ServingEngine(model, params, cfg, serve, num_blocks=num_blocks)
+    rng = np.random.default_rng(0)          # same wave for both passes
+    for i in range(n_req):
+        eng.submit(Request(
+            req_id=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                (int(rng.integers(4, 12)),), dtype=np.int32),
+            max_new_tokens=int(rng.integers(6, 12))))
+    return eng
+
+
+def _emit_saturation(tag: str, eng: ServingEngine, dt: float) -> None:
+    m = eng.metrics()
+    total = sum(m["phase_s"].values()) or 1.0
+    emit(tag, dt * 1e6,
+         f"tok_s={m['throughput_tok_s']:.1f};"
+         f"device_frac={m['phase_s'].get('device', 0.0) / total:.3f};"
+         f"steps={m['steps']};"
+         f"idle_steps={m['num_idle_steps']};"
+         f"preempt={m['preemptions']};"
+         f"finished={m['finished']};"
+         f"overlap={str(m['overlap']).lower()};"
+         f"prefetch_depth={m['prefetch_depth']};"
+         f"backend={m['backend']}")
+
+
+def _dma_profile(quick: bool, smoke: bool) -> None:
+    """Chunked-kernel prefetch ring: depth x page-size sweep at fixed KV.
+
+    The work per lane step is constant across the sweep (same total KV
+    tokens, same heads), so ``us_per_call`` differences are attributable to
+    the fetch strategy; ``kv_bytes_per_step`` / ``flops_per_step`` give the
+    DMA-vs-compute balance each (depth, page) point must hide.
+    """
+    from repro.kernels.paged_attention.kernel import (
+        paged_attention_chunked_pallas)
+    KV, hd, H = 2, 32, 8
+    total_kv = 64 if smoke else (128 if quick else 512)
+    lens = [total_kv // 2, total_kv // 4, total_kv // 4]
+    depths = [0, 2] if smoke else ([0, 2, 4] if quick else [0, 2, 4, 8])
+    pages = [8, 16] if (smoke or quick) else [8, 16, 32]
+    for bs in pages:
+        nb = sum(-(-L // bs) for L in lens) + 2
+        al = BlockAllocator(num_blocks=nb, block_size=bs)
+        for r, L in enumerate(lens):
+            al.allocate(r, L)
+        bl, br, bp, _ = [jnp.asarray(x) for x in
+                         al.build_block_list(list(range(len(lens))),
+                                             max_total=nb)]
+        kv_lens = jnp.asarray(lens, jnp.int32)
+        treq = jnp.asarray([0, 1, 2], jnp.int32)      # one decode lane each
+        tpos = jnp.asarray([L - 1 for L in lens], jnp.int32)
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        pk = jax.random.normal(ks[0], (nb, bs, KV, hd), jnp.float32)
+        pv = jax.random.normal(ks[1], (nb, bs, KV, hd), jnp.float32)
+        q = jax.random.normal(ks[2], (3, H, hd), jnp.float32)
+        # per grid step (one KV page): K+V page bytes in, flash update flops
+        kv_bytes = 2 * bs * KV * hd * 4
+        flops = 2 * 2 * len(treq) * H * bs * hd       # qk^T + pv per lane
+        for depth in depths:
+            fn = jax.jit(lambda q, pk, pv, d=depth: paged_attention_chunked_pallas(
+                q, pk, pv, bl, br, bp, kv_lens, treq, tpos,
+                q_chunk=4, prefetch_depth=d, interpret=True))
+            us = time_fn(fn, q, pk, pv, iters=3)
+            emit(f"paged_dma_profile_bs{bs}_d{depth}", us,
+                 f"depth={depth};page={bs};kv_pages={int(bl.shape[0])};"
+                 f"kv_bytes_per_step={kv_bytes};"
+                 f"flops_per_step={flops};"
+                 f"bytes_per_flop={kv_bytes / flops:.3f}")
+
+
+def run(quick: bool = True) -> None:
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    from repro.models.api import build_model
+    cfg = get_config("smollm-360m").reduced(dtype="float32")
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # offered load >> capacity: requests outnumber batch slots ~6x and the
+    # pool holds well under the working set, so the run saturates end to end
+    n_req = 6 if smoke else (12 if quick else 48)
+    max_batch = 2
+    num_blocks = 24
+    for overlap in (False, True):
+        eng = _saturated_engine(model, params, cfg, overlap=overlap,
+                                n_req=n_req, max_batch=max_batch,
+                                num_blocks=num_blocks)
+        t0 = time.time()
+        eng.run_until_done()
+        _emit_saturation(
+            f"llm_saturation_overlap_{'on' if overlap else 'off'}",
+            eng, time.time() - t0)
+
+    _dma_profile(quick, smoke)

@@ -344,6 +344,15 @@ class ServeConfig:
     # and the max draft tokens verified per request per step.
     spec: str = "off"              # off | ngram | draft-model
     spec_k: int = 4
+    # Async overlapped engine loop (docs/async_engine.md): step N+1's host
+    # work (propose/schedule/render) runs while step N's fused program is
+    # still on device; commit happens when the device future resolves.
+    # Greedy streams are bit-identical overlap on vs off.
+    overlap: bool = False
+    # KV-page DMA ring depth for the Pallas chunked-attention kernel
+    # (0/1 = BlockSpec pipeline, >= 2 = multi-buffered manual DMA —
+    # `prefetch_depth` tunable of the paged_attention_chunked op family).
+    prefetch_depth: int = 0
     # Mesh-native serving (docs/sharded_serving.md): device count of the
     # serving mesh's model axis. 0/1 = single-device engine; > 1 makes
     # ``repro.launch.serve`` build a mesh (repro.launch.mesh) and the engine

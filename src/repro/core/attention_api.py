@@ -252,13 +252,18 @@ def paged_attention(q, pool_k, pool_v, block_list, block_req, block_pos,
 
 def paged_attention_chunked_op(q, pool_k, pool_v, block_list, block_req,
                                block_pos, kv_lens, token_req, token_pos,
-                               *, backend=None, q_chunk: int = 16):
+                               *, backend=None, q_chunk: int = 16,
+                               prefetch_depth: int = 0):
     """Chunked-prefill PagedAttention through the unified registry.
 
     Same contract as :func:`paged_attention_chunked` (which is the ``ref``
     implementation); ``pallas``/``pallas_interpret`` select the query-chunk
     grid kernel in ``repro.kernels.paged_attention.kernel``.
+    ``prefetch_depth`` >= 2 additionally selects the multi-buffered KV-page
+    DMA ring in the Pallas kernel (jnp backends ignore it); both knobs are
+    declared as family tunables in the registry.
     """
     return dispatch.get_op("paged_attention_chunked")(
         q, pool_k, pool_v, block_list, block_req, block_pos, kv_lens,
-        token_req, token_pos, q_chunk=q_chunk, backend=backend)
+        token_req, token_pos, q_chunk=q_chunk, prefetch_depth=prefetch_depth,
+        backend=backend)

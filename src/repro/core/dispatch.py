@@ -217,16 +217,25 @@ class OpFamily:
 
     All implementations of a family share one call signature; per-backend
     extras (tile sizes, interpret flags) are baked in at registration.
+
+    ``tunables`` declares the family's cross-backend performance knobs as
+    ``{name: default}`` — keyword-only ints every implementation accepts
+    (backends that have no use for one simply ``del`` it).  Declaring them
+    here (instead of in each ops.py) gives benchmarks and metrics one place
+    to enumerate what can be swept and what the defaults are; the values
+    themselves still travel as ordinary static kwargs.
     """
 
     def __init__(self, name: str, *, doc: str = "",
-                 example: Optional[Callable[[], Tuple[tuple, dict]]] = None):
+                 example: Optional[Callable[[], Tuple[tuple, dict]]] = None,
+                 tunables: Optional[Dict[str, Any]] = None):
         self.name = name
         self.doc = doc
         # Example-input factory: ``() -> (args, kwargs)`` with shapes small
         # enough for interpret mode.  Powers the registry-enumerated parity
         # suite — no hand-maintained op list in tests.
         self.example = example
+        self.tunables: Dict[str, Any] = dict(tunables or {})
         self._impls: Dict[str, Impl] = {}
 
     # ------------------------------------------------------------- registry
@@ -330,16 +339,20 @@ _REGISTRY: Dict[str, OpFamily] = {}
 
 
 def op(name: str, *, doc: str = "",
-       example: Optional[Callable[[], Tuple[tuple, dict]]] = None) -> OpFamily:
+       example: Optional[Callable[[], Tuple[tuple, dict]]] = None,
+       tunables: Optional[Dict[str, Any]] = None) -> OpFamily:
     """Create (or fetch) the :class:`OpFamily` called ``name``."""
     fam = _REGISTRY.get(name)
     if fam is None:
-        fam = _REGISTRY[name] = OpFamily(name, doc=doc, example=example)
+        fam = _REGISTRY[name] = OpFamily(name, doc=doc, example=example,
+                                         tunables=tunables)
     else:
         if doc:
             fam.doc = doc
         if example is not None:
             fam.example = example
+        if tunables is not None:
+            fam.tunables = dict(tunables)
     return fam
 
 

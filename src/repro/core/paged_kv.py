@@ -500,9 +500,15 @@ def append_to_pool(pool_layer, kv_new, slots):
 def copy_pool_blocks(pool, srcs, dsts):
     """Copy whole blocks across the layer-stacked pool (copy-on-write).
 
-    pool (L, NB, BS, KV, HD); srcs/dsts (n,) block indices.
+    pool (L, NB, BS, KV, HD); srcs/dsts (n,) block indices.  Out-of-bounds
+    entries (src = dst = NB) are inert padding: the gather clips to the last
+    block and the ``mode="drop"`` scatter discards the write — callers pad
+    the copy count to a power-of-two bucket so a varying number of CoW
+    copies per step reuses a handful of compiled programs.
     """
-    return pool.at[:, dsts].set(pool[:, srcs])
+    NB = pool.shape[1]
+    vals = jnp.take(pool, jnp.minimum(srcs, NB - 1), axis=1)
+    return pool.at[:, dsts].set(vals, mode="drop")
 
 
 def gather_prefill_into_pool(pool_layer, k_seq, block_table, seq_len: int,

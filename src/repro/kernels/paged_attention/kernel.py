@@ -133,6 +133,60 @@ def paged_attention_pallas(q, pool_k, pool_v, block_list, block_req,
     )(block_list, block_req, block_pos, seq_lens, q, pool_k, pool_v)
 
 
+def _chunked_flash_update(q_ref, k_blk, v_blk, o_ref, acc_ref, m_ref, l_ref,
+                          valid, *, num_kv: int, sm_scale: float):
+    """One online-softmax update of a query chunk against one KV block tile.
+
+    ``k_blk``/``v_blk`` are the (bs, KV, hd) tile VALUES for this BlockList
+    entry — loaded either by the BlockSpec pipeline (``_chunked_kernel``) or
+    from the manual multi-buffered DMA ring (``_chunked_kernel_prefetch``).
+    Shared so the two DMA strategies cannot drift numerically.
+    """
+    TQ, H, hd = q_ref.shape
+    G = H // num_kv
+    for kv in range(num_kv):                       # static small loop
+        q = q_ref[:, kv * G:(kv + 1) * G, :]       # (TQ, G, hd)
+        k = k_blk[:, kv, :]                        # (bs, hd)
+        v = v_blk[:, kv, :]
+        s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                           # (TQ, G, bs)
+        s = jnp.where(valid[:, None, :], s, NEG_INF)
+        m_prev = m_ref[:, kv * G:(kv + 1) * G]     # (TQ, G)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, :, None])
+        p = jnp.where(valid[:, None, :], p, 0.0)
+        l_new = l_ref[:, kv * G:(kv + 1) * G] * corr + p.sum(axis=-1)
+        pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                 (((2,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[:, kv * G:(kv + 1) * G, :] = (
+            acc_ref[:, kv * G:(kv + 1) * G, :] * corr[:, :, None] + pv)
+        m_ref[:, kv * G:(kv + 1) * G] = m_new
+        l_ref[:, kv * G:(kv + 1) * G] = l_new
+
+    # Rewrite the running normalized output; the last BlockList entry
+    # leaves the final value for this query chunk.
+    l = jnp.maximum(l_ref[...], 1e-30)             # (TQ, H)
+    o_ref[...] = (acc_ref[...] / l[:, :, None]).astype(o_ref.dtype)
+
+
+def _chunked_valid_mask(block_req, block_pos, kv_lens, treq_ref, tpos_ref,
+                        t, *, bs: int, num_reqs: int):
+    """(TQ, bs) ownership+causality+length mask for BlockList entry ``t``."""
+    req = block_req[t]
+    treq = treq_ref[:, 0]                          # (TQ,)
+    tpos = tpos_ref[:, 0]
+    key_pos = block_pos[t] * bs + jax.lax.broadcasted_iota(
+        jnp.int32, (1, bs), 1)[0]                  # (bs,)
+    kvl = kv_lens[jnp.minimum(req, num_reqs - 1)]
+    lane_ok = (treq == req) & (treq < num_reqs)    # (TQ,)
+    return (lane_ok[:, None]
+            & (key_pos[None, :] <= tpos[:, None])   # causal
+            & (key_pos[None, :] < kvl))             # (TQ, bs)
+
+
 def _chunked_kernel(
     # scalar-prefetched
     block_list, block_req, block_pos, kv_lens,
@@ -153,8 +207,7 @@ def _chunked_kernel(
     by the mask, exactly as in ``paged_attention_chunked`` (the jnp ref).
     """
     t = pl.program_id(1)
-    req = block_req[t]
-    is_pad = req >= num_reqs
+    is_pad = block_req[t] >= num_reqs
 
     @pl.when(t == 0)
     def _init():
@@ -166,49 +219,81 @@ def _chunked_kernel(
 
     @pl.when(jnp.logical_not(is_pad))
     def _step():
-        TQ, H, hd = q_ref.shape
-        G = H // num_kv
-        treq = treq_ref[:, 0]                          # (TQ,)
-        tpos = tpos_ref[:, 0]
-        key_pos = block_pos[t] * bs + jax.lax.broadcasted_iota(
-            jnp.int32, (1, bs), 1)[0]                  # (bs,)
-        kvl = kv_lens[jnp.minimum(req, num_reqs - 1)]
-        lane_ok = (treq == req) & (treq < num_reqs)    # (TQ,)
-        valid = (lane_ok[:, None]
-                 & (key_pos[None, :] <= tpos[:, None])  # causal
-                 & (key_pos[None, :] < kvl))            # (TQ, bs)
+        valid = _chunked_valid_mask(block_req, block_pos, kv_lens, treq_ref,
+                                    tpos_ref, t, bs=bs, num_reqs=num_reqs)
+        _chunked_flash_update(q_ref, k_ref[0], v_ref[0], o_ref, acc_ref,
+                              m_ref, l_ref, valid, num_kv=num_kv,
+                              sm_scale=sm_scale)
 
-        for kv in range(num_kv):                       # static small loop
-            q = q_ref[:, kv * G:(kv + 1) * G, :]       # (TQ, G, hd)
-            k = k_ref[0, :, kv, :]                     # (bs, hd)
-            v = v_ref[0, :, kv, :]
-            s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
-                                    preferred_element_type=jnp.float32)
-            s = s * sm_scale                           # (TQ, G, bs)
-            s = jnp.where(valid[:, None, :], s, NEG_INF)
-            m_prev = m_ref[:, kv * G:(kv + 1) * G]     # (TQ, G)
-            m_new = jnp.maximum(m_prev, s.max(axis=-1))
-            corr = jnp.exp(m_prev - m_new)
-            p = jnp.exp(s - m_new[:, :, None])
-            p = jnp.where(valid[:, None, :], p, 0.0)
-            l_new = l_ref[:, kv * G:(kv + 1) * G] * corr + p.sum(axis=-1)
-            pv = jax.lax.dot_general(p.astype(v.dtype), v,
-                                     (((2,), (0,)), ((), ())),
-                                     preferred_element_type=jnp.float32)
-            acc_ref[:, kv * G:(kv + 1) * G, :] = (
-                acc_ref[:, kv * G:(kv + 1) * G, :] * corr[:, :, None] + pv)
-            m_ref[:, kv * G:(kv + 1) * G] = m_new
-            l_ref[:, kv * G:(kv + 1) * G] = l_new
 
-        # Rewrite the running normalized output; the last BlockList entry
-        # leaves the final value for this query chunk.
-        l = jnp.maximum(l_ref[...], 1e-30)             # (TQ, H)
-        o_ref[...] = (acc_ref[...] / l[:, :, None]).astype(o_ref.dtype)
+def _chunked_kernel_prefetch(
+    # scalar-prefetched
+    block_list, block_req, block_pos, kv_lens,
+    # blocked inputs (pools stay in HBM/ANY — DMA'd manually below)
+    q_ref, k_hbm, v_hbm, treq_ref, tpos_ref,
+    # output
+    o_ref,
+    # scratch
+    acc_ref, m_ref, l_ref, k_buf, v_buf, k_sem, v_sem,
+    *, bs: int, num_kv: int, num_reqs: int, sm_scale: float, depth: int,
+    num_blocks: int,
+):
+    """Multi-buffered variant: the KV-page HBM→VMEM DMA runs ``depth`` deep.
+
+    Instead of letting the BlockSpec pipeline fetch one (bs, KV, hd) page
+    per grid step, the pools stay in HBM (``memory_space=ANY``) and the
+    kernel drives its own DMA ring: VMEM scratch holds ``depth`` page slots
+    per pool, and at BlockList entry ``t`` the page for entry
+    ``t + depth - 1`` is *started* before the page for ``t`` is *waited* —
+    so up to ``depth - 1`` page fetches are in flight behind the flash
+    inner loop.  Entry 0 of every query chunk warm-starts the first
+    ``depth - 1`` pages.  Every started copy is waited exactly once
+    (pad entries included — they fetch a real page and skip only the
+    compute), keeping the per-slot DMA semaphores balanced across the grid.
+    """
+    t = pl.program_id(1)
+    Tb = pl.num_programs(1)
+    is_pad = block_req[t] >= num_reqs
+
+    def start(e):
+        slot = jax.lax.rem(e, depth)
+        blk = jnp.minimum(block_list[e], num_blocks - 1)
+        pltpu.make_async_copy(k_hbm.at[blk], k_buf.at[slot],
+                              k_sem.at[slot]).start()
+        pltpu.make_async_copy(v_hbm.at[blk], v_buf.at[slot],
+                              v_sem.at[slot]).start()
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+        for d in range(min(depth - 1, Tb)):       # warm-up: fill the ring
+            start(jnp.int32(d))
+
+    @pl.when(t + depth - 1 < Tb)                  # steady state: run ahead
+    def _ahead():
+        start(t + depth - 1)
+
+    slot = jax.lax.rem(t, depth)
+    blk = jnp.minimum(block_list[t], num_blocks - 1)
+    pltpu.make_async_copy(k_hbm.at[blk], k_buf.at[slot], k_sem.at[slot]).wait()
+    pltpu.make_async_copy(v_hbm.at[blk], v_buf.at[slot], v_sem.at[slot]).wait()
+
+    @pl.when(jnp.logical_not(is_pad))
+    def _step():
+        valid = _chunked_valid_mask(block_req, block_pos, kv_lens, treq_ref,
+                                    tpos_ref, t, bs=bs, num_reqs=num_reqs)
+        _chunked_flash_update(q_ref, k_buf[slot], v_buf[slot], o_ref, acc_ref,
+                              m_ref, l_ref, valid, num_kv=num_kv,
+                              sm_scale=sm_scale)
 
 
 def paged_attention_chunked_pallas(q, pool_k, pool_v, block_list, block_req,
                                    block_pos, kv_lens, token_req, token_pos,
                                    *, sm_scale=None, q_chunk: int = 16,
+                                   prefetch_depth: int = 0,
                                    interpret: bool = True):
     """Chunked-prefill PagedAttention with a query-chunk grid dimension.
 
@@ -219,12 +304,23 @@ def paged_attention_chunked_pallas(q, pool_k, pool_v, block_list, block_req,
     here the grid grows a leading query-chunk dimension and the scalar-
     prefetched BlockList still drives exact-tile DMA — zero-pad pool blocks
     never leave HBM.
+
+    ``prefetch_depth`` selects the KV-page DMA strategy.  0 (and 1) keep the
+    BlockSpec pipeline: Pallas fetches one page per grid step, overlapping at
+    most one fetch with compute.  depth >= 2 switches to the manual
+    multi-buffered ring in ``_chunked_kernel_prefetch``: the pools stay in
+    HBM and up to ``depth - 1`` page DMAs run ahead of the flash loop, at the
+    cost of ``2 * depth`` (bs, KV, hd) page slots of VMEM scratch.  Both
+    strategies share the flash update, so results are identical.
     """
     T, H, hd = q.shape
     NB, BS, KV, _ = pool_k.shape
     B = kv_lens.shape[0]
     Tb = block_list.shape[0]
     scale = float(sm_scale if sm_scale is not None else hd ** -0.5)
+    depth = int(prefetch_depth)
+    if depth < 0:
+        raise ValueError(f"prefetch_depth must be >= 0, got {depth}")
 
     tq = max(min(q_chunk, T), 1)
     pad = (-T) % tq
@@ -237,9 +333,6 @@ def paged_attention_chunked_pallas(q, pool_k, pool_v, block_list, block_req,
     treq = token_req.reshape(Tp, 1).astype(jnp.int32)
     tpos = token_pos.reshape(Tp, 1).astype(jnp.int32)
 
-    kernel = functools.partial(_chunked_kernel, bs=BS, num_kv=KV, num_reqs=B,
-                               sm_scale=scale)
-
     # index maps take (grid ids, *prefetched scalars)
     def q_map(i, t, bl, br, bp, kvl):
         return (i, 0, 0)
@@ -250,29 +343,54 @@ def paged_attention_chunked_pallas(q, pool_k, pool_v, block_list, block_req,
     def lane_map(i, t, bl, br, bp, kvl):
         return (i, 0)
 
+    if depth >= 2:
+        kernel = functools.partial(
+            _chunked_kernel_prefetch, bs=BS, num_kv=KV, num_reqs=B,
+            sm_scale=scale, depth=depth, num_blocks=NB)
+        # Pools stay in HBM; the kernel rings its own page DMAs.
+        kv_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        scratch = [
+            pltpu.VMEM((tq, H, hd), jnp.float32),
+            pltpu.VMEM((tq, H), jnp.float32),
+            pltpu.VMEM((tq, H), jnp.float32),
+            pltpu.VMEM((depth, BS, KV, hd), pool_k.dtype),
+            pltpu.VMEM((depth, BS, KV, hd), pool_v.dtype),
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.SemaphoreType.DMA((depth,)),
+        ]
+        # The DMA ring state spans grid steps of the q-chunk dim too (warm-up
+        # reruns per chunk), so neither dimension may be parallelized.
+        semantics = ("arbitrary", "arbitrary")
+    else:
+        kernel = functools.partial(_chunked_kernel, bs=BS, num_kv=KV,
+                                   num_reqs=B, sm_scale=scale)
+        kv_spec = pl.BlockSpec((1, BS, KV, hd), kv_map)
+        scratch = [
+            pltpu.VMEM((tq, H, hd), jnp.float32),
+            pltpu.VMEM((tq, H), jnp.float32),
+            pltpu.VMEM((tq, H), jnp.float32),
+        ]
+        semantics = ("parallel", "arbitrary")
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(Tp // tq, Tb),
         in_specs=[
             pl.BlockSpec((tq, H, hd), q_map),
-            pl.BlockSpec((1, BS, KV, hd), kv_map),
-            pl.BlockSpec((1, BS, KV, hd), kv_map),
+            kv_spec,
+            kv_spec,
             pl.BlockSpec((tq, 1), lane_map),
             pl.BlockSpec((tq, 1), lane_map),
         ],
         out_specs=pl.BlockSpec((tq, H, hd), q_map),
-        scratch_shapes=[
-            pltpu.VMEM((tq, H, hd), jnp.float32),
-            pltpu.VMEM((tq, H), jnp.float32),
-            pltpu.VMEM((tq, H), jnp.float32),
-        ],
+        scratch_shapes=scratch,
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Tp, H, hd), q.dtype),
         compiler_params=compat.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+            dimension_semantics=semantics),
         interpret=interpret,
     )(block_list, block_req, block_pos, kv_lens, q, pool_k, pool_v,
       treq, tpos)

@@ -73,7 +73,7 @@ def _example_chunked():
     token_req = jnp.asarray([0, 1, 1, B], jnp.int32)
     token_pos = jnp.asarray([5, 1, 2, 0], jnp.int32)
     return (q, pk, pv, bl, br, bp, kv_lens, token_req, token_pos), \
-        {"q_chunk": 2}
+        {"q_chunk": 2, "prefetch_depth": 2}
 
 
 _DECODE = dispatch.op(
@@ -81,7 +81,11 @@ _DECODE = dispatch.op(
     doc="BlockList PagedAttention, decode shape: one query token per request")
 _CHUNKED = dispatch.op(
     "paged_attention_chunked", example=_example_chunked,
-    doc="Fused chunked-prefill + decode PagedAttention over flat token lanes")
+    doc="Fused chunked-prefill + decode PagedAttention over flat token lanes",
+    # Cross-backend knobs: query-chunk grid tile and the KV-page DMA ring
+    # depth (0/1 = BlockSpec pipeline, >=2 = multi-buffered manual DMA in the
+    # Pallas kernel; jnp backends ignore it). Swept by benchmarks/saturation.
+    tunables={"q_chunk": 16, "prefetch_depth": 0})
 
 
 @jax.jit
@@ -113,10 +117,11 @@ def _decode_interpret(q, pool_k, pool_v, block_list, block_req, block_pos,
                                   block_pos, seq_lens, interpret=True)
 
 
-@partial(jax.jit, static_argnames=("q_chunk",))
+@partial(jax.jit, static_argnames=("q_chunk", "prefetch_depth"))
 def _chunked_ref(q, pool_k, pool_v, block_list, block_req, block_pos,
-                 kv_lens, token_req, token_pos, *, q_chunk: int = 16):
-    del q_chunk                      # tiling is a kernel-backend concern
+                 kv_lens, token_req, token_pos, *, q_chunk: int = 16,
+                 prefetch_depth: int = 0):
+    del q_chunk, prefetch_depth      # DMA strategy is a kernel-backend concern
     return _chunked_jnp(q, pool_k, pool_v, block_list, block_req, block_pos,
                         kv_lens, token_req, token_pos)
 
@@ -126,21 +131,25 @@ _CHUNKED.register("xla")(_chunked_ref)
 
 
 @_CHUNKED.register("pallas")
-@partial(jax.jit, static_argnames=("q_chunk",))
+@partial(jax.jit, static_argnames=("q_chunk", "prefetch_depth"))
 def _chunked_pallas(q, pool_k, pool_v, block_list, block_req, block_pos,
-                    kv_lens, token_req, token_pos, *, q_chunk: int = 16):
+                    kv_lens, token_req, token_pos, *, q_chunk: int = 16,
+                    prefetch_depth: int = 0):
     return paged_attention_chunked_pallas(
         q, pool_k, pool_v, block_list, block_req, block_pos, kv_lens,
-        token_req, token_pos, q_chunk=q_chunk, interpret=False)
+        token_req, token_pos, q_chunk=q_chunk,
+        prefetch_depth=prefetch_depth, interpret=False)
 
 
 @_CHUNKED.register("pallas_interpret")
-@partial(jax.jit, static_argnames=("q_chunk",))
+@partial(jax.jit, static_argnames=("q_chunk", "prefetch_depth"))
 def _chunked_interpret(q, pool_k, pool_v, block_list, block_req, block_pos,
-                       kv_lens, token_req, token_pos, *, q_chunk: int = 16):
+                       kv_lens, token_req, token_pos, *, q_chunk: int = 16,
+                       prefetch_depth: int = 0):
     return paged_attention_chunked_pallas(
         q, pool_k, pool_v, block_list, block_req, block_pos, kv_lens,
-        token_req, token_pos, q_chunk=q_chunk, interpret=True)
+        token_req, token_pos, q_chunk=q_chunk,
+        prefetch_depth=prefetch_depth, interpret=True)
 
 
 @lru_cache(maxsize=None)
@@ -163,7 +172,8 @@ def _sharded_chunked_fn(ndev: int):
 
 @_CHUNKED.register("sharded")
 def _chunked_sharded(q, pool_k, pool_v, block_list, block_req, block_pos,
-                     kv_lens, token_req, token_pos, *, q_chunk: int = 16):
+                     kv_lens, token_req, token_pos, *, q_chunk: int = 16,
+                     prefetch_depth: int = 0):
     """Family-signature wrapper around the shard_map chunked combine.
 
     Splits the flat BlockList contiguously across a 1-D mesh over every
@@ -173,7 +183,7 @@ def _chunked_sharded(q, pool_k, pool_v, block_list, block_req, block_pos,
     translation) but reduces to the same per-rank kernel; this form is what
     the registry-enumerated parity suite and standalone callers exercise.
     """
-    del q_chunk                      # tiling is a kernel-backend concern
+    del q_chunk, prefetch_depth      # DMA strategy is a kernel-backend concern
     ndev = len(jax.devices())
     B = kv_lens.shape[0]
     Tb = block_list.shape[0]

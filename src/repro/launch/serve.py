@@ -48,6 +48,15 @@ def main() -> None:
                         "engine, > 1 builds a mesh via repro.launch.mesh "
                         "and runs the sharded fused step (greedy streams "
                         "stay bit-identical)")
+    p.add_argument("--overlap", default="off", choices=("on", "off"),
+                   help="async overlapped engine loop "
+                        "(docs/async_engine.md): step N+1's host work runs "
+                        "while step N is on device; greedy streams stay "
+                        "bit-identical")
+    p.add_argument("--prefetch-depth", type=int, default=0,
+                   help="KV-page DMA ring depth for the Pallas chunked "
+                        "kernel (0/1 = BlockSpec pipeline, >= 2 = "
+                        "multi-buffered manual DMA; ignored by jnp backends)")
     args = p.parse_args()
 
     cfg = get_config(args.arch)
@@ -59,7 +68,9 @@ def main() -> None:
                         max_batch=args.requests, backend=args.backend,
                         admission=args.admission, preemption=args.preemption,
                         eviction=args.eviction, spec=args.spec,
-                        spec_k=args.spec_k, devices=args.devices)
+                        spec_k=args.spec_k, devices=args.devices,
+                        overlap=args.overlap == "on",
+                        prefetch_depth=args.prefetch_depth)
     total_blocks = args.requests * (
         -(-(args.prompt_len + args.max_new) // args.block_size) + 1)
     # ServeConfig.devices > 1 makes the engine build the serving mesh itself
@@ -81,7 +92,8 @@ def main() -> None:
     print(f"served {m['finished']} requests, {m['output_tokens']} tokens "
           f"in {dt:.2f}s ({m['output_tokens']/dt:.1f} tok/s) "
           f"[backend={m['backend']} devices={m['devices']} "
-          f"mesh={m['mesh_shape']}]")
+          f"mesh={m['mesh_shape']} overlap={m['overlap']} "
+          f"prefetch_depth={m['prefetch_depth']}]")
     print(f"TTFT p50 {m['p50_ttft_s']*1e3:.1f} / p99 {m['p99_ttft_s']*1e3:.1f} ms  "
           f"TPOT p50 {m['p50_tpot_s']*1e3:.1f} / p99 {m['p99_tpot_s']*1e3:.1f} ms")
     print(f"preemptions {m['preemptions']}  "

@@ -320,6 +320,7 @@ class TransformerLM:
 
     def decode_tokens_paged(self, params, pools, lists, tokens, *,
                             attn_backend: Optional[str] = None,
+                            prefetch_depth: int = 0,
                             mesh=None, axis: Optional[str] = None):
         """Fused chunked-prefill + decode over flat token lanes.
 
@@ -344,6 +345,10 @@ class TransformerLM:
                           carries its last committed token plus K drafted
                           tokens, and needs a logit row per lane to judge
                           every draft in this ONE forward
+
+        ``prefetch_depth`` is forwarded to the chunked-attention op: >= 2
+        enables the Pallas kernel's multi-buffered KV-page DMA ring (jnp
+        backends ignore it).
 
         ``mesh``/``axis`` set ⇒ the mesh-native serving path: the pool is
         sequence-sharded on its block dimension over ``axis`` and each
@@ -378,7 +383,7 @@ class TransformerLM:
                     q[:, 0], pk, pv, lists["block_list"],
                     lists["block_req"], lists["block_pos"],
                     lists["kv_lens"], lists["token_req"], token_pos,
-                    backend=attn_backend)
+                    backend=attn_backend, prefetch_depth=prefetch_depth)
             x = x + jnp.einsum("be,ed->bd", ctx.reshape(x.shape[0], -1),
                                lp["attn"]["wo"])
             h = rmsnorm(lp["ln2"], x[:, None], cfg.norm_eps)

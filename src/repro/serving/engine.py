@@ -79,6 +79,52 @@ __all__ = ["Request", "RequestState", "SamplingParams", "ServingEngine"]
 _bucket = request_lib.bucket_pow2      # lane/slot counts -> power-of-two
 
 
+class _PendingStep:
+    """One dispatched-but-unresolved fused step (docs/async_engine.md).
+
+    Built by ``ServingEngine._build``: the plan was rendered, every lane's
+    KV slots were reserved AND provisionally committed, each decode-ish
+    action appended a placeholder output token, and the fused program was
+    dispatched — ``nxt_dev`` is its device-side future.  ``_resolve`` later
+    blocks on the future and reconciles: placeholders become real tokens,
+    EOS / max_new_tokens finishes fire, and finishes cancel the request's
+    in-flight action in the NEXT pending step (if one was already built
+    against the provisional state).
+    """
+
+    __slots__ = ("actions", "slots", "chain", "nxt_dev", "cancelled",
+                 "phases", "num_tokens", "t_dispatch")
+
+    def __init__(self, *, actions, slots, chain, nxt_dev, phases,
+                 num_tokens, t_dispatch):
+        # actions: (kind, req, n, pos0, out_idx) — kind "decode"/"prefill";
+        # out_idx indexes the placeholder in req.output (None: chunk-only
+        # prefill, nothing to resolve).  slots: req_id -> slot snapshot at
+        # build time (slot compaction may move requests before resolve).
+        self.actions = actions
+        self.slots = slots
+        self.chain = chain
+        self.nxt_dev = nxt_dev
+        self.cancelled: set = set()
+        self.phases = phases
+        self.num_tokens = num_tokens
+        self.t_dispatch = t_dispatch
+
+    def cancel(self, req) -> None:
+        """A resolve finished ``req`` while its next step is in flight:
+        drop the in-flight action (allocator state is already freed) and
+        pop the provisional placeholder so the output stream ends at the
+        real final token."""
+        rid = req.req_id
+        for kind, r, _n, _pos0, out_idx in self.actions:
+            if r.req_id == rid:
+                self.cancelled.add(rid)
+                if out_idx is not None:
+                    assert out_idx == len(req.output) - 1, (rid, out_idx)
+                    req.output.pop()
+                return
+
+
 class ServingEngine:
     def __init__(self, model, params, cfg: ModelConfig, serve: ServeConfig,
                  *, num_blocks: Optional[int] = None, eos_id: int = -1,
@@ -167,17 +213,37 @@ class ServingEngine:
         self._metrics = EngineMetrics(backend=self.attn_backend)
         self._key = jax.random.PRNGKey(seed)
         self._step_count = 0
+        # Async overlapped loop (docs/async_engine.md): with overlap on,
+        # step N+1's propose/schedule/render runs on host while step N's
+        # fused program is still on device; ``_pending`` holds step N's
+        # un-resolved record, ``_chain`` maps req_id -> step-N slot for
+        # requests whose last output token is still a device-side future
+        # (the fused program substitutes it via ``tok_src``/``nxt_prev``).
+        self.overlap = bool(serve.overlap)
+        self.prefetch_depth = int(serve.prefetch_depth)
+        self._pending: Optional[_PendingStep] = None
+        self._chain: Dict[int, int] = {}
+        self._copy_fn = jax.jit(copy_pool_blocks)
+        self._dummy_prev = jnp.zeros((1,), jnp.int32)
         # Inside the sharded program the combine is called directly under
         # shard_map (the registry pinned the name above for attribution);
         # the single-device program threads the resolved name through the
         # chunked op family as before.
         attn_backend = None if mesh is not None else self.attn_backend
         mesh_axis = self.mesh_axis if mesh is not None else None
+        prefetch_depth = self.prefetch_depth
 
-        def fused(params, pools, lists, tokens, key, temps, top_ks, top_ps):
+        def fused(params, pools, lists, tokens, tok_src, nxt_prev, key,
+                  temps, top_ks, top_ps):
+            # Device-token chaining: lanes with tok_src >= 0 take their
+            # input token from the PREVIOUS step's sampled outputs (still
+            # device-resident under overlap) instead of the host-rendered
+            # placeholder — the decode input never round-trips to host.
+            live = jnp.clip(tok_src, 0, nxt_prev.shape[0] - 1)
+            tokens = jnp.where(tok_src >= 0, nxt_prev[live], tokens)
             logits, pools = model.decode_tokens_paged(
                 params, pools, lists, tokens, attn_backend=attn_backend,
-                mesh=mesh, axis=mesh_axis)
+                prefetch_depth=prefetch_depth, mesh=mesh, axis=mesh_axis)
             nxt = sampling_lib.sample_batched(key, logits, temps, top_ks,
                                               top_ps)
             return nxt, pools
@@ -216,7 +282,7 @@ class ServingEngine:
                            top_ps, drafts, draft_lens):
                 logits, pools = model.decode_tokens_paged(
                     params, pools, lists, tokens, attn_backend=attn_backend,
-                    mesh=mesh, axis=mesh_axis)
+                    prefetch_depth=prefetch_depth, mesh=mesh, axis=mesh_axis)
                 out, acc = spec_lib.verify_batched(
                     key, logits, drafts, draft_lens, temps, top_ks, top_ps)
                 return out, acc, pools
@@ -265,6 +331,10 @@ class ServingEngine:
         spec_step = bool(plan.spec)
         R = self.spec_k + 1 if spec_step else 1         # logit rows per slot
         tokens = np.zeros((T,), np.int32)
+        # tok_src[lane] >= 0: the lane's input token is the PREVIOUS step's
+        # sampled output at that slot, still in flight on device — the fused
+        # program substitutes it (overlap chaining); -1 = host-known token.
+        tok_src = np.full((T,), -1, np.int32)
         token_req = np.full((T,), Bs, np.int32)         # Bs == padding lane
         token_pos = np.zeros((T,), np.int32)
         slots = np.full((T, 2), (self.max_total, 0), np.int32)  # dropped write
@@ -284,7 +354,15 @@ class ServingEngine:
             draft = plan.spec.get(rid)
             n = 1 if draft is None else 1 + len(draft)
             ss = alloc.reserve_tokens(rid, n)
-            tokens[lane] = req.output[-1]
+            src = self._chain.get(rid, -1)
+            if src >= 0:
+                # output[-1] is an unresolved placeholder — chain it from
+                # the pending step's device outputs. Drafted steps resolve
+                # the pipeline first, so spec lanes never chain.
+                assert draft is None, rid
+                tok_src[lane] = src
+            else:
+                tokens[lane] = req.output[-1]
             if n > 1:                           # drafted lanes ride behind
                 tokens[lane + 1:lane + n] = draft
                 draft_tokens[req.slot, :n - 1] = draft
@@ -360,7 +438,8 @@ class ServingEngine:
                        jnp.asarray(top_ps))
         spec_args = ((jnp.asarray(draft_tokens), jnp.asarray(draft_lens))
                      if spec_step else None)
-        return lists, jnp.asarray(tokens), sample_args, spec_args, committed
+        return (lists, jnp.asarray(tokens), jnp.asarray(tok_src),
+                sample_args, spec_args, committed)
 
     # -------------------------------------------------------------- main loop
     def _propose(self) -> Dict[int, np.ndarray]:
@@ -378,7 +457,8 @@ class ServingEngine:
         pend = [(req, min(self.spec_k,
                           req.max_new_tokens - len(req.output) - 1))
                 for req in self.scheduler.running.values()
-                if req.state is RequestState.DECODING]
+                if req.state is RequestState.DECODING
+                and len(req.output) < req.max_new_tokens]
         if not pend:
             return {}
         raw = self.proposer.propose_batch(pend)
@@ -395,40 +475,216 @@ class ServingEngine:
     def step(self) -> int:
         """One engine iteration: [propose] + schedule + ONE fused
         chunked-prefill/decode[/verify] program + host-side lifecycle
-        updates. Returns #tokens processed."""
+        updates. Returns #tokens processed.
+
+        With ``ServeConfig.overlap`` the build half (propose / schedule /
+        render / dispatch) runs against the PREVIOUS step's provisional
+        state while that step is still executing on device; its resolve
+        (commit reconciliation) happens after this step has been dispatched.
+        Overlap off dispatches and resolves in the same call — identical
+        behaviour to the serial loop. Greedy output streams are
+        bit-identical either way (docs/async_engine.md).
+        """
         t0 = time.perf_counter()
+        if self.proposer is not None and self._pending is not None:
+            # Proposers read the tail of req.output; under overlap its last
+            # entry may still be an unresolved placeholder, which would
+            # silently starve draft matching. Resolve first — drafted steps
+            # are synchronization barriers anyway, so a proposer-active
+            # engine sees exactly the serial engine's state at propose time.
+            pend, self._pending = self._pending, None
+            self._resolve(pend, None)
+            if not self.scheduler.has_work():
+                return 0        # the resolve finished the last requests —
+                                # this iteration was a drain, not an idle tick
         drafts = self._propose() if self.proposer is not None else {}
         t1 = time.perf_counter()
         plan = self.scheduler.schedule(spec_drafts=drafts)
         if plan.num_tokens == 0:
+            if self._pending is not None:      # drain the in-flight step
+                pend, self._pending = self._pending, None
+                pend.phases["propose"] += t1 - t0
+                self._resolve(pend, None)
+                return 0
+            # Idle iteration: nothing scheduled, nothing in flight — record
+            # the wall time instead of letting it vanish from phase_s.
+            self._metrics.record_step(
+                num_tokens=0, emitted_tokens=0, idle=True,
+                phases={"propose": t1 - t0,
+                        "idle": time.perf_counter() - t1})
             return 0
-        lists, tokens, sample_args, spec_args, committed = self._render(plan)
-        # apply copy-on-write block copies before the step touches the pool
+        if plan.spec:
+            # Drafted steps are synchronization barriers: accepted drafts
+            # commit KV at positions later lanes depend on and rejection
+            # rolls reserved blocks back — never left in flight. Resolve
+            # the pipeline first so every token the verify compares against
+            # is concrete, then drop plan entries for requests that
+            # finished at that resolve.
+            if self._pending is not None:
+                pend, self._pending = self._pending, None
+                self._resolve(pend, None)
+                self._filter_finished(plan)
+                if plan.num_tokens == 0:
+                    return 0
+            return self._step_sync(plan, t0, t1)
+        pend_new = self._build(plan, t0, t1)
+        prev, self._pending = self._pending, None
+        if prev is not None:
+            self._resolve(prev, pend_new)
+        if self.overlap:
+            self._pending = pend_new
+        else:
+            self._resolve(pend_new, None)
+        return plan.num_tokens
+
+    # ---------------------------------------------------- overlapped pipeline
+    def _drain_cow(self) -> None:
+        """Apply pending copy-on-write block copies to the device pools.
+
+        Copy counts are bucketed to powers of two with out-of-bounds padding
+        (src = dst = pool size — the clipped gather reads a throwaway block,
+        the ``mode="drop"`` scatter discards it), so a varying number of CoW
+        copies per step reuses O(log pool) compiled programs instead of
+        retracing ``copy_pool_blocks`` on every new count.
+        """
         copies = self.alloc.drain_copies()
-        if copies:
-            srcs = jnp.asarray([s for s, _ in copies], jnp.int32)
-            dsts = jnp.asarray([d for _, d in copies], jnp.int32)
-            self.pools = {k: copy_pool_blocks(p, srcs, dsts)
-                          for k, p in self.pools.items()}
+        if not copies:
+            return
+        n = _bucket(len(copies), lo=8)
+        srcs = np.full((n,), self.max_total, np.int32)
+        dsts = np.full((n,), self.max_total, np.int32)
+        srcs[:len(copies)] = [s for s, _ in copies]
+        dsts[:len(copies)] = [d for _, d in copies]
+        srcs, dsts = jnp.asarray(srcs), jnp.asarray(dsts)
+        self.pools = {k: self._copy_fn(p, srcs, dsts)
+                      for k, p in self.pools.items()}
+
+    def _build(self, plan: StepPlan, t0: float, t1: float) -> "_PendingStep":
+        """Render + dispatch a draftless plan and commit it provisionally.
+
+        Every lane's KV slots are reserved AND committed here (one token per
+        decode lane, the whole chunk per prefill lane) so the next schedule
+        sees post-step sequence lengths; each decode-ish action appends a
+        placeholder output token (the sampled value is still a device
+        future) recorded in ``_chain`` for device-token chaining.  All
+        host bookkeeping whose content is already known happens now —
+        prefill chunk accounting, prompt prefix registration, the
+        PREFILLING -> DECODING transition; everything value-dependent
+        (EOS, TTFT stamps, generated-block hashing) waits for ``_resolve``.
+        """
+        lists, tokens, tok_src, sample_args, spec_args, committed = (
+            self._render(plan))
+        assert spec_args is None, "drafted plans go through _step_sync"
+        self._drain_cow()
+        self._step_count += 1
+        key = jax.random.fold_in(self._key, self._step_count)
+        nxt_prev = (self._pending.nxt_dev if self._pending is not None
+                    else self._dummy_prev)
+        t2 = time.perf_counter()
+        nxt_dev, self.pools = self._step_fn(
+            self.params, self.pools, lists, tokens, tok_src, nxt_prev, key,
+            *sample_args)
+        actions = []
+        chain: Dict[int, int] = {}
+        for req, n, pos0 in committed:
+            rid = req.req_id
+            self.alloc.commit_tokens(rid, n)
+            if req.state is RequestState.DECODING:
+                req.output.append(0)            # placeholder: value in flight
+                chain[rid] = req.slot
+                actions.append(("decode", req, n, pos0, len(req.output) - 1))
+            else:                               # prefill chunk
+                start = req.prefill_pos
+                req.prefill_pos += n
+                self.alloc.register_prefix(rid, req.active_prompt,
+                                           req.prefill_pos, start=start)
+                out_idx = None
+                if req.prefill_remaining == 0:  # final chunk samples a token
+                    req.to_state(RequestState.DECODING)
+                    req.output.append(0)
+                    chain[rid] = req.slot
+                    out_idx = len(req.output) - 1
+                actions.append(("prefill", req, n, pos0, out_idx))
+        self._chain = chain
+        if self.proposer is not None:
+            self._spec_counters["steps"] += 1
+        return _PendingStep(
+            actions=actions,
+            slots={req.req_id: req.slot for req, _, _ in committed},
+            chain=chain, nxt_dev=nxt_dev,
+            phases={"propose": t1 - t0,
+                    "schedule_render": t2 - t1},
+            num_tokens=plan.num_tokens, t_dispatch=t2)
+
+    def _resolve(self, pend: "_PendingStep",
+                 next_pending: Optional["_PendingStep"]) -> None:
+        """Block on a pending step's device future and reconcile.
+
+        Placeholders become real tokens, EOS / max-token finishes fire
+        (cancelling the request's in-flight action in ``next_pending`` —
+        the allocator's free is the reconciliation point), preempted-
+        mid-flight requests keep their resolved token for recompute-resume,
+        and the step's metrics are recorded with the device phase spanning
+        dispatch -> future resolved.
+        """
+        nxt = np.asarray(pend.nxt_dev)          # blocks until step N is done
+        t_done = time.perf_counter()
+        if self._chain is pend.chain:           # overlap off: nothing newer
+            self._chain = {}
+        now = time.time()
+        emitted = 0
+        for kind, req, n, pos0, out_idx in pend.actions:
+            rid = req.req_id
+            if rid in pend.cancelled or out_idx is None:
+                continue        # finished at an earlier resolve / chunk-only
+            tok = int(nxt[pend.slots[rid]])
+            req.output[out_idx] = tok
+            emitted += 1
+            preempted = req.state is RequestState.PREEMPTED
+            if kind == "decode" and not preempted:
+                self._register_generated(req, pos0, new_len=pos0 + n)
+            if kind == "prefill" and req.first_token_at is None:
+                req.first_token_at = now
+            # out_idx + 1 = this request's output length through THIS action
+            # (req.output may already hold the NEXT step's placeholder).
+            if out_idx + 1 >= req.max_new_tokens or tok == self.eos_id:
+                self._finish(req, now, next_pending=next_pending)
+        self._metrics.record_step(
+            num_tokens=pend.num_tokens, emitted_tokens=emitted,
+            phases={**pend.phases, "device": t_done - pend.t_dispatch,
+                    "commit": time.perf_counter() - t_done})
+
+    def _filter_finished(self, plan: StepPlan) -> None:
+        """Drop plan entries whose request finished while the plan was being
+        scheduled against provisional state (resolve ran after schedule)."""
+        plan.decode = [r for r in plan.decode
+                       if r.state is RequestState.DECODING]
+        live = {r.req_id for r in plan.decode}
+        plan.spec = {rid: d for rid, d in plan.spec.items() if rid in live}
+        plan.prefill = [(r, n) for r, n in plan.prefill
+                        if r.state is RequestState.PREFILLING]
+
+    # ------------------------------------------------------ synchronous step
+    def _step_sync(self, plan: StepPlan, t0: float, t1: float) -> int:
+        """The drafted (speculative) step, fully synchronous."""
+        lists, tokens, tok_src, sample_args, spec_args, committed = (
+            self._render(plan))
+        assert spec_args is not None
+        del tok_src                 # pipeline resolved: every token concrete
+        self._drain_cow()
         self._step_count += 1
         key = jax.random.fold_in(self._key, self._step_count)
         t2 = time.perf_counter()
-        if spec_args is not None:               # this step carries drafts
-            out, acc, self.pools = self._spec_step_fn(
-                self.params, self.pools, lists, tokens, key, *sample_args,
-                *spec_args)
-            out, acc = np.asarray(out), np.asarray(acc)
-            nxt = out[:, 0]
-        else:
-            out = acc = None
-            nxt, self.pools = self._step_fn(self.params, self.pools, lists,
-                                            tokens, key, *sample_args)
-            nxt = np.asarray(nxt)
+        out, acc, self.pools = self._spec_step_fn(
+            self.params, self.pools, lists, tokens, key, *sample_args,
+            *spec_args)
+        out, acc = np.asarray(out), np.asarray(acc)
+        nxt = out[:, 0]
         t3 = time.perf_counter()
         now = time.time()
         emitted = 0
         for req, n, _ in committed:
-            if req.state is RequestState.DECODING and acc is not None:
+            if req.state is RequestState.DECODING:
                 # speculative lane: commit the accepted prefix, roll back
                 # the rejected tail's reserved blocks (rewind semantics)
                 a = min(int(acc[req.slot]), n - 1)
@@ -443,30 +699,25 @@ class ServingEngine:
                 self.alloc.commit_tokens(req.req_id, n)
         for req, n, pos0 in committed:
             if req.state is RequestState.DECODING:
-                if acc is None:                         # plain decode lane
-                    self._register_generated(req, pos0)
-                    self._append_token(req, int(nxt[req.slot]), now)
-                    emitted += 1
-                else:                                   # speculative lane
-                    a = min(int(acc[req.slot]), n - 1)
-                    row = out[req.slot]
-                    self._register_generated(req, pos0, accepted=row[:a])
-                    appended = 0
-                    for j in range(a + 1):
-                        self._append_token(req, int(row[j]), now)
-                        appended += 1
-                        if req.state is RequestState.FINISHED:
-                            break               # EOS inside the accepted run
-                    emitted += appended
-                    if n > 1:
-                        # count only DRAFTED lanes, and only tokens that
-                        # actually reached the output stream (an EOS mid-
-                        # prefix drops the tokens behind it) — an undrafted
-                        # lane riding a spec step is a plain decode
-                        self._spec_counters["decode_lanes"] += 1
-                        self._spec_counters["accepted_tokens"] += min(
-                            a, appended)
-                        self._spec_counters["emitted_tokens"] += appended
+                a = min(int(acc[req.slot]), n - 1)
+                row = out[req.slot]
+                self._register_generated(req, pos0, accepted=row[:a])
+                appended = 0
+                for j in range(a + 1):
+                    self._append_token(req, int(row[j]), now)
+                    appended += 1
+                    if req.state is RequestState.FINISHED:
+                        break               # EOS inside the accepted run
+                emitted += appended
+                if n > 1:
+                    # count only DRAFTED lanes, and only tokens that
+                    # actually reached the output stream (an EOS mid-
+                    # prefix drops the tokens behind it) — an undrafted
+                    # lane riding a spec step is a plain decode
+                    self._spec_counters["decode_lanes"] += 1
+                    self._spec_counters["accepted_tokens"] += min(
+                        a, appended)
+                    self._spec_counters["emitted_tokens"] += appended
             else:                                       # prefill chunk
                 start = req.prefill_pos
                 req.prefill_pos += n
@@ -478,12 +729,10 @@ class ServingEngine:
                         req.first_token_at = now
                     self._append_token(req, int(nxt[req.slot]), now)
                     emitted += 1
-        if self.proposer is not None:
-            self._spec_counters["steps"] += 1
-            if plan.spec:
-                self._spec_counters["drafted_steps"] += 1
-                self._spec_counters["proposed_tokens"] += sum(
-                    len(d) for d in plan.spec.values())
+        self._spec_counters["steps"] += 1
+        self._spec_counters["drafted_steps"] += 1
+        self._spec_counters["proposed_tokens"] += sum(
+            len(d) for d in plan.spec.values())
         t4 = time.perf_counter()
         self._metrics.record_step(
             num_tokens=plan.num_tokens, emitted_tokens=emitted,
@@ -492,7 +741,8 @@ class ServingEngine:
         return plan.num_tokens
 
     def _register_generated(self, req: Request, pos0: int,
-                            accepted: Optional[np.ndarray] = None) -> None:
+                            accepted: Optional[np.ndarray] = None,
+                            new_len: Optional[int] = None) -> None:
         """Hash-register full KV blocks produced during decode.
 
         Prompt prefill publishes block hashes as chunks commit; this is the
@@ -501,8 +751,12 @@ class ServingEngine:
         content, so preemption-resume recompute and repeated
         prompt+generation prefixes get cache hits.  ``accepted`` carries
         this step's committed-but-not-yet-appended draft tokens (spec path).
+        ``new_len`` is the post-step sequence length; the overlapped resolve
+        passes it explicitly because by resolve time the allocator may
+        already hold the NEXT step's provisional commits.
         """
-        new_len = self.alloc.seq_len(req.req_id)
+        if new_len is None:
+            new_len = self.alloc.seq_len(req.req_id)
         bs = self.alloc.block_size
         if pos0 // bs == new_len // bs:         # no block filled this step
             return
@@ -516,17 +770,29 @@ class ServingEngine:
         if len(req.output) >= req.max_new_tokens or tok == self.eos_id:
             self._finish(req, now)
 
-    def _finish(self, req: Request, now: float) -> None:
-        self.scheduler.release(req)
+    def _finish(self, req: Request, now: float,
+                next_pending: Optional["_PendingStep"] = None) -> None:
+        if req.state is RequestState.PREEMPTED:
+            # Finished at resolve AFTER being preempted mid-flight: blocks
+            # are already freed; pull it out of the recompute queue.
+            try:
+                self.scheduler.waiting.remove(req)
+            except ValueError:
+                pass
+        else:
+            self.scheduler.release(req)
         req.finish(now)
         self.finished.append(req)
         self._metrics.record_finished(
             ttft=req.ttft, tpot=req.tpot, num_output_tokens=len(req.output),
             arrival=req.arrival, done_at=now)
+        if next_pending is not None:
+            next_pending.cancel(req)
+        self._chain.pop(req.req_id, None)
 
     def run_until_done(self, max_steps: int = 100_000) -> None:
         for _ in range(max_steps):
-            if not self.scheduler.has_work():
+            if not self.scheduler.has_work() and self._pending is None:
                 return
             self.step()
         raise RuntimeError("serving did not converge")
@@ -545,6 +811,10 @@ class ServingEngine:
             "mesh_shape": mesh_shape,
             "devices": (int(np.prod(list(mesh_shape.values())))
                         if mesh_shape else 1),
+            # Pipeline attribution (like backend/mesh_shape): whether the
+            # overlapped loop ran and the kernel's KV-page DMA ring depth.
+            "overlap": self.overlap,
+            "prefetch_depth": self.prefetch_depth,
             "blocks_free": self.alloc.num_free,
             "preemptions": self.scheduler.num_preemptions,
             "slot_compactions": self.scheduler.num_slot_compactions,

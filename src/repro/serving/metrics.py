@@ -64,14 +64,21 @@ class EngineMetrics:
     steps: int = 0
     step_tokens: int = 0
     emitted_tokens: int = 0
+    # Iterations where nothing was scheduled and nothing was in flight —
+    # their wall time lands in phase_s["idle"] instead of vanishing, but
+    # they don't count as steps (tokens-per-step keeps its meaning).
+    num_idle_steps: int = 0
     phase_s: Dict[str, float] = field(default_factory=dict)
 
     def record_step(self, *, num_tokens: int, emitted_tokens: int,
-                    phases: Dict[str, float]) -> None:
+                    phases: Dict[str, float], idle: bool = False) -> None:
         """One engine step: lane count, emitted output tokens, phase walls."""
-        self.steps += 1
-        self.step_tokens += num_tokens
-        self.emitted_tokens += emitted_tokens
+        if idle:
+            self.num_idle_steps += 1
+        else:
+            self.steps += 1
+            self.step_tokens += num_tokens
+            self.emitted_tokens += emitted_tokens
         for k, v in phases.items():
             self.phase_s[k] = self.phase_s.get(k, 0.0) + v
 
@@ -109,6 +116,7 @@ class EngineMetrics:
             "p99_tpot_s": self.tpot.percentile(99),
             "throughput_tok_s": self.output_tokens / dt if dt > 0 else 0.0,
             "steps": self.steps,
+            "num_idle_steps": self.num_idle_steps,
             "tokens_per_step": (self.emitted_tokens / self.steps
                                 if self.steps else 0.0),
             "lane_tokens_per_step": (self.step_tokens / self.steps

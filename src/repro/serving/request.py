@@ -60,7 +60,10 @@ _LEGAL = {
     RequestState.PREFILLING: {RequestState.DECODING, RequestState.PREEMPTED,
                               RequestState.FINISHED},
     RequestState.DECODING: {RequestState.PREEMPTED, RequestState.FINISHED},
-    RequestState.PREEMPTED: {RequestState.PREFILLING},
+    # PREEMPTED -> FINISHED: the async overlapped loop can resolve a
+    # request's final token (EOS / max_new_tokens) after the scheduler
+    # preempted it mid-flight — the stream is complete, recompute is moot.
+    RequestState.PREEMPTED: {RequestState.PREFILLING, RequestState.FINISHED},
     RequestState.FINISHED: set(),
 }
 

@@ -241,6 +241,12 @@ class Scheduler:
             spec_budget = budget // 2 if prefill_pending else budget
             for req in self.running.values():
                 if req.state is RequestState.DECODING:
+                    if len(req.output) >= req.max_new_tokens:
+                        # Provisionally complete: the async engine already
+                        # committed this request's final token (value still
+                        # in flight) — no further lanes; it finishes when
+                        # its device future resolves.
+                        continue
                     plan.decode.append(req)
                     draft = spec_drafts.get(req.req_id)
                     if draft is not None and spec_budget > 0:

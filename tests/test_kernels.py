@@ -64,13 +64,19 @@ def test_paged_attention_kernel_sweep(NB, BS, KV, hd, H, B, lens):
                                rtol=2e-3, atol=2e-3)
 
 
-@pytest.mark.parametrize("NB,BS,KV,hd,H,lens,chunks,q_chunk", [
-    (24, 8, 2, 32, 8, [13, 8, 21], [1, 4, 2], 4),
-    (40, 16, 4, 32, 8, [40, 1, 64, 17], [3, 1, 5, 2], 8),
-    (16, 8, 1, 16, 4, [8, 16], [2, 7], 3),      # q_chunk not dividing T
+@pytest.mark.parametrize("NB,BS,KV,hd,H,lens,chunks,q_chunk,depth", [
+    (24, 8, 2, 32, 8, [13, 8, 21], [1, 4, 2], 4, 0),
+    (40, 16, 4, 32, 8, [40, 1, 64, 17], [3, 1, 5, 2], 8, 0),
+    (16, 8, 1, 16, 4, [8, 16], [2, 7], 3, 0),   # q_chunk not dividing T
+    # multi-buffered KV-page DMA ring (prefetch_depth >= 2): same math,
+    # manual async copies into a depth-slot VMEM ring instead of BlockSpec
+    # pipelining — must stay BIT-identical to the depth<=1 path
+    (24, 8, 2, 32, 8, [13, 8, 21], [1, 4, 2], 4, 2),
+    (40, 16, 4, 32, 8, [40, 1, 64, 17], [3, 1, 5, 2], 8, 3),
+    (16, 8, 1, 16, 4, [8, 16], [2, 7], 3, 16),  # depth > #kv blocks
 ])
 def test_paged_attention_chunked_kernel_sweep(NB, BS, KV, hd, H, lens,
-                                              chunks, q_chunk):
+                                              chunks, q_chunk, depth):
     """Query-chunk grid kernel vs the jnp chunked-prefill oracle: mixed
     decode/prefill lanes, shuffled pool blocks, trailing padding lanes."""
     from repro.core.attention_api import paged_attention_chunked
@@ -100,12 +106,18 @@ def test_paged_attention_chunked_kernel_sweep(NB, BS, KV, hd, H, lens,
     tpos = jnp.asarray(tpos, jnp.int32)
     out = paged_attention_chunked_pallas(q, pk, pv, bl, br, bp, kv_lens,
                                          treq, tpos, q_chunk=q_chunk,
+                                         prefetch_depth=depth,
                                          interpret=True)
     ref = paged_attention_chunked(q, pk, pv, bl, br, bp, kv_lens, treq, tpos)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-3, atol=2e-3)
     assert np.all(np.isfinite(np.asarray(out)[-2:])), "pad lanes must be 0"
     np.testing.assert_allclose(np.asarray(out)[-2:], 0.0)
+    if depth >= 2:      # the DMA ring cannot drift from the serial path
+        serial = paged_attention_chunked_pallas(
+            q, pk, pv, bl, br, bp, kv_lens, treq, tpos, q_chunk=q_chunk,
+            prefetch_depth=0, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(serial))
 
 
 def test_paged_attention_chunked_sharded_equals_chunked():

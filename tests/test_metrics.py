@@ -58,8 +58,8 @@ def test_engine_metrics_summary_keys_and_types():
     assert set(s) == {"backend", "finished", "output_tokens",
                       "mean_ttft_s", "p50_ttft_s", "p99_ttft_s",
                       "mean_tpot_s", "p50_tpot_s", "p99_tpot_s",
-                      "throughput_tok_s", "steps", "tokens_per_step",
-                      "lane_tokens_per_step", "phase_s"}
+                      "throughput_tok_s", "steps", "num_idle_steps",
+                      "tokens_per_step", "lane_tokens_per_step", "phase_s"}
     assert s["backend"] == "xla"
     assert s["finished"] == 2
     assert s["output_tokens"] == 10
