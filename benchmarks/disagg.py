@@ -1,0 +1,138 @@
+"""Disaggregated prefill/decode serving + tiered KV cache (S4.2 serving
+asymmetry; docs/disaggregated.md):
+
+  * ``llm_disagg_burst_*``    a burst of LONG prompts lands on engines that
+    already have decode lanes in flight.  The monolithic engine carries
+    prefill chunks inside every fused step, so in-flight decodes inherit
+    prefill-sized step latency (TPOT spikes); the disaggregated frontend
+    runs decode-only steps at a fixed decode:prefill cadence, so the same
+    burst leaves decode TPOT flat.  Same model, same device budget, same
+    total HBM blocks — the mono/split rows differ only in role topology.
+  * ``llm_tier_pressure_*``   recurring prompt prefixes cycle through an
+    HBM pool sized below the working set.  HBM-only eviction drops content,
+    so only back-to-back reuse hits the prefix cache; the ``tiered``
+    eviction policy demotes evicted blocks with reuse evidence to a host
+    pool and promotes them back on the next recurrence — a structurally
+    higher prefix hit rate at the SAME HBM pool size.
+
+Every row carries ``roles=``/``tier=`` attribution (role topology and
+hbm/host pool sizes) plus the handoff / tier counters that explain the win,
+so ``benchmarks/run.py`` sweeps stay attributable.  ``REPRO_BENCH_SMOKE=1``
+shrinks both scenarios to the deterministic minimum ``tools/ci_fast.sh``
+checks (counters, not wall-clock, gate the smoke).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.config import ServeConfig, get_config
+from repro.models.api import build_model
+from repro.serving.disagg import DisaggEngine
+from repro.serving.engine import Request, ServingEngine
+
+
+def _drain(engine) -> float:
+    t0 = time.time()
+    engine.run_until_done()
+    return time.time() - t0
+
+
+def _tier_str(m) -> str:
+    t = m["tier"]
+    return f"tier=hbm:{t['hbm_blocks']}+host:{t['host_blocks']}"
+
+
+def _burst_row(tag: str, engine, dt: float, roles: str) -> None:
+    m = engine.metrics()
+    extra = ""
+    if roles != "full":
+        h = m["handoff_ms"]
+        extra = (f";handoffs={m['handoffs']};"
+                 f"handoff_p50_ms={h['p50']:.2f};"
+                 f"prefill_steps={m['roles']['prefill']['steps']};"
+                 f"decode_steps={m['roles']['decode']['steps']}")
+    emit(tag, dt * 1e6,
+         f"tpot_p50_ms={m['p50_tpot_s']*1e3:.1f};"
+         f"tpot_p99_ms={m['p99_tpot_s']*1e3:.1f};"
+         f"ttft_p50_ms={m['p50_ttft_s']*1e3:.1f};"
+         f"ttft_p99_ms={m['p99_ttft_s']*1e3:.1f};"
+         f"tok_s={m['throughput_tok_s']:.1f};"
+         f"finished={m['finished']};"
+         f"backend={m['backend']};"
+         f"roles={roles.replace(',', '+')};{_tier_str(m)}" + extra)
+
+
+def run(quick: bool = True) -> None:
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    cfg = get_config("smollm-360m").reduced(dtype="float32")
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # ---- bursty long-prompt arrivals: prefill-induced TPOT spikes --------
+    n_req = 4 if smoke else (6 if quick else 16)
+    plen = 40 if smoke else 96
+    max_new = 8 if smoke else 16
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (plen,), dtype=np.int32)
+               for _ in range(n_req)]
+
+    def burst_requests():
+        return [Request(req_id=i, prompt=p, max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+
+    serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=2,
+                        prefill_chunk=16)
+    blocks = n_req * (-(-(plen + max_new) // 8) + 1)
+    mono = ServingEngine(model, params, cfg, serve, num_blocks=blocks)
+    for r in burst_requests():
+        mono.submit(r)
+    _burst_row(f"llm_disagg_burst_mono_n{n_req}", mono, _drain(mono), "full")
+
+    split = DisaggEngine(model, params, cfg, serve, num_blocks=blocks)
+    for r in burst_requests():
+        split.submit(r)
+    _burst_row(f"llm_disagg_burst_split_n{n_req}", split, _drain(split),
+               "prefill,decode")
+
+    # ---- memory pressure: host tier vs HBM-only at equal HBM pool --------
+    n_prompts = 3 if smoke else 5
+    rounds = 2 if smoke else 3
+    bs, hbm = 8, 7 if smoke else 11
+    pressure_prompts = [rng.integers(0, cfg.vocab_size, (3 * bs,),
+                                     dtype=np.int32)
+                        for _ in range(n_prompts)]
+
+    def pressure_run(tag: str, eviction: str, host_blocks: int) -> None:
+        serve = ServeConfig(model=cfg.name, kv_block_size=bs, max_batch=1,
+                            eviction=eviction, host_blocks=host_blocks)
+        eng = ServingEngine(model, params, cfg, serve, num_blocks=hbm)
+        t0 = time.time()
+        rid = 0
+        for _ in range(rounds):
+            for p in pressure_prompts:
+                for _ in range(2):          # back-to-back reuse earns hits
+                    eng.submit(Request(req_id=rid, prompt=p,
+                                       max_new_tokens=6))
+                    rid += 1
+                eng.run_until_done()
+        dt = time.time() - t0
+        m = eng.metrics()
+        t = m["tier"]
+        emit(tag, dt * 1e6,
+             f"prefix_hit_rate={m['prefix_hit_rate']:.2f};"
+             f"prefix_hits={m['prefix_hits']};"
+             f"evictions={eng.alloc.cache_evictions};"
+             f"demotes={t['demotes']};promotes={t['promotes']};"
+             f"tier_hits={t['hits']};drops={t['drops']};"
+             f"finished={m['finished']};"
+             f"eviction={m['eviction_policy']};"
+             f"roles=full;{_tier_str(m)}")
+
+    pressure_run(f"llm_tier_pressure_hbm_only_r{rounds}", "lru", 0)
+    pressure_run(f"llm_tier_pressure_tiered_r{rounds}", "tiered",
+                 4 * n_prompts)

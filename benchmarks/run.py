@@ -51,6 +51,7 @@ subprocess).
 | recsys_e2e             | Fig 11 / Table 3   |
 | llm_e2e                | Fig 12, 17 d-e     |
 | saturation             | S4.2 pipeline      |
+| disagg                 | S4.2 disaggregation|
 """
 from __future__ import annotations
 
@@ -79,12 +80,13 @@ MODULES = [
     "recsys_e2e",
     "llm_e2e",
     "saturation",
+    "disagg",
 ]
 
 # Modules that build serving engines — the only ones whose numbers can
 # depend on the serving-policy triple. A --policy sweep re-runs just these
 # per triple; everything else runs once (under the first triple's scope).
-POLICY_SENSITIVE = {"llm_e2e", "saturation"}
+POLICY_SENSITIVE = {"llm_e2e", "saturation", "disagg"}
 # Likewise for the speculative-decoding proposer (--spec sweep).
 SPEC_SENSITIVE = {"llm_e2e"}
 

@@ -338,7 +338,7 @@ class ServeConfig:
     # names are validated strictly — there is no capability fallback).
     admission: str = "fcfs"        # fcfs | priority | deadline-slo
     preemption: str = "latest-arrival"   # | fewest-remaining-tokens | most-blocks
-    eviction: str = "lru"          # lru | hit-rate | refcount-aware
+    eviction: str = "lru"          # lru | hit-rate | refcount-aware | tiered
     # Speculative decoding (repro.serving.spec): proposer name resolved
     # through the spec registry ("off" = one token per request per step),
     # and the max draft tokens verified per request per step.
@@ -359,6 +359,19 @@ class ServeConfig:
     # run the sharded fused step — params TP-sharded, KV pool
     # sequence-sharded, per-layer log-sum-exp combine over the axis.
     devices: int = 0
+    # Disaggregated serving (docs/disaggregated.md): "" = monolithic engine;
+    # "prefill,decode" (alias "split") makes ``repro.launch.serve`` build the
+    # two-role DisaggEngine — prompts prefill on one engine, committed KV
+    # blocks hand off through the allocator's reserve/commit API, decode runs
+    # on the other. Greedy streams stay bit-identical to the monolithic
+    # engine.
+    roles: str = ""
+    # Host-memory KV tier capacity in blocks (0 = HBM-only): cached-free
+    # blocks evicted from the HBM pool demote into a host LRU instead of
+    # dropping their content (gated by the eviction policy's `demote` hook —
+    # the `tiered` policy scores it on BlockStats) and promote back into HBM
+    # on a prefix hit.
+    host_blocks: int = 0
     parallel: ParallelConfig = field(default_factory=ParallelConfig)
     seed: int = 0
 

@@ -26,6 +26,24 @@ like ``hit-rate`` and ``refcount-aware`` have evidence to rank on; the
 default resolves to the registered ``lru`` policy, byte-for-byte the old
 oldest-freed-first behaviour.
 
+Two extensions ride on that machinery (docs/disaggregated.md):
+
+  * **KV-written watermark** — ``_written[block]`` counts how many leading
+    token slots of a block hold committed KV.  It gates
+    :meth:`extend_prefix` (same-wave prefix dedup: a borrower admitted
+    while the donor is still prefilling fast-forwards over blocks the
+    moment they are published, full and written) and backs
+    :meth:`transferable`, the prefill→decode handoff's contract that a
+    request's blocks can be copied out of this pool.
+  * **Host-memory tier** — with a :class:`HostPool` attached, evicting a
+    cached-free block *demotes* its content to host memory (policy-gated:
+    the eviction policy's ``demote`` hook scores keep/drop on the same
+    ``BlockStats``) instead of dropping it, and a prefix hit on a demoted
+    key *promotes* it back into a fresh HBM block before admission.  The
+    allocator only does bookkeeping; the actual device↔host copies are
+    queued on :attr:`pending_tier_ops` for the engine to apply in order
+    (demotes read old content before any reuse overwrites it).
+
 Sequence state is mutated ONLY through the public API — ``allocate`` /
 ``allocate_prefix``, ``reserve_tokens`` + ``commit_tokens``, ``rewind`` /
 ``truncate``, ``free`` — so engines never poke ``_lens`` directly.  The
@@ -83,6 +101,70 @@ def _prefix_key(tokens: np.ndarray, n_tokens: int) -> bytes:
 
 
 @dataclass
+class HostBlock:
+    """One demoted KV block staged in host memory.
+
+    ``data`` is filled lazily by the engine's tier drain (a device→host copy
+    of the block's (k, v) slices); ``stats`` carries the block's eviction
+    evidence across the tier round-trip so a promoted block keeps its
+    history.
+    """
+
+    key: bytes
+    stats: BlockStats
+    data: Optional[Tuple[np.ndarray, np.ndarray]] = None   # (k, v) host copies
+
+
+class HostPool:
+    """Host-memory KV tier: an LRU of demoted cached-free blocks.
+
+    Capacity is counted in blocks.  ``put`` registers a demotion (oldest
+    entry dropped on overflow), ``take`` consumes an entry for promotion.
+    The pool never touches device memory — entries carry host ``np`` copies
+    written by the engine's ordered tier drain.
+    """
+
+    def __init__(self, capacity: int):
+        assert capacity > 0, capacity
+        self.capacity = int(capacity)
+        self._entries: "OrderedDict[bytes, HostBlock]" = OrderedDict()
+        self.counters: Dict[str, int] = {
+            "demotes": 0, "promotes": 0, "hits": 0, "drops": 0}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: bytes) -> bool:
+        return key in self._entries
+
+    def put(self, key: bytes, stats: BlockStats) -> HostBlock:
+        """Demote ``key``: stage a new entry (content copied in later by the
+        engine's tier drain) and LRU-drop past capacity."""
+        self._entries.pop(key, None)        # re-demotion replaces stale data
+        entry = HostBlock(key=key, stats=stats)
+        self._entries[key] = entry
+        self.counters["demotes"] += 1
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.counters["drops"] += 1
+        return entry
+
+    def take(self, key: bytes) -> Optional[HostBlock]:
+        """Consume an entry for promotion back into the HBM pool."""
+        entry = self._entries.pop(key, None)
+        if entry is not None:
+            self.counters["promotes"] += 1
+            self.counters["hits"] += 1
+        return entry
+
+    def untake(self, key: bytes, entry: HostBlock) -> None:
+        """Roll back a ``take`` whose promotion could not get an HBM block."""
+        self._entries[key] = entry
+        self.counters["promotes"] -= 1
+        self.counters["hits"] -= 1
+
+
+@dataclass
 class BlockAllocator:
     """Refcounted free-list allocator over ``num_blocks`` KV blocks."""
 
@@ -100,6 +182,9 @@ class BlockAllocator:
     # without the serving layer; the registered default is resolved lazily on
     # first eviction).
     eviction_policy: Optional[Any] = None
+    # Optional host-memory tier: evicted cached-free blocks are demoted into
+    # it (policy-gated) instead of dropped, and promoted back on prefix hit.
+    host_pool: Optional[HostPool] = None
     _free: List[int] = field(default_factory=list)
     _tables: Dict[int, List[int]] = field(default_factory=dict)
     _lens: Dict[int, int] = field(default_factory=dict)
@@ -113,8 +198,17 @@ class BlockAllocator:
     _cached_free: "OrderedDict[int, None]" = field(default_factory=OrderedDict)
     # block -> BlockStats, evidence for eviction scorers
     _stats: Dict[int, BlockStats] = field(default_factory=dict)
+    # block -> KV-written watermark: #leading token slots holding committed
+    # KV (the same-wave-dedup / handoff-transferability evidence)
+    _written: Dict[int, int] = field(default_factory=dict)
     # (src, dst) copy-on-write pairs awaiting a device-pool copy
     pending_copies: List[Tuple[int, int]] = field(default_factory=list)
+    # ordered host-tier traffic awaiting device copies: ("demote"|"promote",
+    # HostBlock, block).  Order matters — a demote must read its block's
+    # content before any same-step reuse overwrites it, and before a promote
+    # consumes its data.
+    pending_tier_ops: List[Tuple[str, HostBlock, int]] = field(
+        default_factory=list)
     # counters (surfaced by ServingEngine.metrics)
     prefix_hits: int = 0
     prefix_misses: int = 0
@@ -170,13 +264,21 @@ class BlockAllocator:
                     f"eviction policy {getattr(pol, 'name', pol)!r} selected "
                     f"block {blk}, not a cached-free candidate")
             del self._cached_free[blk]
+            key = self._hash_of.get(blk)        # capture before unregister
             self._unregister(blk)
+            if self.host_pool is not None and key is not None:
+                demote = getattr(pol, "demote", None)
+                if demote is None or demote(blk, self._stats):
+                    entry = self.host_pool.put(
+                        key, self._stats.get(blk, BlockStats()))
+                    self.pending_tier_ops.append(("demote", entry, blk))
             pol.on_evict(blk, self._stats)
             self.cache_evictions += 1
         else:
             raise OutOfBlocksError("pool exhausted")
         self.blocks_allocated += 1
         self._stats[blk] = BlockStats()          # fresh content, fresh record
+        self._written[blk] = 0
         return blk
 
     def _unregister(self, blk: int) -> None:
@@ -213,11 +315,13 @@ class BlockAllocator:
 
         Every leading *full* block of ``tokens`` whose chained content hash is
         in the prefix cache is adopted (refcount bump) instead of allocated.
-        The sequence length starts at the cached token count, so prefill can
-        skip straight to the first uncached token. At least one token is
-        always left to recompute (a fully-cached prompt still needs its final
-        logits), which makes the last shared block copy-on-write on first
-        append.
+        With a host tier attached, a miss in the HBM cache falls back to
+        promoting the demoted entry into a fresh block (content restored by
+        the engine's tier drain before the step runs).  The sequence length
+        starts at the cached token count, so prefill can skip straight to the
+        first uncached token. At least one token is always left to recompute
+        (a fully-cached prompt still needs its final logits), which makes the
+        last shared block copy-on-write on first append.
         """
         assert req_id not in self._tables, req_id
         bs = self.block_size
@@ -225,17 +329,13 @@ class BlockAllocator:
         cached = 0
         full = len(tokens) // bs
         for i in range(full):
-            blk = self._block_of.get(_prefix_key(tokens, (i + 1) * bs))
+            key = _prefix_key(tokens, (i + 1) * bs)
+            blk = self._block_of.get(key)
+            if blk is None and self.host_pool is not None:
+                blk = self._promote(key)
             if blk is None:
                 break
-            if blk in self._cached_free:
-                del self._cached_free[blk]
-                self._ref[blk] = 1
-            else:
-                self._ref[blk] += 1
-            st = self._stats.setdefault(blk, BlockStats())
-            st.hits += 1
-            st.peak_ref = max(st.peak_ref, self._ref[blk])
+            self._adopt(blk)
             blocks.append(blk)
             cached += bs
             self.prefix_hits += 1
@@ -249,8 +349,50 @@ class BlockAllocator:
         self._lens[req_id] = cached
         return cached
 
+    def _adopt(self, blk: int) -> None:
+        """Take one more reference on a cache-hit block (cached-free revival,
+        live share, or a just-promoted tier block) and bump its evidence."""
+        if blk in self._cached_free:
+            del self._cached_free[blk]
+            self._ref[blk] = 1
+        else:
+            self._ref[blk] = self._ref.get(blk, 0) + 1
+        st = self._stats.setdefault(blk, BlockStats())
+        st.hits += 1
+        st.peak_ref = max(st.peak_ref, self._ref[blk])
+
+    def _promote(self, key: bytes) -> Optional[int]:
+        """Stage a host-tier entry back into a fresh HBM block.
+
+        The block is hash-registered immediately (so chained lookups for the
+        following blocks resolve) with its pre-demotion stats restored and a
+        full watermark; the actual host→device content copy is queued on
+        :attr:`pending_tier_ops`.  Returns ``None`` on a tier miss or when
+        the HBM pool cannot yield a block (the entry is put back).
+        """
+        assert self.host_pool is not None
+        entry = self.host_pool.take(key)
+        if entry is None:
+            return None
+        try:
+            blk = self._pop_block()
+        except OutOfBlocksError:
+            self.host_pool.untake(key, entry)
+            return None
+        self._hash_of[blk] = key
+        self._block_of[key] = blk
+        self._stats[blk] = entry.stats
+        self._written[blk] = self.block_size
+        self.pending_tier_ops.append(("promote", entry, blk))
+        return blk
+
     def peek_prefix(self, tokens: np.ndarray) -> int:
-        """#tokens a prompt would get from the cache, without mutating it."""
+        """#tokens a prompt would get from the HBM cache, without mutating it.
+
+        Host-tier entries are deliberately NOT counted: a promotion consumes
+        a fresh HBM block, so for admission sizing a demoted prefix block
+        costs what a fresh block costs.
+        """
         bs = self.block_size
         cached = 0
         for i in range(len(tokens) // bs):
@@ -258,6 +400,48 @@ class BlockAllocator:
                 break
             cached += bs
         return min(cached, max(len(tokens) - 1, 0))
+
+    def extend_prefix(self, req_id: int, tokens: np.ndarray) -> int:
+        """Same-wave prefix dedup: fast-forward a mid-prefill request over
+        blocks another request published since it was admitted.
+
+        While ``req_id``'s committed length sits on a block boundary, adopt
+        the published block for its next ``block_size`` tokens — but only if
+        that block's KV-written watermark covers the whole block (the donor
+        may still be prefilling later chunks; a published block is complete,
+        the watermark is the proof).  An untouched placeholder block at the
+        frontier (the cold-start pop: private, unpublished, watermark 0) is
+        swapped back to the free list.  As in :meth:`allocate_prefix`, at
+        least one token is always left to recompute.  Returns the number of
+        tokens fast-forwarded; callers advance their prefill cursor by it.
+        """
+        bs = self.block_size
+        pos = self._lens[req_id]
+        table = self._tables[req_id]
+        adopted = 0
+        while pos % bs == 0 and pos + bs <= len(tokens) - 1:
+            blk = self._block_of.get(_prefix_key(tokens, pos + bs))
+            if blk is None or self._written.get(blk, 0) < bs:
+                break
+            bi = pos // bs
+            if bi < len(table):
+                own = table[bi]
+                if (own == blk or self._ref.get(own) != 1
+                        or own in self._hash_of
+                        or self._written.get(own, 0) > 0):
+                    break               # frontier block already has content
+                table[bi] = blk
+                self._decref(own)       # untouched placeholder -> free list
+            else:
+                assert bi == len(table), (bi, len(table))
+                table.append(blk)
+            self._adopt(blk)
+            self.prefix_hits += 1
+            pos += bs
+            adopted += bs
+        if adopted:
+            self._lens[req_id] = pos
+        return adopted
 
     def register_prefix(self, req_id: int, tokens: np.ndarray,
                         num_valid: int, start: int = 0) -> None:
@@ -307,6 +491,8 @@ class BlockAllocator:
                 table[bi] = new
                 self.pending_copies.append((blk, new))
                 self.cow_copies += 1
+                # the device copy clones the whole block: watermark carries
+                self._written[new] = self._written.get(blk, 0)
                 blk = new
             elif blk in self._hash_of:      # private but published: invalidate
                 self._unregister(blk)
@@ -314,11 +500,25 @@ class BlockAllocator:
         return out
 
     def commit_tokens(self, req_id: int, n: int) -> None:
-        self._lens[req_id] += n
+        pos0 = self._lens[req_id]
+        if n > 0:                           # advance KV-written watermarks
+            bs = self.block_size
+            table = self._tables[req_id]
+            for bi in range(pos0 // bs, (pos0 + n - 1) // bs + 1):
+                filled = min(pos0 + n - bi * bs, bs)
+                blk = table[bi]
+                if filled > self._written.get(blk, 0):
+                    self._written[blk] = filled
+        self._lens[req_id] = pos0 + n
 
     def drain_copies(self) -> List[Tuple[int, int]]:
         copies, self.pending_copies = self.pending_copies, []
         return copies
+
+    def drain_tier_ops(self) -> List[Tuple[str, HostBlock, int]]:
+        """Hand the queued host-tier traffic to the engine, IN ORDER."""
+        ops, self.pending_tier_ops = self.pending_tier_ops, []
+        return ops
 
     # Single-token conveniences (legacy API, used by tests/benchmarks).
     def reserve_slot(self, req_id: int) -> Tuple[int, int]:
@@ -352,6 +552,14 @@ class BlockAllocator:
         while len(table) > keep:
             self._decref(table.pop())
         self._lens[req_id] = new_len
+        # Rolled-back KV in the last kept block is stale: lower its watermark
+        # when the block is private and unpublished (the spec-rollback case —
+        # shared/published blocks keep valid content for their other holders).
+        last = table[-1]
+        off = max(new_len - (len(table) - 1) * self.block_size, 0)
+        if (self._ref.get(last) == 1 and last not in self._hash_of
+                and off < self._written.get(last, 0)):
+            self._written[last] = off
 
     def free(self, req_id: int) -> None:
         if req_id not in self._tables:
@@ -367,6 +575,21 @@ class BlockAllocator:
 
     def ref_count(self, block: int) -> int:
         return self._ref.get(block, 0)
+
+    def written(self, block: int) -> int:
+        """KV-written watermark of a physical block (0 if never written)."""
+        return self._written.get(block, 0)
+
+    def transferable(self, req_id: int) -> bool:
+        """True iff every committed token's KV is watermark-covered — the
+        prefill→decode handoff contract: the request's blocks can be copied
+        out of this pool without reading unwritten slots."""
+        pos = self._lens[req_id]
+        for i, blk in enumerate(self._tables[req_id]):
+            need = min(max(pos - i * self.block_size, 0), self.block_size)
+            if self._written.get(blk, 0) < need:
+                return False
+        return True
 
     def block_stats(self, block: int) -> BlockStats:
         """Eviction evidence for ``block`` (empty record if never touched)."""

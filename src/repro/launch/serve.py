@@ -57,6 +57,18 @@ def main() -> None:
                    help="KV-page DMA ring depth for the Pallas chunked "
                         "kernel (0/1 = BlockSpec pipeline, >= 2 = "
                         "multi-buffered manual DMA; ignored by jnp backends)")
+    p.add_argument("--roles", default="",
+                   help="'' = monolithic engine; 'prefill,decode' (or "
+                        "'split') = disaggregated two-role serving "
+                        "(docs/disaggregated.md): prompts prefill on one "
+                        "engine, KV blocks hand off through the allocator, "
+                        "decode runs on the other; greedy streams stay "
+                        "bit-identical")
+    p.add_argument("--host-blocks", type=int, default=0,
+                   help="host-memory KV tier capacity in blocks (0 = "
+                        "HBM-only): evicted cached-free blocks demote to a "
+                        "host LRU and promote back on prefix hit — pair "
+                        "with --eviction tiered (docs/disaggregated.md)")
     args = p.parse_args()
 
     cfg = get_config(args.arch)
@@ -70,13 +82,24 @@ def main() -> None:
                         eviction=args.eviction, spec=args.spec,
                         spec_k=args.spec_k, devices=args.devices,
                         overlap=args.overlap == "on",
-                        prefetch_depth=args.prefetch_depth)
+                        prefetch_depth=args.prefetch_depth,
+                        roles=args.roles, host_blocks=args.host_blocks)
     total_blocks = args.requests * (
         -(-(args.prompt_len + args.max_new) // args.block_size) + 1)
     # ServeConfig.devices > 1 makes the engine build the serving mesh itself
     # (repro.launch.mesh.make_serving_mesh) and run the sharded fused step.
-    engine = ServingEngine(model, params, cfg, serve,
-                           num_blocks=total_blocks)
+    # ServeConfig.roles builds the disaggregated two-role frontend instead:
+    # prefill and decode engines each get the full pool (equal HBM per
+    # role), pinned to separate devices when the host has two or more.
+    if serve.roles:
+        from repro.serving.disagg import DisaggEngine
+        devs = jax.devices()
+        pair = (devs[0], devs[1]) if len(devs) >= 2 else None
+        engine = DisaggEngine(model, params, cfg, serve,
+                              num_blocks=total_blocks, devices=pair)
+    else:
+        engine = ServingEngine(model, params, cfg, serve,
+                               num_blocks=total_blocks)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -101,6 +124,17 @@ def main() -> None:
           f"cow copies {m['cow_copies']}")
     print(f"policies {m['admission_policy']}/{m['preemption_policy']}/"
           f"{m['eviction_policy']}  counters {m['policy_counters']}")
+    t = m["tier"]
+    print(f"role {m['role']}  tier hbm={t['hbm_blocks']} "
+          f"host={t['host_blocks']} (used {t['host_blocks_used']})  "
+          f"demotes {t['demotes']}  promotes {t['promotes']}  "
+          f"hits {t['hits']}  drops {t['drops']}")
+    if serve.roles:
+        h = m["handoff_ms"]
+        print(f"handoffs {m['handoffs']}  latency p50 {h['p50']:.2f} / "
+              f"p99 {h['p99']:.2f} ms  prefill steps "
+              f"{m['roles']['prefill']['steps']}  decode steps "
+              f"{m['roles']['decode']['steps']}")
     s = m["spec"]
     print(f"spec {s['proposer']} k={s['k']}  "
           f"accept_rate {s['acceptance_rate']:.2f}  "

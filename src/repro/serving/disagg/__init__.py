@@ -1,0 +1,12 @@
+"""Disaggregated prefill/decode serving (docs/disaggregated.md).
+
+A *prefill role* :class:`~repro.serving.engine.ServingEngine` fills KV
+blocks, a *decode role* engine consumes them; :class:`DisaggEngine` is the
+role-aware frontend that routes requests WAITING -> PREFILLING (prefill
+engine) -> handoff -> DECODING (decode engine), with block transfer
+expressed through the allocator's public reserve/commit API.
+"""
+from repro.serving.disagg.frontend import (DisaggEngine, copy_block_tokens,
+                                           parse_roles)
+
+__all__ = ["DisaggEngine", "copy_block_tokens", "parse_roles"]

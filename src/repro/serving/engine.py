@@ -64,7 +64,7 @@ import numpy as np
 from repro.config import ModelConfig, ServeConfig
 from repro.core import dispatch
 from repro.core.paged_kv import (
-    BlockAllocator, copy_pool_blocks, make_pool)
+    BlockAllocator, HostPool, copy_pool_blocks, make_pool)
 from repro.serving import policy as policy_lib
 from repro.serving import sampling as sampling_lib
 from repro.serving import spec as spec_lib
@@ -130,11 +130,21 @@ class ServingEngine:
                  *, num_blocks: Optional[int] = None, eos_id: int = -1,
                  token_budget: Optional[int] = None, seed: int = 0,
                  admission=None, preemption=None, eviction=None,
-                 proposer=None, mesh=None):
+                 proposer=None, mesh=None, role: str = "full"):
         self.model = model
         self.cfg = cfg
         self.serve = serve
         self.eos_id = eos_id
+        # Disaggregated serving (docs/disaggregated.md): a "prefill"-role
+        # engine runs prompt prefill only — a request whose last chunk
+        # commits is PARKED on ``self.prefilled`` (state stays PREFILLING,
+        # blocks stay live) instead of transitioning to DECODING, for the
+        # frontend to hand off to a decode-role engine via take_prefilled().
+        if role not in ("full", "prefill"):
+            raise ValueError(f"unknown engine role {role!r}")
+        self.role = role
+        self.prefill_only = role == "prefill"
+        self.prefilled: List[Request] = []
         # Mesh-native serving: a jax Mesh (repro.launch.mesh) turns every
         # step into the sharded fused program — params TP-sharded via the
         # repo-wide ShardingRules, KV pool sequence-sharded over the model
@@ -170,6 +180,18 @@ class ServingEngine:
         self._policy_objs = (adm, pre, evi)
         self.alloc = BlockAllocator(num_blocks=nb, block_size=bs,
                                     num_shards=S, eviction_policy=evi)
+        # Host-memory KV tier (docs/disaggregated.md): evicted cached-free
+        # blocks demote into a host LRU (policy-gated) instead of dropping
+        # their content; prefix hits promote them back.  The device↔host
+        # copies run in sync_pools()' ordered tier drain.
+        self.host_pool: Optional[HostPool] = None
+        if serve.host_blocks > 0:
+            if S > 1:
+                raise ValueError(
+                    "host KV tier requires an unsharded pool (the demote/"
+                    "promote block copies assume single-device block slices)")
+            self.host_pool = HostPool(serve.host_blocks)
+            self.alloc.host_pool = self.host_pool
         pk, pv = make_pool(cfg.num_layers, nb, bs, a.num_kv_heads, a.head_dim,
                            jnp.dtype(cfg.dtype))
         self.pools = {"k": pk, "v": pv}
@@ -559,6 +581,38 @@ class ServingEngine:
         self.pools = {k: self._copy_fn(p, srcs, dsts)
                       for k, p in self.pools.items()}
 
+    def _drain_tier(self) -> None:
+        """Apply queued host-tier traffic to the device pools, IN ORDER.
+
+        A demote reads its block's (k, v) slices to host BEFORE any same-step
+        reuse overwrites them (the slice is a data dependency on the in-flight
+        program, so in-flight writes land first and the read content is the
+        committed content); a promote scatters a previously saved host copy
+        into its fresh block.  Runs before the CoW drain: CoW destinations
+        are fresh pops that may be demoted blocks being reused.
+        """
+        ops = self.alloc.drain_tier_ops()
+        for kind, entry, blk in ops:
+            if kind == "demote":
+                entry.data = tuple(np.asarray(self.pools[c][:, blk])
+                                   for c in ("k", "v"))
+            else:
+                assert entry.data is not None, "promote before demote copy"
+                for c, val in zip(("k", "v"), entry.data):
+                    self.pools[c] = self.pools[c].at[:, blk].set(
+                        jnp.asarray(val, self.pools[c].dtype))
+
+    def sync_pools(self) -> None:
+        """Flush allocator-queued device-pool traffic (tier ops, then CoW).
+
+        Public because the disaggregation frontend must flush the decode
+        pool before writing handed-off KV into freshly reserved slots —
+        a stale CoW whole-block copy or tier op applied later would clobber
+        or misread them.
+        """
+        self._drain_tier()
+        self._drain_cow()
+
     def _build(self, plan: StepPlan, t0: float, t1: float) -> "_PendingStep":
         """Render + dispatch a draftless plan and commit it provisionally.
 
@@ -575,7 +629,7 @@ class ServingEngine:
         lists, tokens, tok_src, sample_args, spec_args, committed = (
             self._render(plan))
         assert spec_args is None, "drafted plans go through _step_sync"
-        self._drain_cow()
+        self.sync_pools()
         self._step_count += 1
         key = jax.random.fold_in(self._key, self._step_count)
         nxt_prev = (self._pending.nxt_dev if self._pending is not None
@@ -600,10 +654,17 @@ class ServingEngine:
                                            req.prefill_pos, start=start)
                 out_idx = None
                 if req.prefill_remaining == 0:  # final chunk samples a token
-                    req.to_state(RequestState.DECODING)
-                    req.output.append(0)
-                    chain[rid] = req.slot
-                    out_idx = len(req.output) - 1
+                    if self.prefill_only:
+                        # prefill role: park for handoff — no transition, no
+                        # sampled token; the decode engine recomputes the
+                        # final position's logits at admission (the same
+                        # last-token rule the prefix cache already applies)
+                        self.prefilled.append(req)
+                    else:
+                        req.to_state(RequestState.DECODING)
+                        req.output.append(0)
+                        chain[rid] = req.slot
+                        out_idx = len(req.output) - 1
                 actions.append(("prefill", req, n, pos0, out_idx))
         self._chain = chain
         if self.proposer is not None:
@@ -671,7 +732,7 @@ class ServingEngine:
             self._render(plan))
         assert spec_args is not None
         del tok_src                 # pipeline resolved: every token concrete
-        self._drain_cow()
+        self.sync_pools()
         self._step_count += 1
         key = jax.random.fold_in(self._key, self._step_count)
         t2 = time.perf_counter()
@@ -724,6 +785,9 @@ class ServingEngine:
                 self.alloc.register_prefix(req.req_id, req.active_prompt,
                                            req.prefill_pos, start=start)
                 if req.prefill_remaining == 0:
+                    if self.prefill_only:
+                        self.prefilled.append(req)
+                        continue
                     req.to_state(RequestState.DECODING)
                     if req.first_token_at is None:
                         req.first_token_at = now
@@ -790,9 +854,27 @@ class ServingEngine:
             next_pending.cancel(req)
         self._chain.pop(req.req_id, None)
 
+    @property
+    def busy(self) -> bool:
+        """Work queued, running, or still in flight in the pipeline."""
+        return self.scheduler.has_work() or self._pending is not None
+
+    def take_prefilled(self) -> List[Request]:
+        """Prefill role: pop requests whose prompt KV is fully committed.
+
+        Each is detached from the scheduler (slot returned, blocks KEPT and
+        still owned by its req_id) — the caller performs the handoff and must
+        ``alloc.free(req_id)`` afterwards to release the prefill-side copy
+        (its published blocks then park cached-free, keeping the prefill
+        prefix cache warm for repeat prompts)."""
+        out, self.prefilled = self.prefilled, []
+        for req in out:
+            self.scheduler.detach(req)
+        return out
+
     def run_until_done(self, max_steps: int = 100_000) -> None:
         for _ in range(max_steps):
-            if not self.scheduler.has_work() and self._pending is None:
+            if not self.busy:
                 return
             self.step()
         raise RuntimeError("serving did not converge")
@@ -855,4 +937,20 @@ class ServingEngine:
         m["policy_counters"] = {
             f"{p.axis}.{k}": v
             for p in self._policy_objs for k, v in sorted(p.counters.items())}
+        # Engine role (disaggregated serving) + host-tier attribution: pool
+        # sizes per tier and the demote/promote/hit/drop traffic, with the
+        # counters ALSO flattened next to the policy counters so benchmark
+        # rows carry them the same way (docs/disaggregated.md).
+        m["role"] = self.role
+        hp = self.host_pool
+        tier_counters = (dict(hp.counters) if hp is not None else
+                         {"demotes": 0, "promotes": 0, "hits": 0, "drops": 0})
+        m["tier"] = {
+            "hbm_blocks": self.alloc.num_blocks,
+            "host_blocks": hp.capacity if hp is not None else 0,
+            "host_blocks_used": len(hp) if hp is not None else 0,
+            **tier_counters,
+        }
+        m["policy_counters"].update(
+            {f"tier.{k}": v for k, v in sorted(tier_counters.items())})
         return m

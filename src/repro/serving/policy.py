@@ -160,6 +160,14 @@ class EvictionPolicy(Policy):
     def on_evict(self, block: int, stats: Mapping[int, BlockStats]) -> None:
         self.count("evictions")
 
+    def demote(self, block: int, stats: Mapping[int, BlockStats]) -> bool:
+        """Host-tier gate: should an evicted block's content be demoted to
+        the host pool (True) or dropped (False)?  Only consulted when the
+        allocator has a :class:`~repro.core.paged_kv.HostPool` attached; the
+        base keeps everything — host capacity is cheap and the tier is LRU.
+        """
+        return True
+
 
 # --------------------------------------------------------------------------
 # Registry (mirrors repro.core.dispatch: register + resolve, scoped override,
@@ -448,3 +456,30 @@ class RefcountAwareEviction(EvictionPolicy):
         return min(enumerate(candidates),
                    key=lambda iv: (stats[iv[1]].peak_ref, stats[iv[1]].hits,
                                    iv[0]))[1]
+
+
+@register(EVICTION, "tiered")
+class TieredEviction(EvictionPolicy):
+    """Host-tier-aware eviction: evict the coldest block, demote selectively.
+
+    Selection drops the block with the least reuse evidence first (fewest
+    hits, then lowest peak refcount, then LRU) — the mirror image of
+    ``refcount-aware``'s keep order, so the HBM cache retains the hottest
+    prefixes.  The :meth:`demote` gate then spends host-tier capacity only on
+    blocks with *demonstrated* reuse (a prior hit or past sharing); a block
+    that was hashed once and never matched is dropped outright instead of
+    flushing hotter content out of the host LRU.  Counters: ``demoted`` /
+    ``dropped`` per evicted block (only while a host pool is attached).
+    """
+
+    def select(self, candidates: Sequence[int],
+               stats: Mapping[int, BlockStats]) -> int:
+        return min(enumerate(candidates),
+                   key=lambda iv: (stats[iv[1]].hits, stats[iv[1]].peak_ref,
+                                   iv[0]))[1]
+
+    def demote(self, block: int, stats: Mapping[int, BlockStats]) -> bool:
+        st = stats.get(block, BlockStats())
+        keep = st.hits > 0 or st.peak_ref > 1
+        self.count("demoted" if keep else "dropped")
+        return keep

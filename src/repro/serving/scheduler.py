@@ -206,6 +206,15 @@ class Scheduler:
         del self.running[req.req_id]
         self.free_slots.append(req.slot)
 
+    def detach(self, req: Request) -> None:
+        """Remove a running request KEEPING its blocks (prefill→decode
+        handoff): the slot returns to the free list but the allocator table
+        stays live — the caller owns the blocks and must ``alloc.free`` the
+        request id once the transfer is done."""
+        del self.running[req.req_id]
+        self.free_slots.append(req.slot)
+        req.slot = -1
+
     def _preempt(self, req: Request) -> None:
         self.preemption.on_preempt(req, self.alloc)   # table still live here
         self.release(req)
@@ -232,6 +241,16 @@ class Scheduler:
         """
         self._compact_slots()
         self._admit()
+        # Same-wave prefix dedup: a mid-prefill request whose next blocks
+        # were published since last step (by a same-prompt donor, possibly
+        # itself still prefilling — the KV-written watermark is the proof of
+        # completeness) fast-forwards over them instead of recomputing.
+        for req in self.running.values():
+            if req.state is RequestState.PREFILLING:
+                adopted = self.alloc.extend_prefix(req.req_id,
+                                                   req.active_prompt)
+                if adopted:
+                    req.prefill_pos += adopted
         spec_drafts = spec_drafts or {}
         while True:
             plan = StepPlan()

@@ -1,0 +1,445 @@
+"""Disaggregated prefill/decode serving + tiered (HBM + host) KV cache:
+greedy bit-parity with the monolithic engine swept across policy triples x
+spec off/ngram x overlap on/off, the KV-written watermark / same-wave
+prefix-dedup primitive, handoff leak-freedom, and the host-tier
+demote/promote invariants (round-trips preserve content, stats and
+refcounts)."""
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig, get_config
+from repro.core.paged_kv import (BlockAllocator, BlockStats, HostPool,
+                                 OutOfBlocksError)
+from repro.serving import policy
+from repro.serving.disagg import DisaggEngine, parse_roles
+from repro.serving.engine import Request, ServingEngine
+
+
+# ------------------------------------------------------------ watermark core
+def test_commit_advances_written_watermark_per_block():
+    al = BlockAllocator(num_blocks=8, block_size=4)
+    al.allocate(0, 0)
+    al.reserve_tokens(0, 6)
+    al.commit_tokens(0, 6)
+    t = al.table(0)
+    assert al.written(t[0]) == 4            # first block fully covered
+    assert al.written(t[1]) == 2            # second block partially
+    assert al.transferable(0)
+
+
+def test_truncate_lowers_watermark_on_private_unpublished_block():
+    al = BlockAllocator(num_blocks=8, block_size=4)
+    al.allocate(0, 0)
+    al.reserve_tokens(0, 3)
+    al.commit_tokens(0, 3)
+    blk = al.table(0)[0]
+    assert al.written(blk) == 3
+    al.rewind(0, 2)                         # spec-style rollback
+    assert al.written(blk) == 1             # stale KV no longer claimed
+    assert al.transferable(0)
+
+
+def test_truncate_keeps_watermark_on_published_block():
+    """Published content stays valid for other holders — only private,
+    unpublished blocks get their watermark lowered."""
+    al = BlockAllocator(num_blocks=8, block_size=4)
+    toks = np.arange(4, dtype=np.int32)
+    al.allocate_prefix(0, toks)
+    al.reserve_tokens(0, 4)
+    al.commit_tokens(0, 4)
+    al.register_prefix(0, toks, 4)
+    blk = al.table(0)[0]
+    al.truncate(0, 2)
+    assert al.written(blk) == 4
+
+
+def test_cow_copy_inherits_watermark():
+    al = BlockAllocator(num_blocks=8, block_size=4)
+    toks = np.arange(4, dtype=np.int32)
+    al.allocate_prefix(0, toks)
+    al.reserve_tokens(0, 4)
+    al.commit_tokens(0, 4)
+    al.register_prefix(0, toks, 4)
+    assert al.allocate_prefix(1, toks) == 3  # last token left to recompute
+    al.reserve_tokens(1, 1)                 # shared last block -> CoW
+    new = al.table(1)[0]
+    assert new != al.table(0)[0]
+    assert al.written(new) == 4             # whole-block device copy carries
+
+
+# --------------------------------------------------- same-wave prefix dedup
+def test_extend_prefix_adopts_published_written_blocks():
+    """A borrower admitted mid-wave fast-forwards over blocks the donor
+    published after the borrower's admission (the ROADMAP open item)."""
+    al = BlockAllocator(num_blocks=16, block_size=4)
+    toks = np.arange(10, dtype=np.int32)
+    assert al.allocate_prefix(0, toks) == 0          # donor, cold cache
+    assert al.allocate_prefix(1, toks) == 0          # borrower, same wave
+    al.reserve_tokens(0, 8)
+    al.commit_tokens(0, 8)
+    al.register_prefix(0, toks, 8)                   # donor publishes 2 blocks
+    adopted = al.extend_prefix(1, toks)
+    assert adopted == 8
+    assert al.seq_len(1) == 8
+    assert al.table(1)[:2] == al.table(0)[:2]        # shared, refcount 2
+    assert al.ref_count(al.table(0)[0]) == 2
+    al.free(0)
+    al.free(1)
+    assert al.num_free == al.num_blocks
+
+
+def test_extend_prefix_requires_full_watermark():
+    """A published hash alone is not enough: the donor's KV write must have
+    covered the whole block (the watermark is the proof)."""
+    al = BlockAllocator(num_blocks=16, block_size=4)
+    toks = np.arange(10, dtype=np.int32)
+    al.allocate_prefix(0, toks)
+    al.allocate_prefix(1, toks)
+    al.reserve_tokens(0, 2)
+    al.commit_tokens(0, 2)                           # half a block written
+    donor_blk = al.table(0)[0]
+    al._hash_of[donor_blk] = b"x" * 16               # simulate early publish
+    al._block_of[b"x" * 16] = donor_blk
+    # the borrower's lookup misses (different key) — but even a forced match
+    # would be rejected: the watermark gate guards partially-written blocks
+    assert al.extend_prefix(1, toks) == 0
+
+
+def test_extend_prefix_swaps_untouched_placeholder():
+    """The cold-start placeholder block (private, unpublished, watermark 0)
+    is returned to the free list when the borrower adopts a donor block."""
+    al = BlockAllocator(num_blocks=16, block_size=4)
+    toks = np.arange(10, dtype=np.int32)
+    al.allocate_prefix(0, toks)
+    al.allocate_prefix(1, toks)                      # placeholder popped
+    placeholder = al.table(1)[0]
+    free_before = al.num_free
+    al.reserve_tokens(0, 8)
+    al.commit_tokens(0, 8)
+    al.register_prefix(0, toks, 8)
+    assert al.extend_prefix(1, toks) == 8
+    assert placeholder not in al.table(1)
+    assert al.num_free == free_before                # swap, not a leak
+    al.free(0)
+    al.free(1)
+    assert al.num_free == al.num_blocks
+
+
+def test_extend_prefix_never_crosses_touched_frontier():
+    """A borrower that already committed KV into its frontier block must not
+    swap it out from under itself."""
+    al = BlockAllocator(num_blocks=16, block_size=4)
+    toks = np.arange(10, dtype=np.int32)
+    al.allocate_prefix(0, toks)
+    al.allocate_prefix(1, toks)
+    al.reserve_tokens(1, 2)                          # borrower already wrote
+    al.commit_tokens(1, 2)
+    al.truncate(1, 0)                                # rewound, but was touched
+    al.reserve_tokens(1, 1)
+    al.commit_tokens(1, 1)
+    al.truncate(1, 0)
+    own = al.table(1)[0]
+    al._written[own] = 1                             # sticky partial write
+    al.reserve_tokens(0, 8)
+    al.commit_tokens(0, 8)
+    al.register_prefix(0, toks, 8)
+    assert al.extend_prefix(1, toks) == 0
+
+
+def test_extend_prefix_leaves_last_token_to_recompute():
+    """Like allocate_prefix, dedup never fast-forwards past len - 1: the
+    final logits must always be recomputed."""
+    al = BlockAllocator(num_blocks=16, block_size=4)
+    toks = np.arange(8, dtype=np.int32)              # exactly 2 blocks
+    al.allocate_prefix(0, toks)
+    al.allocate_prefix(1, toks)
+    al.reserve_tokens(0, 8)
+    al.commit_tokens(0, 8)
+    al.register_prefix(0, toks, 8)
+    assert al.extend_prefix(1, toks) == 4            # second block withheld
+    assert al.seq_len(1) == 4
+
+
+def test_engine_same_wave_dedup_shares_blocks(disagg_ref):
+    """Two same-prompt requests admitted in one wave share prefix blocks:
+    the second adopts blocks as the first publishes them mid-prefill."""
+    cfg, model, params = disagg_ref["build"]
+    prompt = disagg_ref["rng"]().integers(0, cfg.vocab_size, (20,),
+                                          dtype=np.int32)
+    serve = ServeConfig(model=cfg.name, kv_block_size=4, max_batch=2,
+                        prefill_chunk=8)
+    eng = ServingEngine(model, params, cfg, serve, num_blocks=32)
+    eng.submit(Request(req_id=0, prompt=prompt, max_new_tokens=4))
+    eng.submit(Request(req_id=1, prompt=prompt, max_new_tokens=4))
+    eng.run_until_done()
+    outs = {r.req_id: r.output for r in eng.finished}
+    assert outs[0] == outs[1]
+    m = eng.metrics()
+    assert m["prefix_hits"] > 0                      # dedup actually fired
+    assert m["blocks_free"] == 32
+
+
+# ----------------------------------------------------------------- host tier
+def _tiered_alloc(num_blocks=2, host=4):
+    return BlockAllocator(
+        num_blocks=num_blocks, block_size=4,
+        eviction_policy=policy.resolve("eviction", "tiered"),
+        host_pool=HostPool(host))
+
+
+def _cache_prefix(al, toks, rid):
+    al.allocate_prefix(rid, toks)
+    al.reserve_tokens(rid, len(toks))
+    al.commit_tokens(rid, len(toks))
+    al.register_prefix(rid, toks, len(toks))
+    blk = al.table(rid)[0]
+    al.free(rid)
+    return blk
+
+
+def test_tiered_demote_gate_drops_cold_keeps_warm():
+    """The registered ``tiered`` policy demotes blocks with reuse evidence
+    (hits or sharing) and drops never-reused ones."""
+    al = _tiered_alloc()
+    hot = np.arange(4, dtype=np.int32)
+    cold = np.arange(100, 104, dtype=np.int32)
+    _cache_prefix(al, hot, 0)
+    _cache_prefix(al, cold, 1)
+    assert al.allocate_prefix(2, np.concatenate([hot, hot[:1]])) == 4  # hit
+    al.free(2)
+    al.allocate(3, 8)                       # evicts both cached prefixes
+    pol = al.eviction_policy
+    assert pol.counters["dropped"] == 1     # cold: no evidence -> dropped
+    assert pol.counters["demoted"] == 1     # hot: hit evidence -> demoted
+    assert len(al.host_pool) == 1
+    ops = al.drain_tier_ops()
+    assert [op[0] for op in ops] == ["demote"]
+
+
+def test_demote_promote_round_trip_preserves_stats_and_refcounts():
+    al = _tiered_alloc()
+    hot = np.arange(4, dtype=np.int32)
+    blk = _cache_prefix(al, hot, 0)
+    al.allocate_prefix(1, np.concatenate([hot, hot[:1]]))      # hit: hits=1
+    al.free(1)
+    al.allocate(2, 8)                       # demote hot to host
+    al.free(2)
+    assert hot.tobytes() and len(al.host_pool) == 1
+    assert al.peek_prefix(np.concatenate([hot, hot[:1]])) == 0  # HBM miss
+    cached = al.allocate_prefix(3, np.concatenate([hot, hot[:1]]))
+    assert cached == 4                      # promoted from the host tier
+    new = al.table(3)[0]
+    assert al.ref_count(new) == 1
+    assert al.written(new) == al.block_size
+    assert al.block_stats(new).hits >= 2    # pre-demotion evidence survived
+    ops = al.drain_tier_ops()
+    assert [op[0] for op in ops] == ["demote", "promote"]      # ordered
+    assert ops[0][1] is ops[1][1]           # same HostBlock entry round-trips
+    assert al.host_pool.counters["promotes"] == 1
+    al.free(3)
+    assert al.num_free == al.num_blocks
+
+
+def test_promote_rolls_back_when_hbm_pool_cannot_yield():
+    al = _tiered_alloc(num_blocks=2)
+    hot = np.arange(4, dtype=np.int32)
+    _cache_prefix(al, hot, 0)
+    al.allocate_prefix(1, np.concatenate([hot, hot[:1]]))
+    al.free(1)
+    al.allocate(2, 8)                       # hot demoted, pool fully live
+    assert len(al.host_pool) == 1
+    with pytest.raises(OutOfBlocksError):   # promote fails, then cold start
+        al.allocate_prefix(3, np.concatenate([hot, hot[:1]]))
+    assert len(al.host_pool) == 1           # untake restored the entry
+    assert al.host_pool.counters["promotes"] == 0
+
+
+def test_host_pool_lru_drops_oldest_past_capacity():
+    hp = HostPool(2)
+    a, b, c = (bytes([i]) * 16 for i in range(3))
+    hp.put(a, BlockStats())
+    hp.put(b, BlockStats())
+    hp.put(c, BlockStats())
+    assert len(hp) == 2 and a not in hp and b in hp and c in hp
+    assert hp.counters["drops"] == 1
+    assert hp.take(a) is None
+
+
+def test_engine_tier_round_trip_bit_identical(disagg_ref):
+    """A prefix fully demoted to host and promoted back yields the same
+    greedy stream as the unpressured engine — KV content survives the
+    device->host->device round-trip."""
+    cfg, model, params = disagg_ref["build"]
+    rng = disagg_ref["rng"]()
+    prompt = rng.integers(0, cfg.vocab_size, (17,), dtype=np.int32)
+    filler = rng.integers(0, cfg.vocab_size, (17,), dtype=np.int32)
+
+    def run(num_blocks, host_blocks, rounds):
+        serve = ServeConfig(model=cfg.name, kv_block_size=4, max_batch=1,
+                            eviction="tiered", host_blocks=host_blocks)
+        eng = ServingEngine(model, params, cfg, serve, num_blocks=num_blocks)
+        outs = []
+        for i, p in enumerate(rounds):
+            eng.submit(Request(req_id=i, prompt=p, max_new_tokens=4))
+            eng.run_until_done()
+            outs.append(eng.finished[-1].output)
+        return outs, eng
+
+    # ample pool, no pressure: the reference streams
+    ref, _ = run(64, 8, [prompt, prompt, filler, prompt])
+    # starved pool: prompt's blocks earn a hit (round 2), get demoted by the
+    # filler (round 3), and must promote back for round 4
+    outs, eng = run(7, 8, [prompt, prompt, filler, prompt])
+    assert outs == ref
+    hp = eng.host_pool
+    assert hp.counters["demotes"] > 0 and hp.counters["promotes"] > 0
+    m = eng.metrics()
+    assert m["tier"]["host_blocks"] == 8
+    assert m["policy_counters"]["tier.promotes"] == hp.counters["promotes"]
+    assert m["blocks_free"] == 7            # no leak under tier traffic
+
+
+def test_host_tier_rejected_on_sharded_engine(disagg_ref):
+    cfg, model, params = disagg_ref["build"]
+    serve = ServeConfig(model=cfg.name, kv_block_size=4, max_batch=1,
+                        devices=2, host_blocks=4)
+    with pytest.raises(ValueError):
+        ServingEngine(model, params, cfg, serve, num_blocks=8)
+
+
+# ------------------------------------------------------------ disagg engine
+@pytest.fixture(scope="module")
+def disagg_ref():
+    """Shared model + the monolithic reference outputs for the parity sweep."""
+    import jax
+    from repro.models.api import build_model
+
+    cfg = get_config("smollm-360m").reduced(dtype="float32")
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def rng():
+        return np.random.default_rng(0)
+
+    def requests(n=4, lo=12, hi=25, max_new=5):
+        r = np.random.default_rng(3)
+        shared = r.integers(0, cfg.vocab_size, (8,), dtype=np.int32)
+        out = []
+        for i in range(n):
+            tail = r.integers(0, cfg.vocab_size,
+                              (int(r.integers(lo, hi)),), dtype=np.int32)
+            prompt = np.concatenate([shared, tail]) if i % 2 else tail
+            out.append(Request(req_id=i, prompt=prompt,
+                               max_new_tokens=max_new))
+        return out
+
+    serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=2)
+    eng = ServingEngine(model, params, cfg, serve, num_blocks=64)
+    for q in requests():
+        eng.submit(q)
+    eng.run_until_done()
+    outputs = {q.req_id: q.output for q in eng.finished}
+    assert len(outputs) == 4
+    return {"build": (cfg, model, params), "requests": requests,
+            "outputs": outputs, "rng": rng}
+
+
+def _run_disagg(disagg_ref, serve_kw, engine_kw=None, requests_kw=None):
+    cfg, model, params = disagg_ref["build"]
+    serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=2,
+                        roles="prefill,decode", **serve_kw)
+    eng = DisaggEngine(model, params, cfg, serve, num_blocks=64,
+                       **(engine_kw or {}))
+    for q in disagg_ref["requests"](**(requests_kw or {})):
+        eng.submit(q)
+    eng.run_until_done()
+    return {q.req_id: q.output for q in eng.finished}, eng
+
+
+def test_disagg_matches_monolithic_and_leaks_nothing(disagg_ref):
+    outs, eng = _run_disagg(disagg_ref, {})
+    assert outs == disagg_ref["outputs"]
+    assert eng.num_handoffs > 0
+    assert eng.pre.alloc.num_free == eng.pre.alloc.num_blocks
+    assert eng.dec.alloc.num_free == eng.dec.alloc.num_blocks
+    assert not eng._staged and not eng._pending_handoffs
+
+
+def test_disagg_interleave_ratio_does_not_change_outputs(disagg_ref):
+    for k in (1, 7):
+        outs, _ = _run_disagg(disagg_ref, {},
+                              engine_kw={"decode_steps_per_step": k})
+        assert outs == disagg_ref["outputs"], f"ratio {k} diverged"
+
+
+def test_disagg_routes_sub_block_prompts_direct(disagg_ref):
+    outs, eng = _run_disagg(disagg_ref, {},
+                            requests_kw={"lo": 3, "hi": 6, "n": 2})
+    assert eng.num_direct > 0               # tail-only prompts skip prefill
+    assert len(outs) == 2
+
+
+def test_disagg_submit_validation(disagg_ref):
+    cfg, model, params = disagg_ref["build"]
+    serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=2,
+                        roles="prefill,decode")
+    eng = DisaggEngine(model, params, cfg, serve, num_blocks=64)
+    with pytest.raises(ValueError):
+        eng.submit(Request(req_id=-1, prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=1))
+    eng.submit(Request(req_id=0, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=1))
+    with pytest.raises(ValueError):         # duplicate id
+        eng.submit(Request(req_id=0, prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=1))
+    big = np.zeros((8 * 70,), np.int32)     # stages more than the pool
+    with pytest.raises(ValueError):
+        eng.submit(Request(req_id=1, prompt=big, max_new_tokens=1))
+    with pytest.raises(ValueError):
+        parse_roles("prefill,prefill")
+    assert parse_roles("split") == ("prefill", "decode")
+    assert parse_roles("") == ()
+
+
+def test_disagg_metrics_attribution(disagg_ref):
+    outs, eng = _run_disagg(disagg_ref, {"eviction": "tiered",
+                                         "host_blocks": 8})
+    m = eng.metrics()
+    assert m["role"] == "prefill,decode"
+    assert set(m["roles"]) == {"prefill", "decode"}
+    assert m["roles"]["prefill"]["prefills_completed"] == m["handoffs"] > 0
+    assert m["roles"]["prefill"]["tier"]["host_blocks"] == 8
+    assert m["handoff_ms"]["n"] == m["handoffs"]
+    assert m["handoff_ms"]["p99"] >= 0
+    for k in ("tier.demotes", "tier.promotes", "tier.prefill.demotes"):
+        assert k in m["policy_counters"], k
+    assert m["tier"]["hbm_blocks"] == 64
+
+
+@pytest.mark.slow       # one disagg engine run per (triple, spec, overlap)
+@pytest.mark.parametrize(
+    "eviction,spec,overlap",
+    [(e, s, o) for e in ("lru", "hit-rate", "refcount-aware", "tiered")
+     for s in ("off", "ngram") for o in (False, True)],
+    ids=lambda v: str(v).lower())
+def test_disagg_parity_sweep(disagg_ref, eviction, spec, overlap):
+    """Acceptance: greedy streams stay bit-identical to the monolithic
+    engine across eviction policies x spec off/ngram x overlap on/off (the
+    host tier rides along whenever the tiered policy is under test)."""
+    kw = {"eviction": eviction, "spec": spec, "overlap": overlap}
+    if eviction == "tiered":
+        kw["host_blocks"] = 8
+    outs, eng = _run_disagg(disagg_ref, kw)
+    assert outs == disagg_ref["outputs"], f"{kw} diverged"
+    assert eng.dec.alloc.num_free == eng.dec.alloc.num_blocks
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("admission,preemption",
+                         [("priority", "latest-arrival"),
+                          ("fcfs", "most-blocks"),
+                          ("deadline-slo", "fewest-remaining-tokens")])
+def test_disagg_parity_other_axes(disagg_ref, admission, preemption):
+    outs, _ = _run_disagg(disagg_ref, {"admission": admission,
+                                       "preemption": preemption})
+    assert outs == disagg_ref["outputs"]

@@ -15,7 +15,7 @@ from repro.serving.scheduler import Scheduler
 SHIPPED = {
     "admission": {"fcfs", "priority", "deadline-slo"},
     "preemption": {"latest-arrival", "fewest-remaining-tokens", "most-blocks"},
-    "eviction": {"lru", "hit-rate", "refcount-aware"},
+    "eviction": {"lru", "hit-rate", "refcount-aware", "tiered"},
 }
 
 
@@ -216,6 +216,28 @@ def test_refcount_aware_eviction_keeps_once_shared_block():
     al.allocate(3, 4)
     assert al.peek_prefix(hot) == 3             # never-shared cold evicted
     assert al.peek_prefix(cold) == 0
+
+
+def test_tiered_eviction_selects_coldest_and_gates_demotion():
+    """``tiered`` is a registered policy like any other: select() evicts the
+    block with the least reuse evidence; without a HostPool attached the
+    demote hook is inert, with one it keeps blocks that earned hits or were
+    shared and drops the rest (tests/test_disagg.py covers the tier)."""
+    al = BlockAllocator(num_blocks=2, block_size=4,
+                        eviction_policy=policy.resolve("eviction", "tiered"))
+    hot, cold, hot_blk, cold_blk = _cache_two_prefixes(al)
+    assert al.allocate_prefix(2, hot) == 3      # hot earns a hit
+    al.free(2)
+    al.free(0)
+    al.free(1)
+    al.allocate(3, 4)                           # cold (0 hits) evicted first
+    assert al.peek_prefix(hot) == 3
+    assert al.peek_prefix(cold) == 0
+    pol = al.eviction_policy
+    assert pol.counters["evictions"] == 1
+    assert "demoted" not in pol.counters        # no host pool -> hook unused
+    base = policy.resolve("eviction", "lru")
+    assert base.demote(0, {}) is True           # base hook: always demote
 
 
 def test_stats_reset_when_block_repurposed():

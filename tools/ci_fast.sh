@@ -184,3 +184,121 @@ for spec in ("off", "ngram"):
 print("overlap smoke OK: bit-identical streams, spec off+ngram, "
       "attribution reported")
 PY
+
+# Disaggregated-serving smoke: 2 forced host devices so the prefill and
+# decode roles pin to separate devices, the same deterministic greedy
+# workload through the monolithic engine and the two-role DisaggEngine
+# (docs/disaggregated.md: prompts prefill on one engine, full KV blocks
+# hand off through the allocator's reserve/commit API, decode runs on the
+# other) with a host KV tier under the registered `tiered` eviction policy.
+# Asserts BIT-IDENTICAL greedy streams, real handoffs and host-tier traffic
+# (demotes + promotes on a starved pool), leak-free pools on BOTH roles,
+# and the metrics attribution contract: per-role sections, handoff latency
+# percentiles, and tier counters flattened beside the policy counters.
+XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+REPRO_BACKEND=ref \
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python - <<'PY'
+import numpy as np, jax
+from repro.config import ServeConfig, get_config
+from repro.models.api import build_model
+from repro.serving.disagg import DisaggEngine
+from repro.serving.engine import Request, ServingEngine
+
+cfg = get_config("smollm-360m").reduced(dtype="float32")
+model = build_model(cfg, remat=False)
+params = model.init(jax.random.PRNGKey(0))
+
+def requests():
+    rng = np.random.default_rng(0)
+    return [Request(
+        req_id=i,
+        prompt=rng.integers(0, cfg.vocab_size,
+                            (int(rng.integers(12, 25)),), dtype=np.int32),
+        max_new_tokens=5) for i in range(3)]
+
+serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=2)
+mono = ServingEngine(model, params, cfg, serve, num_blocks=64)
+for r in requests():
+    mono.submit(r)
+mono.run_until_done()
+ref = {r.req_id: list(r.output) for r in mono.finished}
+
+devs = jax.devices()
+assert len(devs) == 2, devs
+serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=2,
+                    roles="prefill,decode", eviction="tiered", host_blocks=8)
+eng = DisaggEngine(model, params, cfg, serve, num_blocks=64,
+                   devices=(devs[0], devs[1]))
+for r in requests():
+    eng.submit(r)
+eng.run_until_done()
+split = {r.req_id: list(r.output) for r in eng.finished}
+assert split == ref, (split, ref)
+m = eng.metrics()
+assert m["handoffs"] == 3 and m["handoff_ms"]["n"] == 3, m["handoffs"]
+assert m["roles"]["prefill"]["prefills_completed"] == 3, m["roles"]
+assert m["roles"]["decode"]["finished"] == 3, m["roles"]
+assert m["handoff_ms"]["p99"] >= 0, m["handoff_ms"]
+for k in ("tier.demotes", "tier.promotes", "tier.prefill.demotes"):
+    assert k in m["policy_counters"], (k, sorted(m["policy_counters"]))
+assert eng.pre.alloc.num_free == eng.pre.alloc.num_blocks, "prefill leak"
+assert eng.dec.alloc.num_free == eng.dec.alloc.num_blocks, "decode leak"
+
+# host-tier traffic on a starved decode pool: recurring prefixes earn hits,
+# demote under pressure, and promote back on the next recurrence
+serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=1,
+                    eviction="tiered", host_blocks=12)
+tier = ServingEngine(model, params, cfg, serve, num_blocks=7)
+rng = np.random.default_rng(1)
+prompts = [rng.integers(0, cfg.vocab_size, (24,), dtype=np.int32)
+           for _ in range(3)]
+rid = 0
+for _ in range(2):
+    for p in prompts:
+        for _ in range(2):
+            tier.submit(Request(req_id=rid, prompt=p, max_new_tokens=4))
+            rid += 1
+        tier.run_until_done()
+hp = tier.host_pool
+assert hp.counters["demotes"] > 0 and hp.counters["promotes"] > 0, hp.counters
+mt = tier.metrics()
+assert mt["tier"]["host_blocks"] == 12, mt["tier"]
+assert mt["policy_counters"]["tier.promotes"] == hp.counters["promotes"], mt
+assert tier.alloc.num_free == tier.alloc.num_blocks, "tier leak"
+print(f"disagg smoke OK: 2 roles on 2 devices, {m['handoffs']} handoffs "
+      f"bit-identical; host tier demotes={hp.counters['demotes']} "
+      f"promotes={hp.counters['promotes']}")
+PY
+
+# Disagg-benchmark smoke: the bursty + memory-pressure scenarios at minimum
+# sizes through benchmarks/run.py, checking the JSON attribution contract —
+# every row carries roles=/tier=, the split row reports nonzero handoffs,
+# and the tiered row's prefix hit rate beats HBM-only at the same HBM pool.
+DISAGG_SMOKE_JSON="$(mktemp /tmp/disagg_smoke.XXXXXX.json)"
+trap 'rm -f "$POLICY_SMOKE_JSON" "$SPEC_SMOKE_JSON" "$DISAGG_SMOKE_JSON"' EXIT
+REPRO_BENCH_SMOKE=1 REPRO_BACKEND=ref \
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run --only disagg \
+    --json "$DISAGG_SMOKE_JSON" >/dev/null
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python - "$DISAGG_SMOKE_JSON" <<'PY'
+import json, sys
+
+(res,) = json.load(open(sys.argv[1]))
+rows = {r["name"]: dict(kv.split("=", 1) for kv in r["derived"].split(";"))
+        for r in res["rows"]}
+for name, d in rows.items():
+    assert "roles" in d and "tier" in d, (name, sorted(d))
+split = rows["llm_disagg_burst_split_n4"]
+assert split["roles"] == "prefill+decode" and int(split["handoffs"]) > 0, split
+assert split["finished"] == rows["llm_disagg_burst_mono_n4"]["finished"]
+hbm = rows["llm_tier_pressure_hbm_only_r2"]
+tiered = rows["llm_tier_pressure_tiered_r2"]
+assert hbm["tier"].split("+")[0] == tiered["tier"].split("+")[0]  # equal HBM
+assert int(tiered["promotes"]) > 0 and int(tiered["tier_hits"]) > 0, tiered
+assert float(tiered["prefix_hit_rate"]) > float(hbm["prefix_hit_rate"]), (
+    tiered["prefix_hit_rate"], hbm["prefix_hit_rate"])
+print(f"disagg bench smoke OK: handoffs={split['handoffs']}, hit rate "
+      f"{hbm['prefix_hit_rate']} -> {tiered['prefix_hit_rate']} with host tier")
+PY
