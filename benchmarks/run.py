@@ -292,11 +292,17 @@ def main() -> None:
                 resolved_pol = _resolved_triple(plog) if plog else None
                 resolved_spec = (sorted(set(slog))[0]
                                  if len(set(slog)) == 1 else None)
+                # sanitize attribution: REPRO_SANITIZE=1 rows ran under the
+                # runtime guards (retrace/host-sync/allocator) — stamped per
+                # row like policy/spec so guarded and unguarded sweeps are
+                # distinguishable in one JSON
+                sanitized = os.environ.get("REPRO_SANITIZE") == "1"
                 results.append({
                     "module": m,
                     "requested_backend": b or "auto",
                     "requested_policy": pol_str or "default",
                     "requested_spec": spc or "default",
+                    "sanitize": sanitized,
                     "resolved": sorted({f"{op}={bk}" for op, bk in log}),
                     "resolved_policies": sorted(
                         {f"{ax}={nm}" for ax, nm in plog}),
@@ -308,6 +314,7 @@ def main() -> None:
                         r["policy"] = resolved_pol
                     if resolved_spec:
                         r["spec"] = resolved_spec
+                    r["sanitize"] = sanitized
                 print(f"# {m} done in {time.time()-t0:.1f}s"
                       + (f" [backend={b}]" if b else "")
                       + (f" [policy={pol_str}]" if pol_str else "")

@@ -38,9 +38,10 @@ from repro.serving.engine import Request, ServingEngine
 
 
 def _saturated_engine(model, params, cfg, *, overlap: bool, n_req: int,
-                      max_batch: int, num_blocks: int) -> ServingEngine:
+                      max_batch: int, num_blocks: int,
+                      sanitize: bool = False) -> ServingEngine:
     serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=max_batch,
-                        overlap=overlap)
+                        overlap=overlap, sanitize=sanitize)
     eng = ServingEngine(model, params, cfg, serve, num_blocks=num_blocks)
     rng = np.random.default_rng(0)          # same wave for both passes
     for i in range(n_req):
@@ -64,6 +65,8 @@ def _emit_saturation(tag: str, eng: ServingEngine, dt: float) -> None:
          f"finished={m['finished']};"
          f"overlap={str(m['overlap']).lower()};"
          f"prefetch_depth={m['prefetch_depth']};"
+         f"sanitize={str(m['sanitize']['enabled']).lower()};"
+         f"retraces={m['sanitize']['retraces']};"
          f"backend={m['backend']}")
 
 
@@ -124,12 +127,22 @@ def run(quick: bool = True) -> None:
     n_req = 6 if smoke else (12 if quick else 48)
     max_batch = 2
     num_blocks = 24
+    # REPRO_SANITIZE=1: run the saturation wave under the runtime guards and
+    # ASSERT the steady-state contract — zero retraces and zero host-sync
+    # trips across the whole saturated run (the retrace-guard assertion of
+    # docs/static_analysis.md; ci_fast.sh's sanitized smoke relies on it).
+    sanitize = os.environ.get("REPRO_SANITIZE") == "1"
     for overlap in (False, True):
         eng = _saturated_engine(model, params, cfg, overlap=overlap,
                                 n_req=n_req, max_batch=max_batch,
-                                num_blocks=num_blocks)
+                                num_blocks=num_blocks, sanitize=sanitize)
         t0 = time.time()
         eng.run_until_done()
+        if sanitize:
+            san = eng.metrics()["sanitize"]
+            assert san["retraces"] == 0, san
+            assert san["transfer_guard_trips"] == 0, san
+            assert san["invariant_checks"] > 0, san
         _emit_saturation(
             f"llm_saturation_overlap_{'on' if overlap else 'off'}",
             eng, time.time() - t0)

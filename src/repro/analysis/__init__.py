@@ -1,0 +1,20 @@
+"""Correctness tooling: static architectural lint + runtime sanitizers.
+
+Two layers (docs/static_analysis.md):
+
+* :mod:`repro.analysis.lint` — an AST-based linter whose rules encode the
+  repo's architectural contracts (allocator privacy, single-registry
+  dispatch, op/parity enrollment, tunable reachability, Pallas DMA pairing,
+  no wall-clock in device code).  ``python -m repro.analysis.lint`` exits
+  nonzero with ``file:line`` findings; ``tools/ci_fast.sh`` gates on it.
+* :mod:`repro.analysis.sanitize` — runtime sanitizers behind the single
+  ``ServeConfig.sanitize`` switch: retrace guard (zero steady-state
+  recompiles across the engine step loop), host-sync guard (no device→host
+  reads inside the overlap build half outside an explicit allowlist) and
+  the allocator invariant checker
+  (:meth:`repro.core.paged_kv.BlockAllocator.check_invariants`).
+
+Both are import-light on purpose: the linter imports nothing but the
+standard library (CI can run it before the heavyweight test tier), and the
+sanitizers import jax only.
+"""

@@ -1,0 +1,248 @@
+"""AST-based architectural linter (``python -m repro.analysis.lint``).
+
+The repo's load-bearing contracts — allocator state is mutated only through
+its public API, backend choice flows only through ``core/dispatch.py``,
+every op family is parity-enrolled, every registry tunable is reachable from
+``ServeConfig`` and the launcher, every started Pallas DMA is waited, device
+code reads no wall clock — have each been hand-fixed at least once.  This
+module enforces them by machine: rules are registered in a strict named
+registry (mirroring the ``repro.core.dispatch`` idiom — decorator
+registration, duplicate rejection, strict lookup, enumerable), each rule
+walks pre-parsed module ASTs and yields :class:`Finding` records, and the
+CLI exits nonzero when any finding survives.
+
+The linter imports only the standard library, so CI can gate on it before
+paying for a jax import.  Rules live in :mod:`repro.analysis.rules`; see
+docs/static_analysis.md for the catalog and how to add one.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import json
+import os
+import sys
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+__all__ = ["Finding", "LintRule", "LintContext", "Module", "rule",
+           "get_rule", "list_rules", "run_lint", "main",
+           "DuplicateRuleError", "UnknownRuleError"]
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a source location."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclass(frozen=True)
+class Module:
+    """One parsed source file handed to every rule."""
+
+    path: str          # as discovered (repo-relative when linting the repo)
+    tree: ast.Module
+    text: str
+
+    def rel(self, *suffixes: str) -> bool:
+        """True iff this module's path ends with any of ``suffixes``
+        (path-separator aware, so "core/paged_kv.py" never matches
+        "not_core/paged_kv.py")."""
+        norm = self.path.replace(os.sep, "/")
+        return any(norm == s or norm.endswith("/" + s) for s in suffixes)
+
+
+class LintContext:
+    """Everything a rule may inspect: the linted modules plus the repo
+    files cross-file rules consult (the parity suite, by default the
+    sibling ``tests/`` directory of the linted root)."""
+
+    def __init__(self, modules: Sequence[Module],
+                 tests_dir: Optional[str] = None):
+        self.modules = list(modules)
+        self.tests_dir = tests_dir
+
+    def module(self, *suffixes: str) -> Optional[Module]:
+        for mod in self.modules:
+            if mod.rel(*suffixes):
+                return mod
+        return None
+
+    def read_test(self, name: str) -> Optional[str]:
+        """Source text of ``tests_dir/name`` (None when absent)."""
+        if self.tests_dir is None:
+            return None
+        path = os.path.join(self.tests_dir, name)
+        try:
+            with open(path, encoding="utf-8") as f:
+                return f.read()
+        except OSError:
+            return None
+
+
+# ---------------------------------------------------------------------------
+# Rule registry (the dispatch.py idiom: named, decorator-registered, strict)
+# ---------------------------------------------------------------------------
+class DuplicateRuleError(ValueError):
+    pass
+
+
+class UnknownRuleError(KeyError):
+    pass
+
+
+@dataclass(frozen=True)
+class LintRule:
+    name: str
+    doc: str
+    check: Callable[[LintContext], Iterable[Finding]]
+
+    def __call__(self, ctx: LintContext) -> List[Finding]:
+        return list(self.check(ctx) or [])
+
+
+_RULES: Dict[str, LintRule] = {}
+
+
+def rule(name: str) -> Callable:
+    """Register a lint rule under ``name`` (strict: duplicates raise).
+
+    The decorated callable takes a :class:`LintContext` and yields
+    :class:`Finding`s; its first docstring line is the catalog entry."""
+
+    def deco(fn: Callable[[LintContext], Iterable[Finding]]) -> LintRule:
+        if name in _RULES:
+            raise DuplicateRuleError(f"lint rule {name!r} already registered")
+        doc = (fn.__doc__ or "").strip().splitlines()
+        r = LintRule(name=name, doc=doc[0] if doc else "", check=fn)
+        _RULES[name] = r
+        return r
+
+    return deco
+
+
+def _ensure_registered() -> None:
+    """Import every rule-registering module (the dispatch idiom: the
+    registry is populated by imports, consumers never hand-maintain it)."""
+    from repro.analysis import rules  # noqa: F401  (registers on import)
+
+
+def get_rule(name: str) -> LintRule:
+    _ensure_registered()
+    if name not in _RULES:
+        raise UnknownRuleError(
+            f"unknown lint rule {name!r}; have {sorted(_RULES)}")
+    return _RULES[name]
+
+
+def list_rules() -> List[LintRule]:
+    _ensure_registered()
+    return [_RULES[k] for k in sorted(_RULES)]
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+def _collect(paths: Sequence[str]) -> List[Module]:
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                files.extend(os.path.join(root, n) for n in sorted(names)
+                             if n.endswith(".py"))
+        elif p.endswith(".py"):
+            files.append(p)
+    modules = []
+    for path in sorted(set(files)):
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        try:
+            tree = ast.parse(text, filename=path)
+        except SyntaxError as e:
+            # a file the linter cannot parse is itself a finding — surface
+            # it through a synthetic rule name instead of crashing the run
+            _SYNTAX_ERRORS.append(Finding(
+                rule="syntax", path=path, line=e.lineno or 1,
+                message=f"unparseable: {e.msg}"))
+            continue
+        modules.append(Module(path=path, tree=tree, text=text))
+    return modules
+
+
+_SYNTAX_ERRORS: List[Finding] = []
+
+
+def run_lint(paths: Sequence[str], tests_dir: Optional[str] = "tests",
+             rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint ``paths`` (files or directory roots) with every registered rule
+    (or the named subset) and return the findings, stably ordered."""
+    _ensure_registered()
+    _SYNTAX_ERRORS.clear()
+    ctx = LintContext(_collect(paths), tests_dir=tests_dir)
+    selected = ([get_rule(n) for n in rules] if rules is not None
+                else list_rules())
+    findings = list(_SYNTAX_ERRORS)
+    for r in selected:
+        findings.extend(r(ctx))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Repo-specific architectural linter; exits nonzero "
+                    "when any rule finds a violation.")
+    p.add_argument("paths", nargs="*", default=None,
+                   help="files or directories to lint (default: src/)")
+    p.add_argument("--tests-dir", default="tests",
+                   help="directory the cross-file rules consult for the "
+                        "parity suite (default: tests)")
+    p.add_argument("--rules", default=None,
+                   help="comma-separated rule subset (default: all)")
+    p.add_argument("--json", action="store_true",
+                   help="emit findings as a JSON array on stdout")
+    p.add_argument("--list", action="store_true",
+                   help="print the rule catalog and exit")
+    args = p.parse_args(argv)
+    if args.list:
+        for r in list_rules():
+            print(f"{r.name}: {r.doc}")
+        return 0
+    paths = args.paths or ["src"]
+    rules_sel = ([s.strip() for s in args.rules.split(",") if s.strip()]
+                 if args.rules else None)
+    try:
+        findings = run_lint(paths, tests_dir=args.tests_dir, rules=rules_sel)
+    except UnknownRuleError as e:
+        print(e, file=sys.stderr)
+        return 2
+    if args.json:
+        print(json.dumps([dataclasses.asdict(f) for f in findings],
+                         indent=2))
+    else:
+        for f in findings:
+            print(f.format())
+    if findings:
+        print(f"{len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    if not args.json:
+        print(f"lint OK: {len(list_rules())} rules clean on "
+              f"{', '.join(paths)}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    # delegate to the canonical module object: under ``python -m`` this file
+    # runs as ``__main__`` with its own registry, while the rules module
+    # registers into ``repro.analysis.lint``
+    from repro.analysis.lint import main as _main
+    raise SystemExit(_main())

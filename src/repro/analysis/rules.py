@@ -1,0 +1,345 @@
+"""The repo's architectural lint rules (registered on import).
+
+Each rule encodes one contract this codebase has already paid to learn
+(docs/static_analysis.md lists the incident behind each).  Rules are pure
+AST walks over :class:`~repro.analysis.lint.LintContext` — no imports of
+the code under analysis, so a broken tree still lints.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from collections import Counter
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.lint import Finding, LintContext, Module, rule
+
+# The allocator/pool owners whose private attributes are API-sealed: an
+# expression whose final path component is one of these names (``alloc``,
+# ``self.alloc``, ``eng.alloc``, ``pre_alloc``, ``host_pool``...) is treated
+# as a BlockAllocator / HostPool handle.
+_ALLOC_EXPR = re.compile(r"(?:^|[._])(?:alloc|allocator|host_pool)$")
+_ALLOC_OWNER = ("core/paged_kv.py",)
+
+# Host wall-clock / ambient-randomness call prefixes banned in device code
+# (jax.random is fine — it is a functional PRNG keyed by traced state).
+_WALLCLOCK_PREFIXES = ("time.", "datetime.", "np.random.", "numpy.random.",
+                      "random.")
+
+
+def _unparse(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:           # pragma: no cover - malformed subtree
+        return ""
+
+
+@rule("allocator-privacy")
+def check_allocator_privacy(ctx: LintContext) -> Iterable[Finding]:
+    """No private ``BlockAllocator``/``HostPool`` attribute access outside
+    ``core/paged_kv.py``.
+
+    Sequence state (``_tables``/``_lens``/``_ref``/``_free``/...) is mutated
+    only through the public allocate/reserve/commit/truncate/free API — the
+    reserve/commit/truncate triple is the speculative-rollback primitive and
+    the disagg handoff contract, and both break silently if an engine pokes
+    the dicts directly.
+    """
+    for mod in ctx.modules:
+        if mod.rel(*_ALLOC_OWNER):
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            attr = node.attr
+            if not attr.startswith("_") or attr.startswith("__"):
+                continue
+            base = _unparse(node.value)
+            if base and _ALLOC_EXPR.search(base):
+                yield Finding(
+                    rule="allocator-privacy", path=mod.path,
+                    line=node.lineno,
+                    message=f"private allocator state {base}.{attr} accessed "
+                            f"outside core/paged_kv.py — use the public "
+                            f"allocate/reserve/commit/truncate/free API")
+
+
+@rule("backend-conditional")
+def check_backend_conditional(ctx: LintContext) -> Iterable[Finding]:
+    """No ad-hoc ``if backend == "..."`` dispatch outside
+    ``core/dispatch.py``.
+
+    Backend choice flows through ONE registry (capability predicates +
+    precedence chain); a string comparison against a backend name anywhere
+    else reintroduces the double dispatch PR 2 removed.
+    """
+    for mod in ctx.modules:
+        if mod.rel("core/dispatch.py"):
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            sides = [node.left] + list(node.comparators)
+            named = any(
+                (isinstance(s, ast.Name)
+                 and (s.id == "backend" or s.id.endswith("_backend")))
+                or (isinstance(s, ast.Attribute) and s.attr == "backend")
+                for s in sides)
+            literal = any(isinstance(s, ast.Constant)
+                          and isinstance(s.value, str) for s in sides)
+            if named and literal:
+                yield Finding(
+                    rule="backend-conditional", path=mod.path,
+                    line=node.lineno,
+                    message=f"ad-hoc backend dispatch "
+                            f"`{_unparse(node)}` — route the choice through "
+                            f"repro.core.dispatch (resolve/force_backend)")
+
+
+def _op_declarations(mod: Module) -> List[Tuple[str, Optional[str],
+                                                ast.Call]]:
+    """(family_name, bound_variable, call_node) for every ``dispatch.op``
+    declaration in a module (``_FAM = dispatch.op("name", ...)``)."""
+    out = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        call = node.value
+        if not (isinstance(call, ast.Call)
+                and isinstance(call.func, ast.Attribute)
+                and call.func.attr == "op"
+                and _unparse(call.func).endswith("dispatch.op")):
+            continue
+        if not (call.args and isinstance(call.args[0], ast.Constant)
+                and isinstance(call.args[0].value, str)):
+            continue
+        var = (node.targets[0].id
+               if node.targets and isinstance(node.targets[0], ast.Name)
+               else None)
+        out.append((call.args[0].value, var, call))
+    return out
+
+
+def _registered_backends(mod: Module) -> Dict[str, Set[str]]:
+    """variable -> backend names registered on it
+    (``@_FAM.register("ref")`` and ``_FAM.register("ref")(fn)`` forms)."""
+    regs: Dict[str, Set[str]] = {}
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "register"
+                and isinstance(node.func.value, ast.Name)):
+            continue
+        var = node.func.value.id
+        if not node.args:
+            continue
+        arg = node.args[0]
+        if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+            regs.setdefault(var, set()).add(arg.value)
+        elif isinstance(arg, ast.Attribute):    # dispatch.REF etc.
+            regs.setdefault(var, set()).add(arg.attr.lower())
+    return regs
+
+
+@rule("op-ref-parity")
+def check_op_ref_parity(ctx: LintContext) -> Iterable[Finding]:
+    """Every registered op family ships a ``ref`` impl, an ``example``
+    factory, and is enrolled in ``tests/test_backend_parity.py``.
+
+    The parity suite parametrizes FROM the registry, so enrollment means
+    either the suite enumerates ``dispatch.list_ops()`` (every family rides
+    automatically) or it names the family explicitly.
+    """
+    parity_text = ctx.read_test("test_backend_parity.py")
+    registry_driven = bool(parity_text) and "list_ops" in parity_text
+    for mod in ctx.modules:
+        regs = _registered_backends(mod)
+        for name, var, call in _op_declarations(mod):
+            if not any(kw.arg == "example" for kw in call.keywords):
+                yield Finding(
+                    rule="op-ref-parity", path=mod.path, line=call.lineno,
+                    message=f"op family {name!r} declares no example= "
+                            f"factory — parity tests cannot auto-enroll it")
+            backends = regs.get(var or "", set())
+            if "ref" not in backends:
+                yield Finding(
+                    rule="op-ref-parity", path=mod.path, line=call.lineno,
+                    message=f"op family {name!r} registers no 'ref' "
+                            f"implementation in its declaring module — "
+                            f"parity has no oracle")
+            if parity_text is not None and not registry_driven \
+                    and f'"{name}"' not in parity_text \
+                    and f"'{name}'" not in parity_text:
+                yield Finding(
+                    rule="op-ref-parity", path=mod.path, line=call.lineno,
+                    message=f"op family {name!r} is not enrolled in "
+                            f"test_backend_parity.py (the suite neither "
+                            f"enumerates dispatch.list_ops() nor names it)")
+
+
+def _serve_config_fields(ctx: LintContext) -> Optional[Set[str]]:
+    cfg = ctx.module("repro/config.py", "config.py")
+    if cfg is None:
+        return None
+    for node in ast.walk(cfg.tree):
+        if isinstance(node, ast.ClassDef) and node.name == "ServeConfig":
+            return {s.target.id for s in node.body
+                    if isinstance(s, ast.AnnAssign)
+                    and isinstance(s.target, ast.Name)}
+    return None
+
+
+@rule("tunable-reachability")
+def check_tunable_reachability(ctx: LintContext) -> Iterable[Finding]:
+    """Every dispatch-registry tunable is a ``ServeConfig`` field and a
+    ``launch/serve.py`` argparse flag.
+
+    A tunable only reachable by editing kernel code is dead weight for the
+    serving stack: sweeps, CI smokes and operators all configure through
+    ServeConfig / the launcher.
+    """
+    fields = _serve_config_fields(ctx)
+    launcher = ctx.module("launch/serve.py")
+    launcher_text = launcher.text if launcher is not None else None
+    for mod in ctx.modules:
+        for name, _var, call in _op_declarations(mod):
+            for kw in call.keywords:
+                if kw.arg != "tunables" or not isinstance(kw.value, ast.Dict):
+                    continue
+                keys = [k.value for k in kw.value.keys
+                        if isinstance(k, ast.Constant)
+                        and isinstance(k.value, str)]
+                for key in keys:
+                    if fields is not None and key not in fields:
+                        yield Finding(
+                            rule="tunable-reachability", path=mod.path,
+                            line=kw.value.lineno,
+                            message=f"tunable {key!r} of op family {name!r} "
+                                    f"has no ServeConfig field — it is "
+                                    f"unreachable from serving config")
+                    flag = "--" + key.replace("_", "-")
+                    if launcher_text is not None \
+                            and flag not in launcher_text:
+                        yield Finding(
+                            rule="tunable-reachability", path=mod.path,
+                            line=kw.value.lineno,
+                            message=f"tunable {key!r} of op family {name!r} "
+                                    f"has no {flag} flag in launch/serve.py")
+
+
+def _dma_copy_call(node: ast.AST) -> Optional[Tuple[str, str, int]]:
+    """(kind, normalized_args, line) when ``node`` is
+    ``...make_async_copy(ARGS).start()`` / ``.wait()``."""
+    if not (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in ("start", "wait")):
+        return None
+    inner = node.func.value
+    if not (isinstance(inner, ast.Call)
+            and _unparse(inner.func).endswith("make_async_copy")):
+        return None
+    args = ", ".join(_unparse(a) for a in inner.args)
+    return node.func.attr, args, node.lineno
+
+
+@rule("dma-pairing")
+def check_dma_pairing(ctx: LintContext) -> Iterable[Finding]:
+    """Every Pallas ``make_async_copy(...).start()`` has a matching
+    ``.wait()`` on the same (src, dst, semaphore) triple, and every DMA
+    semaphore ring is sized to a VMEM ring's leading dim.
+
+    An unpaired start leaves a DMA in flight past the grid step that issued
+    it (semaphore imbalance — the interpret-mode kernels validate semantics,
+    so only this rule and real hardware catch it); a semaphore array sized
+    differently from its ring buffer aliases slots.
+    """
+    for mod in ctx.modules:
+        starts: Counter = Counter()
+        waits: Counter = Counter()
+        first_line: Dict[Tuple[str, str], int] = {}
+        sem_dims: List[Tuple[str, int]] = []
+        vmem_dims: Set[str] = set()
+        for node in ast.walk(mod.tree):
+            hit = _dma_copy_call(node)
+            if hit is not None:
+                kind, args, line = hit
+                (starts if kind == "start" else waits)[args] += 1
+                first_line.setdefault((kind, args), line)
+            if isinstance(node, ast.Call):
+                fname = _unparse(node.func)
+                if fname.endswith("SemaphoreType.DMA") and node.args:
+                    shape = node.args[0]
+                    if isinstance(shape, ast.Tuple) and shape.elts:
+                        sem_dims.append((_unparse(shape.elts[0]),
+                                         node.lineno))
+                elif fname.endswith("VMEM") and node.args:
+                    shape = node.args[0]
+                    if isinstance(shape, ast.Tuple) and shape.elts:
+                        vmem_dims.add(_unparse(shape.elts[0]))
+        for args in sorted(set(starts) | set(waits)):
+            ns, nw = starts[args], waits[args]
+            if ns != nw:
+                kind = "start" if ns > nw else "wait"
+                line = first_line.get((kind, args), 1)
+                yield Finding(
+                    rule="dma-pairing", path=mod.path, line=line,
+                    message=f"make_async_copy({args}) has {ns} start(s) "
+                            f"but {nw} wait(s) — every started DMA must be "
+                            f"waited on the same (src, dst, sem) triple")
+        for dim, line in sem_dims:
+            if vmem_dims and dim not in vmem_dims:
+                yield Finding(
+                    rule="dma-pairing", path=mod.path, line=line,
+                    message=f"DMA semaphore ring sized ({dim},) matches no "
+                            f"VMEM ring buffer leading dim "
+                            f"({sorted(vmem_dims)}) — slots would alias")
+
+
+def _device_functions(mod: Module) -> List[ast.FunctionDef]:
+    """Functions compiled for device: jit/pallas_call-decorated, passed to
+    ``jax.jit(...)``/``pl.pallas_call(...)`` by name, or ``*_kernel``."""
+    jitted_names: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            fname = _unparse(node.func)
+            if fname.endswith(("jax.jit", "pallas_call")) \
+                    or fname in ("jit",):
+                for arg in node.args:
+                    if isinstance(arg, ast.Name):
+                        jitted_names.add(arg.id)
+    out = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        deco = " ".join(_unparse(d) for d in node.decorator_list)
+        if ("jit" in deco or "pallas_call" in deco
+                or node.name in jitted_names
+                or node.name.endswith("_kernel")
+                or "_kernel_" in node.name):
+            out.append(node)
+    return out
+
+
+@rule("wallclock-in-device-code")
+def check_wallclock(ctx: LintContext) -> Iterable[Finding]:
+    """No wall-clock or ambient host randomness inside jit'd or kernel
+    bodies.
+
+    ``time.*`` / ``np.random.*`` / ``random.*`` inside a traced function
+    burns its value into the compiled program at trace time — steps silently
+    stop varying, and a retrace makes them vary again.  ``jax.random`` is
+    exempt: it is a functional PRNG keyed by traced state.
+    """
+    for mod in ctx.modules:
+        for fn in _device_functions(mod):
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                fname = _unparse(node.func)
+                if fname.startswith(_WALLCLOCK_PREFIXES):
+                    yield Finding(
+                        rule="wallclock-in-device-code", path=mod.path,
+                        line=node.lineno,
+                        message=f"{fname}(...) inside device function "
+                                f"{fn.name!r} — its value freezes at trace "
+                                f"time; hoist it to the host caller")

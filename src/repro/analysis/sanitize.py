@@ -1,0 +1,200 @@
+"""Runtime sanitizers behind the single ``ServeConfig.sanitize`` switch.
+
+Three guards, each targeting a hazard class this repo has hand-fixed once
+and the Gaudi literature blames for most perf cliffs:
+
+* **Retrace guard** — a process-wide jax compile-event listener plus
+  per-signature bookkeeping.  ``expect_cached(sig)`` scopes a region that
+  dispatches a jit'd callable: the *first* compile for a signature is the
+  warm-up and is free; any later compile for an already-seen signature is a
+  steady-state retrace (PR 5's per-call ``jax.jit`` bug class) and counts —
+  or raises under ``strict``.
+* **Host-sync guard** — ``no_host_sync(scope)`` wraps the overlap build
+  half, where a device→host read serializes the pipeline the async engine
+  exists to hide.  jax's native ``transfer_guard`` is layered in on non-CPU
+  platforms; on CPU (where numpy reads device buffers through the buffer
+  protocol without jax noticing) the guard is engine-cooperative: the
+  engine's documented host roundtrips route through :func:`host_read`,
+  which books allowlisted reasons (``disagg-handoff``, ``tier-drain``) and
+  trips on anything else inside a guarded scope.
+* **Allocator invariant checker** — ``check_allocator`` runs
+  :meth:`repro.core.paged_kv.BlockAllocator.check_invariants` after commit,
+  counting checks and surfacing violations as :class:`SanitizeError`.
+
+Counters surface in ``ServingEngine.metrics()`` flattened beside
+``policy_counters`` (``sanitize.retraces`` etc.); ``tools/ci_fast.sh`` runs
+a sanitized smoke asserting all-zero.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Iterator, Optional, Set, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["SanitizeError", "Sanitizer", "jit_signature", "host_read",
+           "DEFAULT_HOST_SYNC_ALLOWLIST"]
+
+# Engine host roundtrips that are part of the design, not hazards: the
+# disagg prefill->decode KV handoff copies through host memory by contract,
+# and the HBM->host tier demotion is a host write by definition.
+DEFAULT_HOST_SYNC_ALLOWLIST = frozenset({"disagg-handoff", "tier-drain"})
+
+
+class SanitizeError(RuntimeError):
+    """A sanitizer invariant was violated (strict mode)."""
+
+
+# ---------------------------------------------------------------------------
+# Compile-event plumbing (process-wide, installed once)
+# ---------------------------------------------------------------------------
+_COMPILE_EVENTS = 0
+_LISTENER_INSTALLED = False
+_COMPILE_EVENT_NAME = "/jax/compilation_cache/compile_requests_use_cache"
+
+
+def _on_event(event: str, **kwargs: Any) -> None:
+    # fires once per *actual* compilation; cache hits do not emit it
+    global _COMPILE_EVENTS
+    if event == _COMPILE_EVENT_NAME:
+        _COMPILE_EVENTS += 1
+
+
+def _install_compile_listener() -> None:
+    global _LISTENER_INSTALLED
+    if not _LISTENER_INSTALLED:
+        jax.monitoring.register_event_listener(_on_event)
+        _LISTENER_INSTALLED = True
+
+
+def jit_signature(tag: str, *trees: Any) -> Tuple:
+    """Hashable abstract signature of a jit call site: tag + treedefs +
+    (shape, dtype) per leaf.  Two calls with equal signatures must hit the
+    same executable — a second compile for one is a retrace."""
+    sig = [tag]
+    for tree in trees:
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        sig.append(str(treedef))
+        sig.append(tuple(
+            (tuple(getattr(x, "shape", ())), str(getattr(x, "dtype", type(x))))
+            for x in leaves))
+    return tuple(sig)
+
+
+# ---------------------------------------------------------------------------
+# Host-sync guard plumbing (thread-local so overlap's builder thread and the
+# resolver never see each other's scopes)
+# ---------------------------------------------------------------------------
+_TLS = threading.local()
+
+
+def _guard_stack():
+    stack = getattr(_TLS, "stack", None)
+    if stack is None:
+        stack = _TLS.stack = []
+    return stack
+
+
+def host_read(x: Any, *, reason: str) -> np.ndarray:
+    """Materialize a device value on the host, declaring why.
+
+    This is the engine's single doorway for *intentional* device→host
+    roundtrips.  Outside any guarded scope it is just ``np.asarray``.
+    Inside :meth:`Sanitizer.no_host_sync`, allowlisted reasons are counted
+    (``allowed_host_syncs``) and anything else is a trip."""
+    stack = _guard_stack()
+    if stack:
+        sanitizer, scope = stack[-1]
+        sanitizer._on_host_read(reason, scope)
+    return np.asarray(x)
+
+
+class Sanitizer:
+    """Per-engine runtime guard bundle (see module docstring).
+
+    ``strict=True`` raises :class:`SanitizeError` at the violation site;
+    ``strict=False`` only counts, for benchmarking with attribution."""
+
+    def __init__(self, *, strict: bool = True,
+                 host_sync_allowlist: Optional[Set[str]] = None):
+        _install_compile_listener()
+        self.strict = strict
+        self.allowlist = frozenset(
+            DEFAULT_HOST_SYNC_ALLOWLIST if host_sync_allowlist is None
+            else host_sync_allowlist)
+        self._seen: Set[Tuple] = set()
+        self._counters: Dict[str, int] = {
+            "retraces": 0,
+            "transfer_guard_trips": 0,
+            "invariant_checks": 0,
+            "allowed_host_syncs": 0,
+            "compiles": 0,
+        }
+
+    # -- retrace guard ------------------------------------------------------
+    @contextlib.contextmanager
+    def expect_cached(self, sig: Tuple) -> Iterator[None]:
+        """Scope one dispatch of a jit'd callable with signature ``sig``.
+
+        A compile inside the scope is free the first time ``sig`` is seen
+        (warm-up) and a retrace every later time."""
+        before = _COMPILE_EVENTS
+        try:
+            yield
+        finally:
+            compiled = _COMPILE_EVENTS - before
+            if compiled:
+                self._counters["compiles"] += compiled
+                if sig in self._seen:
+                    self._counters["retraces"] += 1
+                    if self.strict:
+                        raise SanitizeError(
+                            f"retrace: recompiled for already-seen jit "
+                            f"signature {sig[0]!r} — a steady-state step "
+                            f"must reuse its executable (PR 5 bug class)")
+            self._seen.add(sig)
+
+    # -- host-sync guard ----------------------------------------------------
+    @contextlib.contextmanager
+    def no_host_sync(self, scope: str) -> Iterator[None]:
+        """Forbid device→host reads inside the scope except through
+        :func:`host_read` with an allowlisted reason."""
+        stack = _guard_stack()
+        stack.append((self, scope))
+        native = (jax.transfer_guard_device_to_host("disallow")
+                  if jax.default_backend() != "cpu" else
+                  contextlib.nullcontext())
+        try:
+            with native:
+                yield
+        finally:
+            stack.pop()
+
+    def _on_host_read(self, reason: str, scope: str) -> None:
+        if reason in self.allowlist:
+            self._counters["allowed_host_syncs"] += 1
+            return
+        self._counters["transfer_guard_trips"] += 1
+        if self.strict:
+            raise SanitizeError(
+                f"host sync {reason!r} inside no_host_sync scope "
+                f"{scope!r}; allowlist={sorted(self.allowlist)}")
+
+    # -- allocator invariants ----------------------------------------------
+    def check_allocator(self, alloc: Any, *, drained: bool = False) -> None:
+        self._counters["invariant_checks"] += 1
+        try:
+            alloc.check_invariants(drained=drained)
+        except ValueError as e:
+            raise SanitizeError(f"allocator invariant violated: {e}") from e
+
+    # -- reporting ----------------------------------------------------------
+    def counters(self) -> Dict[str, int]:
+        return dict(self._counters)
+
+    @property
+    def clean(self) -> bool:
+        return (self._counters["retraces"] == 0
+                and self._counters["transfer_guard_trips"] == 0)

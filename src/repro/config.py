@@ -353,6 +353,9 @@ class ServeConfig:
     # (0/1 = BlockSpec pipeline, >= 2 = multi-buffered manual DMA —
     # `prefetch_depth` tunable of the paged_attention_chunked op family).
     prefetch_depth: int = 0
+    # Query-chunk tile rows for the chunked paged-attention kernel
+    # (`q_chunk` tunable of the paged_attention_chunked op family).
+    q_chunk: int = 16
     # Mesh-native serving (docs/sharded_serving.md): device count of the
     # serving mesh's model axis. 0/1 = single-device engine; > 1 makes
     # ``repro.launch.serve`` build a mesh (repro.launch.mesh) and the engine
@@ -372,6 +375,12 @@ class ServeConfig:
     # the `tiered` policy scores it on BlockStats) and promote back into HBM
     # on a prefix hit.
     host_blocks: int = 0
+    # Runtime sanitizers (docs/static_analysis.md, repro.analysis.sanitize):
+    # retrace guard on the engine step loop, host-sync guard around the
+    # overlap build half (allowlisted: disagg-handoff, tier-drain), and
+    # BlockAllocator.check_invariants after every commit.  Counters surface
+    # in metrics() as sanitize.*; violations raise SanitizeError.
+    sanitize: bool = False
     parallel: ParallelConfig = field(default_factory=ParallelConfig)
     seed: int = 0
 

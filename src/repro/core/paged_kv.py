@@ -573,6 +573,89 @@ class BlockAllocator:
         """Allocatable blocks: truly free + evictable cached-free."""
         return len(self._free) + len(self._cached_free)
 
+    def check_invariants(self, *, drained: bool = False) -> None:
+        """Validate the allocator's full internal state; raise ``ValueError``
+        naming the first violated invariant.
+
+        Called after every commit when ``ServeConfig.sanitize`` is on (via
+        ``repro.analysis.sanitize``).  With ``drained=True`` additionally
+        requires the fully-idle state: every block free, no tables, no
+        pending device traffic.
+        """
+        def fail(msg: str) -> None:
+            raise ValueError(msg)
+
+        bs, blocks = self.block_size, set(range(self.num_blocks))
+        free, cached = set(self._free), set(self._cached_free)
+        live = set(self._ref)     # _decref drops the entry at refcount 0
+        # 1. free / cached-free / refcounted partition the block space
+        if len(free) != len(self._free):
+            fail(f"duplicate ids on free list: {sorted(self._free)}")
+        for a, b, what in ((free, cached, "free and cached-free"),
+                           (free, live, "free and refcounted"),
+                           (cached, live, "cached-free and refcounted")):
+            if a & b:
+                fail(f"blocks both {what}: {sorted(a & b)}")
+        if (free | cached | live) != blocks:
+            fail(f"blocks neither free nor tracked: "
+                 f"{sorted(blocks - free - cached - live)}")
+        # 2. refcounts equal table occurrences exactly
+        occurrences: Dict[int, int] = {}
+        for table in self._tables.values():
+            for blk in table:
+                occurrences[blk] = occurrences.get(blk, 0) + 1
+        if occurrences != self._ref:
+            off = {blk: (occurrences.get(blk, 0), self._ref.get(blk, 0))
+                   for blk in set(occurrences) ^ set(self._ref)
+                   or {b for b in occurrences
+                       if occurrences[b] != self._ref.get(b)}}
+            fail(f"refcounts disagree with table occurrences "
+                 f"(block: (occurrences, refcount)): {off}")
+        # 3. per-request table shape: lens keyed like tables, nonempty
+        #    tables, enough blocks to cover the committed length (>= — a
+        #    reserve may over-grow the table ahead of its commit)
+        if set(self._lens) != set(self._tables):
+            fail(f"_lens keys {sorted(self._lens)} != _tables keys "
+                 f"{sorted(self._tables)}")
+        for rid, table in self._tables.items():
+            if not table:
+                fail(f"request {rid} has an empty block table")
+            need = -(-self._lens[rid] // bs)
+            if len(table) < need:
+                fail(f"request {rid}: {len(table)} blocks cover only "
+                     f"{len(table) * bs} tokens < committed {self._lens[rid]}")
+        # 4. prefix cache is a bijection and covers every cached-free block
+        if {k: b for b, k in self._hash_of.items()} != dict(self._block_of):
+            fail("prefix cache maps are not inverse bijections")
+        if not cached <= set(self._hash_of):
+            fail(f"cached-free blocks without a content hash: "
+                 f"{sorted(cached - set(self._hash_of))}")
+        # 5. watermarks in range (NOT <= committed fill: CoW carries the
+        #    donor's watermark, which may exceed the new holder's fill)
+        for blk, w in self._written.items():
+            if not 0 <= w <= bs:
+                fail(f"block {blk} watermark {w} outside [0, {bs}]")
+        # 6. tier-op ordering: a promote's data must exist by the time it
+        #    is applied — set at demotion or host-pool insertion
+        for kind, entry, blk in self.pending_tier_ops:
+            if kind == "promote" and entry.data is None:
+                fail(f"pending promote of block {blk} has no host data")
+        # 7. CoW queue: endpoints in range, destination refcounted
+        for src, dst in self.pending_copies:
+            if not (0 <= src < self.num_blocks
+                    and 0 <= dst < self.num_blocks):
+                fail(f"pending copy ({src}, {dst}) out of range")
+            if dst not in self._ref:
+                fail(f"pending copy destination {dst} is not a live block")
+        # 8. fully drained state
+        if drained:
+            if self.num_free != self.num_blocks:
+                fail(f"not drained: {self.num_free}/{self.num_blocks} free")
+            if self._tables or self.pending_copies or self.pending_tier_ops:
+                fail(f"not drained: tables={sorted(self._tables)} "
+                     f"copies={self.pending_copies} "
+                     f"tier_ops={len(self.pending_tier_ops)}")
+
     def ref_count(self, block: int) -> int:
         return self._ref.get(block, 0)
 

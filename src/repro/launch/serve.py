@@ -57,6 +57,15 @@ def main() -> None:
                    help="KV-page DMA ring depth for the Pallas chunked "
                         "kernel (0/1 = BlockSpec pipeline, >= 2 = "
                         "multi-buffered manual DMA; ignored by jnp backends)")
+    p.add_argument("--q-chunk", type=int, default=16,
+                   help="query-tile rows of the chunked paged-attention "
+                        "kernel grid (the op family's q_chunk tunable; "
+                        "ignored by jnp backends)")
+    p.add_argument("--sanitize", default="off", choices=("on", "off"),
+                   help="runtime sanitizers (docs/static_analysis.md): "
+                        "retrace guard, host-sync guard around the overlap "
+                        "build half, allocator invariant checks after every "
+                        "step; counters land in metrics as sanitize.*")
     p.add_argument("--roles", default="",
                    help="'' = monolithic engine; 'prefill,decode' (or "
                         "'split') = disaggregated two-role serving "
@@ -83,6 +92,8 @@ def main() -> None:
                         spec_k=args.spec_k, devices=args.devices,
                         overlap=args.overlap == "on",
                         prefetch_depth=args.prefetch_depth,
+                        q_chunk=args.q_chunk,
+                        sanitize=args.sanitize == "on",
                         roles=args.roles, host_blocks=args.host_blocks)
     total_blocks = args.requests * (
         -(-(args.prompt_len + args.max_new) // args.block_size) + 1)
@@ -116,7 +127,7 @@ def main() -> None:
           f"in {dt:.2f}s ({m['output_tokens']/dt:.1f} tok/s) "
           f"[backend={m['backend']} devices={m['devices']} "
           f"mesh={m['mesh_shape']} overlap={m['overlap']} "
-          f"prefetch_depth={m['prefetch_depth']}]")
+          f"prefetch_depth={m['prefetch_depth']} q_chunk={m['q_chunk']}]")
     print(f"TTFT p50 {m['p50_ttft_s']*1e3:.1f} / p99 {m['p99_ttft_s']*1e3:.1f} ms  "
           f"TPOT p50 {m['p50_tpot_s']*1e3:.1f} / p99 {m['p99_tpot_s']*1e3:.1f} ms")
     print(f"preemptions {m['preemptions']}  "
@@ -135,6 +146,12 @@ def main() -> None:
               f"p99 {h['p99']:.2f} ms  prefill steps "
               f"{m['roles']['prefill']['steps']}  decode steps "
               f"{m['roles']['decode']['steps']}")
+    sz = m["sanitize"]
+    if sz["enabled"]:
+        print(f"sanitize on  retraces {sz['retraces']}  "
+              f"host-sync trips {sz['transfer_guard_trips']}  "
+              f"invariant checks {sz['invariant_checks']}  "
+              f"allowed host syncs {sz['allowed_host_syncs']}")
     s = m["spec"]
     print(f"spec {s['proposer']} k={s['k']}  "
           f"accept_rate {s['acceptance_rate']:.2f}  "

@@ -320,6 +320,7 @@ class TransformerLM:
 
     def decode_tokens_paged(self, params, pools, lists, tokens, *,
                             attn_backend: Optional[str] = None,
+                            q_chunk: int = 16,
                             prefetch_depth: int = 0,
                             mesh=None, axis: Optional[str] = None):
         """Fused chunked-prefill + decode over flat token lanes.
@@ -346,9 +347,10 @@ class TransformerLM:
                           tokens, and needs a logit row per lane to judge
                           every draft in this ONE forward
 
-        ``prefetch_depth`` is forwarded to the chunked-attention op: >= 2
-        enables the Pallas kernel's multi-buffered KV-page DMA ring (jnp
-        backends ignore it).
+        ``q_chunk`` and ``prefetch_depth`` are forwarded to the
+        chunked-attention op: ``q_chunk`` is the kernel's query-tile rows;
+        ``prefetch_depth`` >= 2 enables the Pallas kernel's multi-buffered
+        KV-page DMA ring (jnp backends ignore both).
 
         ``mesh``/``axis`` set ⇒ the mesh-native serving path: the pool is
         sequence-sharded on its block dimension over ``axis`` and each
@@ -383,7 +385,8 @@ class TransformerLM:
                     q[:, 0], pk, pv, lists["block_list"],
                     lists["block_req"], lists["block_pos"],
                     lists["kv_lens"], lists["token_req"], token_pos,
-                    backend=attn_backend, prefetch_depth=prefetch_depth)
+                    backend=attn_backend, q_chunk=q_chunk,
+                    prefetch_depth=prefetch_depth)
             x = x + jnp.einsum("be,ed->bd", ctx.reshape(x.shape[0], -1),
                                lp["attn"]["wo"])
             h = rmsnorm(lp["ln2"], x[:, None], cfg.norm_eps)

@@ -60,6 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize as sanitize_lib
 from repro.config import ModelConfig, ServeConfig
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.metrics import LatencyTracker
@@ -94,7 +95,9 @@ def copy_block_tokens(dst_pools, src_pools, src_slots: np.ndarray,
     db, do = jnp.asarray(dst_slots[:, 0]), jnp.asarray(dst_slots[:, 1])
     out = dict(dst_pools)
     for c in ("k", "v"):
-        vals = np.asarray(src_pools[c][:, sb, so])      # (L, n, KV, HD)
+        # documented host roundtrip — declared to the host-sync sanitizer
+        vals = sanitize_lib.host_read(src_pools[c][:, sb, so],
+                                      reason="disagg-handoff")  # (L, n, ...)
         out[c] = dst_pools[c].at[:, db, do].set(
             jnp.asarray(vals, dst_pools[c].dtype))
     return out

@@ -54,6 +54,7 @@ Step anatomy (the paper's BlockList optimization, end-to-end):
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from typing import Dict, List, Optional
 
@@ -61,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize as sanitize_lib
 from repro.config import ModelConfig, ServeConfig
 from repro.core import dispatch
 from repro.core.paged_kv import (
@@ -243,6 +245,13 @@ class ServingEngine:
         # (the fused program substitutes it via ``tok_src``/``nxt_prev``).
         self.overlap = bool(serve.overlap)
         self.prefetch_depth = int(serve.prefetch_depth)
+        self.q_chunk = int(serve.q_chunk)
+        # Runtime sanitizers (repro.analysis.sanitize): retrace guard on
+        # the step dispatch, host-sync guard around the build half, and
+        # allocator invariant checks after every commit reconciliation.
+        self.sanitize = bool(serve.sanitize)
+        self.sanitizer = (sanitize_lib.Sanitizer() if self.sanitize
+                          else None)
         self._pending: Optional[_PendingStep] = None
         self._chain: Dict[int, int] = {}
         self._copy_fn = jax.jit(copy_pool_blocks)
@@ -254,6 +263,7 @@ class ServingEngine:
         attn_backend = None if mesh is not None else self.attn_backend
         mesh_axis = self.mesh_axis if mesh is not None else None
         prefetch_depth = self.prefetch_depth
+        q_chunk = self.q_chunk
 
         def fused(params, pools, lists, tokens, tok_src, nxt_prev, key,
                   temps, top_ks, top_ps):
@@ -265,7 +275,8 @@ class ServingEngine:
             tokens = jnp.where(tok_src >= 0, nxt_prev[live], tokens)
             logits, pools = model.decode_tokens_paged(
                 params, pools, lists, tokens, attn_backend=attn_backend,
-                prefetch_depth=prefetch_depth, mesh=mesh, axis=mesh_axis)
+                q_chunk=q_chunk, prefetch_depth=prefetch_depth, mesh=mesh,
+                axis=mesh_axis)
             nxt = sampling_lib.sample_batched(key, logits, temps, top_ks,
                                               top_ps)
             return nxt, pools
@@ -304,7 +315,8 @@ class ServingEngine:
                            top_ps, drafts, draft_lens):
                 logits, pools = model.decode_tokens_paged(
                     params, pools, lists, tokens, attn_backend=attn_backend,
-                    prefetch_depth=prefetch_depth, mesh=mesh, axis=mesh_axis)
+                    q_chunk=q_chunk, prefetch_depth=prefetch_depth,
+                    mesh=mesh, axis=mesh_axis)
                 out, acc = spec_lib.verify_batched(
                     key, logits, drafts, draft_lens, temps, top_ks, top_ps)
                 return out, acc, pools
@@ -559,6 +571,24 @@ class ServingEngine:
             self._resolve(pend_new, None)
         return plan.num_tokens
 
+    # ------------------------------------------------------------- sanitizers
+    def _sanitize_scope(self, scope: str):
+        """Host-sync guard for the build half (no-op unless sanitizing)."""
+        if self.sanitizer is None:
+            return contextlib.nullcontext()
+        return self.sanitizer.no_host_sync(scope)
+
+    def _expect_cached(self, tag: str, *trees):
+        """Retrace guard around one jit dispatch (no-op unless sanitizing)."""
+        if self.sanitizer is None:
+            return contextlib.nullcontext()
+        return self.sanitizer.expect_cached(
+            sanitize_lib.jit_signature(tag, *trees))
+
+    def _check_allocator(self) -> None:
+        if self.sanitizer is not None:
+            self.sanitizer.check_allocator(self.alloc)
+
     # ---------------------------------------------------- overlapped pipeline
     def _drain_cow(self) -> None:
         """Apply pending copy-on-write block copies to the device pools.
@@ -578,8 +608,12 @@ class ServingEngine:
         srcs[:len(copies)] = [s for s, _ in copies]
         dsts[:len(copies)] = [d for _, d in copies]
         srcs, dsts = jnp.asarray(srcs), jnp.asarray(dsts)
-        self.pools = {k: self._copy_fn(p, srcs, dsts)
-                      for k, p in self.pools.items()}
+        # one executable per pow2 bucket: a second compile for a seen bucket
+        # size would be exactly the per-call retrace class this drain's
+        # bucketing exists to prevent
+        with self._expect_cached("cow", n):
+            self.pools = {k: self._copy_fn(p, srcs, dsts)
+                          for k, p in self.pools.items()}
 
     def _drain_tier(self) -> None:
         """Apply queued host-tier traffic to the device pools, IN ORDER.
@@ -594,8 +628,12 @@ class ServingEngine:
         ops = self.alloc.drain_tier_ops()
         for kind, entry, blk in ops:
             if kind == "demote":
-                entry.data = tuple(np.asarray(self.pools[c][:, blk])
-                                   for c in ("k", "v"))
+                # documented host roundtrip: a demotion IS a device->host
+                # copy — declared to the host-sync guard by reason
+                entry.data = tuple(
+                    sanitize_lib.host_read(self.pools[c][:, blk],
+                                           reason="tier-drain")
+                    for c in ("k", "v"))
             else:
                 assert entry.data is not None, "promote before demote copy"
                 for c, val in zip(("k", "v"), entry.data):
@@ -626,18 +664,26 @@ class ServingEngine:
         PREFILLING -> DECODING transition; everything value-dependent
         (EOS, TTFT stamps, generated-block hashing) waits for ``_resolve``.
         """
-        lists, tokens, tok_src, sample_args, spec_args, committed = (
-            self._render(plan))
-        assert spec_args is None, "drafted plans go through _step_sync"
-        self.sync_pools()
-        self._step_count += 1
-        key = jax.random.fold_in(self._key, self._step_count)
-        nxt_prev = (self._pending.nxt_dev if self._pending is not None
-                    else self._dummy_prev)
-        t2 = time.perf_counter()
-        nxt_dev, self.pools = self._step_fn(
-            self.params, self.pools, lists, tokens, tok_src, nxt_prev, key,
-            *sample_args)
+        # The build half must never block on the in-flight device step: a
+        # device->host read here (outside the tier-drain allowlist) would
+        # serialize the overlap the async loop exists for.  The retrace
+        # guard scopes only the fused dispatch — eager housekeeping
+        # (fold_in, render uploads) compiles once harmlessly.
+        with self._sanitize_scope("overlap-build"):
+            lists, tokens, tok_src, sample_args, spec_args, committed = (
+                self._render(plan))
+            assert spec_args is None, "drafted plans go through _step_sync"
+            self.sync_pools()
+            self._step_count += 1
+            key = jax.random.fold_in(self._key, self._step_count)
+            nxt_prev = (self._pending.nxt_dev if self._pending is not None
+                        else self._dummy_prev)
+            t2 = time.perf_counter()
+            with self._expect_cached("step", lists, tokens, tok_src,
+                                     nxt_prev, sample_args):
+                nxt_dev, self.pools = self._step_fn(
+                    self.params, self.pools, lists, tokens, tok_src,
+                    nxt_prev, key, *sample_args)
         actions = []
         chain: Dict[int, int] = {}
         for req, n, pos0 in committed:
@@ -714,6 +760,9 @@ class ServingEngine:
             num_tokens=pend.num_tokens, emitted_tokens=emitted,
             phases={**pend.phases, "device": t_done - pend.t_dispatch,
                     "commit": time.perf_counter() - t_done})
+        # Post-reconciliation is the quiescent point: provisional commits,
+        # finishes and preemption frees have all landed in the allocator.
+        self._check_allocator()
 
     def _filter_finished(self, plan: StepPlan) -> None:
         """Drop plan entries whose request finished while the plan was being
@@ -736,9 +785,11 @@ class ServingEngine:
         self._step_count += 1
         key = jax.random.fold_in(self._key, self._step_count)
         t2 = time.perf_counter()
-        out, acc, self.pools = self._spec_step_fn(
-            self.params, self.pools, lists, tokens, key, *sample_args,
-            *spec_args)
+        with self._expect_cached("spec", lists, tokens, sample_args,
+                                 spec_args):
+            out, acc, self.pools = self._spec_step_fn(
+                self.params, self.pools, lists, tokens, key, *sample_args,
+                *spec_args)
         out, acc = np.asarray(out), np.asarray(acc)
         nxt = out[:, 0]
         t3 = time.perf_counter()
@@ -802,6 +853,7 @@ class ServingEngine:
             num_tokens=plan.num_tokens, emitted_tokens=emitted,
             phases={"propose": t1 - t0, "schedule_render": t2 - t1,
                     "device": t3 - t2, "commit": t4 - t3})
+        self._check_allocator()
         return plan.num_tokens
 
     def _register_generated(self, req: Request, pos0: int,
@@ -897,6 +949,7 @@ class ServingEngine:
             # overlapped loop ran and the kernel's KV-page DMA ring depth.
             "overlap": self.overlap,
             "prefetch_depth": self.prefetch_depth,
+            "q_chunk": self.q_chunk,
             "blocks_free": self.alloc.num_free,
             "preemptions": self.scheduler.num_preemptions,
             "slot_compactions": self.scheduler.num_slot_compactions,
@@ -953,4 +1006,16 @@ class ServingEngine:
         }
         m["policy_counters"].update(
             {f"tier.{k}": v for k, v in sorted(tier_counters.items())})
+        # Sanitizer attribution (docs/static_analysis.md): whether the run
+        # was guarded plus the guard counters, ALSO flattened next to the
+        # policy counters so benchmark rows carry them the same way.  A
+        # clean sanitized run shows retraces == transfer_guard_trips == 0
+        # with invariant_checks > 0.
+        san = (self.sanitizer.counters() if self.sanitizer is not None else
+               {"retraces": 0, "transfer_guard_trips": 0,
+                "invariant_checks": 0, "allowed_host_syncs": 0,
+                "compiles": 0})
+        m["sanitize"] = {"enabled": self.sanitize, **san}
+        m["policy_counters"].update(
+            {f"sanitize.{k}": v for k, v in sorted(san.items())})
         return m

@@ -1,0 +1,387 @@
+"""Self-tests for repro.analysis: per-rule lint fixtures + runtime
+sanitizers (retrace guard, host-sync guard, allocator invariants)."""
+import os
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import lint
+from repro.analysis import sanitize as sanitize_lib
+from repro.analysis.sanitize import (SanitizeError, Sanitizer, host_read,
+                                     jit_signature)
+from repro.core.paged_kv import BlockAllocator
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+_TREE_SEQ = iter(range(10_000))
+
+
+def _lint_tree(tmp_path, files, rules=None, tests=None):
+    """Write {relpath: source} into a fresh subroot of tmp_path and lint it
+    (fresh per call so one test's violating fixture never leaks into its
+    clean fixture)."""
+    root = tmp_path / f"tree{next(_TREE_SEQ)}"
+    for rel, src in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    tests_dir = None
+    if tests is not None:
+        tdir = root / "tests"
+        tdir.mkdir(exist_ok=True)
+        for rel, src in tests.items():
+            (tdir / rel).write_text(textwrap.dedent(src))
+        tests_dir = str(tdir)
+    roots = [str(root / r) for r in {rel.split("/", 1)[0] for rel in files}]
+    return lint.run_lint(sorted(roots), tests_dir=tests_dir, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# Layer 1: one violating + one clean fixture per rule
+# ---------------------------------------------------------------------------
+def test_allocator_privacy_rule(tmp_path):
+    bad = _lint_tree(tmp_path, {
+        "pkg/engine.py": """
+            def peek(eng):
+                return eng.alloc._tables[0], eng.alloc._free[:]
+        """}, rules=["allocator-privacy"])
+    assert len(bad) == 2 and all(f.rule == "allocator-privacy" for f in bad)
+    assert bad[0].path.endswith("engine.py") and bad[0].line == 3
+
+    clean = _lint_tree(tmp_path, {
+        # the owning module may touch its own private state
+        "pkg/core/paged_kv.py": """
+            def inside(alloc):
+                return alloc._tables
+        """,
+        "pkg/engine2.py": """
+            def peek(eng):
+                return eng.alloc.table(0), eng.alloc.num_free
+        """}, rules=["allocator-privacy"])
+    assert clean == []
+
+
+def test_backend_conditional_rule(tmp_path):
+    bad = _lint_tree(tmp_path, {
+        "pkg/op.py": """
+            def run(backend, x):
+                if backend == "pallas":
+                    return x
+                return -x
+        """}, rules=["backend-conditional"])
+    assert [f.rule for f in bad] == ["backend-conditional"]
+
+    clean = _lint_tree(tmp_path, {
+        # the registry itself is the one allowed home for these compares
+        "pkg/core/dispatch.py": """
+            def resolve(backend):
+                if backend == "pallas":
+                    return 1
+        """,
+        "pkg/op.py": """
+            def run(backend, x):
+                impl = resolve("family", config=backend)
+                return impl(x)
+        """}, rules=["backend-conditional"])
+    assert clean == []
+
+
+_PARITY_OK = {"test_backend_parity.py":
+              "FAMILIES = list(dispatch.list_ops())\n"}
+
+
+def test_op_ref_parity_rule(tmp_path):
+    bad = _lint_tree(tmp_path, {
+        "pkg/ops.py": """
+            from repro.core import dispatch
+            _OP = dispatch.op("orphan_family")
+        """}, rules=["op-ref-parity"], tests=_PARITY_OK)
+    msgs = sorted(f.message for f in bad)
+    assert len(bad) == 2
+    assert "no 'ref' implementation" in msgs[1]
+    assert "no example= factory" in msgs[0]
+
+    clean = _lint_tree(tmp_path, {
+        "pkg/ops.py": """
+            from repro.core import dispatch
+
+            def _example():
+                return ()
+
+            _OP = dispatch.op("good_family", example=_example)
+
+            @_OP.register("ref")
+            def _ref(x):
+                return x
+        """}, rules=["op-ref-parity"], tests=_PARITY_OK)
+    assert clean == []
+
+
+def test_op_ref_parity_requires_enrollment(tmp_path):
+    # parity suite neither registry-driven nor naming the family
+    bad = _lint_tree(tmp_path, {
+        "pkg/ops.py": """
+            from repro.core import dispatch
+
+            def _example():
+                return ()
+
+            _OP = dispatch.op("lonely_family", example=_example)
+            _OP.register("ref")(lambda x: x)
+        """}, rules=["op-ref-parity"],
+        tests={"test_backend_parity.py": 'FAMILIES = ["other_family"]\n'})
+    assert [f.message for f in bad] == [
+        "op family 'lonely_family' is not enrolled in "
+        "test_backend_parity.py (the suite neither enumerates "
+        "dispatch.list_ops() nor names it)"]
+
+
+_TUNABLE_CONFIG = """
+    class ServeConfig:
+        q_chunk: int = 16
+"""
+
+
+def test_tunable_reachability_rule(tmp_path):
+    bad = _lint_tree(tmp_path, {
+        "pkg/repro/config.py": _TUNABLE_CONFIG,
+        "pkg/repro/launch/serve.py": 'FLAGS = "--q-chunk"\n',
+        "pkg/repro/ops.py": """
+            from repro.core import dispatch
+            _OP = dispatch.op("fam", example=make,
+                              tunables={"mystery_knob": 1})
+            _OP.register("ref")(lambda: 0)
+        """}, rules=["tunable-reachability"])
+    assert len(bad) == 2           # no ServeConfig field AND no argparse flag
+    assert all("mystery_knob" in f.message for f in bad)
+
+    clean = _lint_tree(tmp_path, {
+        "pkg/repro/config.py": _TUNABLE_CONFIG,
+        "pkg/repro/launch/serve.py": 'FLAGS = "--q-chunk"\n',
+        "pkg/repro/ops.py": """
+            from repro.core import dispatch
+            _OP = dispatch.op("fam", example=make,
+                              tunables={"q_chunk": 16})
+            _OP.register("ref")(lambda: 0)
+        """}, rules=["tunable-reachability"])
+    assert clean == []
+
+
+_DMA_CLEAN = """
+    def ring_kernel(k_hbm, k_buf, k_sem):
+        def start(e):
+            pltpu.make_async_copy(k_hbm.at[e], k_buf.at[e], k_sem.at[e]).start()
+        start(0)
+        pltpu.make_async_copy(k_hbm.at[e], k_buf.at[e], k_sem.at[e]).wait()
+
+    def scratch():
+        return [pltpu.VMEM((depth, 8, 8), jnp.float32),
+                pltpu.SemaphoreType.DMA((depth,))]
+"""
+
+
+def test_dma_pairing_rule(tmp_path):
+    # re-introducing an unpaired .start() (ISSUE acceptance demo)
+    bad = _lint_tree(tmp_path, {
+        "pkg/kernel.py": """
+            def ring_kernel(k_hbm, k_buf, k_sem):
+                pltpu.make_async_copy(
+                    k_hbm.at[e], k_buf.at[e], k_sem.at[e]).start()
+        """}, rules=["dma-pairing"])
+    assert len(bad) == 1
+    assert "1 start(s) but 0 wait(s)" in bad[0].message
+
+    mismatched_sem = _lint_tree(tmp_path, {
+        "pkg/kernel2.py": """
+            def scratch():
+                return [pltpu.VMEM((depth, 8, 8), jnp.float32),
+                        pltpu.SemaphoreType.DMA((2 * depth,))]
+        """}, rules=["dma-pairing"])
+    assert len(mismatched_sem) == 1
+    assert "matches no VMEM ring" in mismatched_sem[0].message
+
+    clean = _lint_tree(tmp_path, {"pkg/kernel3.py": _DMA_CLEAN},
+                       rules=["dma-pairing"])
+    assert clean == []
+
+
+def test_wallclock_rule(tmp_path):
+    bad = _lint_tree(tmp_path, {
+        "pkg/model.py": """
+            def step_kernel(x):
+                return x * time.time() + np.random.rand()
+        """}, rules=["wallclock-in-device-code"])
+    assert len(bad) == 2
+    assert all(f.rule == "wallclock-in-device-code" for f in bad)
+
+    clean = _lint_tree(tmp_path, {
+        "pkg/model.py": """
+            def host_loop(x):
+                return x * time.time()       # host code: fine
+
+            def step_kernel(x, key):
+                return x + jax.random.normal(key, x.shape)
+        """}, rules=["wallclock-in-device-code"])
+    assert clean == []
+
+
+def test_full_src_tree_lints_clean():
+    findings = lint.run_lint([os.path.join(ROOT, "src")],
+                             tests_dir=os.path.join(ROOT, "tests"))
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    (tmp_path / "bad.py").write_text(
+        "def f(eng):\n    return eng.alloc._tables\n")
+    assert lint.main([str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "bad.py:2: [allocator-privacy]" in out
+    assert lint.main([os.path.join(ROOT, "src"), "--tests-dir",
+                      os.path.join(ROOT, "tests")]) == 0
+    assert lint.main(["--rules", "no-such-rule", str(tmp_path)]) == 2
+
+
+def test_rule_registry_is_strict():
+    with pytest.raises(lint.DuplicateRuleError):
+        lint.rule("dma-pairing")(lambda ctx: [])
+    with pytest.raises(lint.UnknownRuleError):
+        lint.get_rule("no-such-rule")
+    names = [r.name for r in lint.list_rules()]
+    assert names == sorted(names) and "dma-pairing" in names
+
+
+# ---------------------------------------------------------------------------
+# Layer 2: runtime sanitizers
+# ---------------------------------------------------------------------------
+def test_retrace_guard_catches_per_call_jit():
+    # PR 5's bug class: a FRESH jax.jit wrapper per call compiles every
+    # call for the same signature (ISSUE acceptance demo)
+    s = Sanitizer(strict=False)
+    x = jnp.arange(7.0)
+    sig = jit_signature("demo", x)
+    for _ in range(3):
+        f = jax.jit(lambda v: v * 2.0)     # noqa: B023 — the bug on purpose
+        with s.expect_cached(sig):
+            f(x).block_until_ready()
+    assert s.counters()["retraces"] >= 1
+    assert not s.clean
+
+
+def test_retrace_guard_passes_cached_jit():
+    s = Sanitizer(strict=True)
+    x = jnp.arange(7.0)
+    f = jax.jit(lambda v: v * 3.0)
+    sig = jit_signature("demo-cached", x)
+    for _ in range(4):
+        with s.expect_cached(sig):
+            f(x).block_until_ready()
+    assert s.counters()["retraces"] == 0 and s.clean
+
+
+def test_retrace_guard_strict_raises():
+    s = Sanitizer(strict=True)
+    x = jnp.arange(5.0)
+    sig = jit_signature("demo-strict", x)
+    with s.expect_cached(sig):
+        jax.jit(lambda v: v - 1.0)(x).block_until_ready()
+    with pytest.raises(SanitizeError, match="retrace"):
+        with s.expect_cached(sig):
+            jax.jit(lambda v: v - 1.0)(x).block_until_ready()
+
+
+def test_jit_signature_distinguishes_shapes_not_values():
+    a, b = jnp.zeros((4,)), jnp.ones((4,))
+    assert jit_signature("t", a) == jit_signature("t", b)
+    assert jit_signature("t", a) != jit_signature("t", jnp.zeros((8,)))
+    assert jit_signature("t", a) != jit_signature("u", a)
+
+
+def test_host_sync_guard_allowlist_and_trip():
+    s = Sanitizer(strict=True)
+    x = jnp.arange(4)
+    # outside any scope: plain asarray, nothing recorded
+    np.testing.assert_array_equal(host_read(x, reason="anything"),
+                                  np.arange(4))
+    with s.no_host_sync("build"):
+        host_read(x, reason="tier-drain")          # allowlisted
+        host_read(x, reason="disagg-handoff")      # allowlisted
+        with pytest.raises(SanitizeError, match="rogue"):
+            host_read(x, reason="rogue")
+    c = s.counters()
+    assert c["allowed_host_syncs"] == 2
+    assert c["transfer_guard_trips"] == 1
+
+    lenient = Sanitizer(strict=False)
+    with lenient.no_host_sync("build"):
+        host_read(x, reason="rogue")               # counted, not raised
+    assert lenient.counters()["transfer_guard_trips"] == 1
+
+
+def test_allocator_invariants_clean_and_corrupted():
+    alloc = BlockAllocator(num_blocks=8, block_size=4)
+    alloc.allocate(1, 8)
+    alloc.check_invariants()                       # healthy state passes
+    # corruption: mark a free block as refcounted behind the API's back
+    phantom = alloc._free[-1]
+    alloc._ref[phantom] = 1
+    with pytest.raises(ValueError, match="free and refcounted"):
+        alloc.check_invariants()
+    del alloc._ref[phantom]
+    # corruption: refcount disagrees with table occurrences
+    blk = alloc.table(1)[0]
+    alloc._ref[blk] += 1
+    with pytest.raises(ValueError, match="disagree"):
+        alloc.check_invariants()
+    alloc._ref[blk] -= 1
+    alloc.free(1)
+    alloc.check_invariants(drained=True)           # both pools fully drain
+
+    s = Sanitizer()
+    alloc._ref[0] = 3                              # corrupt again
+    with pytest.raises(SanitizeError, match="allocator invariant"):
+        s.check_allocator(alloc)
+    assert s.counters()["invariant_checks"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: a sanitized run is clean and bit-identical
+# ---------------------------------------------------------------------------
+def _run_engine(sanitize):
+    from repro.config import ServeConfig, get_config
+    from repro.models.api import build_model
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = get_config("smollm-360m").reduced(dtype="float32")
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    serve = ServeConfig(model=cfg.name, kv_block_size=4, max_batch=3,
+                        overlap=True, sanitize=sanitize)
+    eng = ServingEngine(model, params, cfg, serve, num_blocks=48, eos_id=-1)
+    rng = np.random.default_rng(7)
+    for i in range(3):
+        eng.submit(Request(
+            req_id=i,
+            prompt=rng.integers(0, cfg.vocab_size, (10,), dtype=np.int32),
+            max_new_tokens=5))
+    eng.run_until_done()
+    outs = {r.req_id: list(r.output) for r in eng.finished}
+    return outs, eng.metrics()
+
+
+def test_sanitized_engine_run_is_clean_and_bit_identical():
+    base_outs, base_m = _run_engine(sanitize=False)
+    outs, m = _run_engine(sanitize=True)
+    assert outs == base_outs                # guards never perturb the run
+    assert base_m["sanitize"]["enabled"] is False
+    san = m["sanitize"]
+    assert san["enabled"] is True
+    assert san["retraces"] == 0
+    assert san["transfer_guard_trips"] == 0
+    assert san["invariant_checks"] > 0
+    # counters ride beside the policy counters for benchmark rows
+    assert m["policy_counters"]["sanitize.retraces"] == 0

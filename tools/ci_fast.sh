@@ -12,6 +12,17 @@
 # explicit arguments, which outrank the env pin.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+# Lint stage: the repo-specific architectural linter (docs/static_analysis.md)
+# runs FIRST — it imports only the standard library, so a contract violation
+# (private allocator access, ad-hoc backend dispatch, unpaired DMA,
+# unreachable tunable, wall-clock in device code, missing parity enrollment)
+# fails the build before anything pays for a jax import. --json prints the
+# findings machine-readably; nonzero exit on any finding aborts via set -e.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.analysis.lint --json src
+echo "lint OK: src/ clean"
+
 REPRO_BACKEND=ref \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -q -m "not slow" "$@"
@@ -302,3 +313,58 @@ assert float(tiered["prefix_hit_rate"]) > float(hbm["prefix_hit_rate"]), (
 print(f"disagg bench smoke OK: handoffs={split['handoffs']}, hit rate "
       f"{hbm['prefix_hit_rate']} -> {tiered['prefix_hit_rate']} with host tier")
 PY
+
+# Sanitized smoke (docs/static_analysis.md): one engine under all three
+# runtime guards — retrace guard (strict: any steady-state recompile of a
+# seen step signature raises), host-sync guard around the overlap build
+# half, and per-step allocator invariant checks. Overlap + a starved
+# tiered pool exercise the documented tier-drain host roundtrip, so the
+# run must finish with retraces == 0, transfer_guard_trips == 0,
+# invariant_checks > 0 and allowed_host_syncs > 0 — proving the allowlist
+# routes the intentional copies while everything else stays guarded.
+REPRO_BACKEND=ref \
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python - <<'PY'
+import numpy as np, jax
+from repro.config import ServeConfig, get_config
+from repro.models.api import build_model
+from repro.serving.engine import Request, ServingEngine
+
+cfg = get_config("smollm-360m").reduced(dtype="float32")
+model = build_model(cfg, remat=False)
+params = model.init(jax.random.PRNGKey(0))
+serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=1,
+                    overlap=True, eviction="tiered", host_blocks=12,
+                    sanitize=True)
+eng = ServingEngine(model, params, cfg, serve, num_blocks=7)
+rng = np.random.default_rng(1)
+prompts = [rng.integers(0, cfg.vocab_size, (24,), dtype=np.int32)
+           for _ in range(3)]
+rid = 0
+for _ in range(2):
+    for p in prompts:
+        for _ in range(2):
+            eng.submit(Request(req_id=rid, prompt=p, max_new_tokens=4))
+            rid += 1
+        eng.run_until_done()
+san = eng.metrics()["sanitize"]
+assert san["enabled"] is True, san
+assert san["retraces"] == 0, san
+assert san["transfer_guard_trips"] == 0, san
+assert san["invariant_checks"] > 0, san
+assert san["allowed_host_syncs"] > 0, san     # tier drains went via host_read
+eng.alloc.check_invariants(drained=True)      # idle engine fully drains
+print(f"sanitized smoke OK: retraces=0 trips=0 "
+      f"invariant_checks={san['invariant_checks']} "
+      f"allowed_host_syncs={san['allowed_host_syncs']}")
+PY
+
+# Saturation smoke under the guards: benchmarks/saturation.py itself asserts
+# zero retraces / zero trips across the saturated overlap-off and overlap-on
+# waves when REPRO_SANITIZE=1 (the retrace-guard assertion of the benchmark
+# tier) — the run aborts on any steady-state recompile.
+REPRO_SANITIZE=1 REPRO_BENCH_SMOKE=1 REPRO_BACKEND=ref \
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -c "from benchmarks import saturation; saturation.run(quick=True)" \
+    >/dev/null
+echo "sanitized saturation smoke OK"
