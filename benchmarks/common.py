@@ -1,14 +1,33 @@
 """Shared benchmark utilities: timing + CSV emission + TPU roofline model."""
 from __future__ import annotations
 
+import os
+import subprocess
 import time
 from typing import Callable, Dict, List
 
 import jax
 
+# The one schema constant: repro.perf.gate refuses to diff result files whose
+# trace-replay results don't carry exactly this version (docs/perf_gate.md).
+from repro.perf.table import SCHEMA_VERSION  # noqa: F401  (re-export)
 from repro.roofline.analysis import HW
 
 _HW = HW()
+
+
+def git_commit() -> str:
+    """Best-effort short commit hash of the repo checkout ("unknown" if any
+    part fails — benchmarks must run from a tarball too)."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             cwd=repo, capture_output=True, text=True,
+                             timeout=10)
+        commit = out.stdout.strip()
+        return commit if out.returncode == 0 and commit else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
 
 # Rows emitted since the last clear — the harness (benchmarks/run.py) drains
 # this to build per-backend JSON for its --backend sweep.
@@ -33,6 +52,16 @@ def tpu_time_model(flops: float, bytes_moved: float) -> float:
     return max(flops / _HW.peak_bf16, bytes_moved / _HW.hbm_bw)
 
 
-def emit(name: str, us: float, derived: str) -> None:
-    RECORDS.append({"name": name, "us_per_call": us, "derived": derived})
+def emit(name: str, us: float, derived: str, **attrs: object) -> None:
+    """Record one benchmark row.
+
+    ``attrs`` become extra row keys (e.g. ``seed=`` — the RNG key that
+    generated the row's workload, part of the provenance satellite; or a
+    row-level ``policy=`` that the harness will NOT overwrite with its
+    pass-level attribution).
+    """
+    record: Dict[str, object] = {"name": name, "us_per_call": us,
+                                 "derived": derived}
+    record.update(attrs)
+    RECORDS.append(record)
     print(f"{name},{us:.1f},{derived}")

@@ -52,6 +52,12 @@ subprocess).
 | llm_e2e                | Fig 12, 17 d-e     |
 | saturation             | S4.2 pipeline      |
 | disagg                 | S4.2 disaggregation|
+| trace_replay           | S5 trace replay / SLO sweep (docs/perf_gate.md) |
+
+Every ``--json`` result carries provenance: ``schema_version`` (bumped on
+incompatible row-grammar changes — ``repro.perf.gate`` refuses to diff a
+mismatch), a best-effort ``git_commit``, and per-row ``seed`` where the
+module's workload is RNG-generated.
 """
 from __future__ import annotations
 
@@ -81,11 +87,15 @@ MODULES = [
     "llm_e2e",
     "saturation",
     "disagg",
+    "trace_replay",
 ]
 
 # Modules that build serving engines — the only ones whose numbers can
 # depend on the serving-policy triple. A --policy sweep re-runs just these
 # per triple; everything else runs once (under the first triple's scope).
+# trace_replay is deliberately NOT here: it sweeps policy triples itself
+# with explicit ctor args (which outrank any force_policies scope), so an
+# outer --policy pass cannot change its numbers.
 POLICY_SENSITIVE = {"llm_e2e", "saturation", "disagg"}
 # Likewise for the speculative-decoding proposer (--spec sweep).
 SPEC_SENSITIVE = {"llm_e2e"}
@@ -256,6 +266,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     results = []
+    commit = common.git_commit()
     for b in backends:
         if b is not None:
             print(f"# backend sweep: {b}", file=sys.stderr)
@@ -299,6 +310,8 @@ def main() -> None:
                 sanitized = os.environ.get("REPRO_SANITIZE") == "1"
                 results.append({
                     "module": m,
+                    "schema_version": common.SCHEMA_VERSION,
+                    "git_commit": commit,
                     "requested_backend": b or "auto",
                     "requested_policy": pol_str or "default",
                     "requested_spec": spc or "default",
@@ -310,10 +323,13 @@ def main() -> None:
                     "rows": [dict(r) for r in common.RECORDS],
                 })
                 for r in results[-1]["rows"]:
+                    # setdefault: rows that self-attribute via emit(**attrs)
+                    # (trace_replay's internal policy sweep) keep their own
+                    # per-row triple over the pass-level rollup.
                     if resolved_pol:
-                        r["policy"] = resolved_pol
+                        r.setdefault("policy", resolved_pol)
                     if resolved_spec:
-                        r["spec"] = resolved_spec
+                        r.setdefault("spec", resolved_spec)
                     r["sanitize"] = sanitized
                 print(f"# {m} done in {time.time()-t0:.1f}s"
                       + (f" [backend={b}]" if b else "")

@@ -1,0 +1,165 @@
+"""Trace-replay SLO sweep: the perf table behind `--policy auto` and the gate.
+
+Replays the pinned synthetic traces (repro.perf.trace — bursty /
+shared-prefix / long-tail / mixed, fixed seeds and sizes) through the serving
+engine under a sweep of configurations: fixed policy triples, the
+``predicted-length`` cost-model admission, a speculative (ngram) pass, an
+overlapped-loop pass, and finally the ``auto`` triple resolved from the table
+built *in this run* from the fixed-triple rows.  Every row's ``derived``
+string is a full (scenario, config) attribution cell — the policy triple,
+spec/overlap flags, the SLO verdict, and the deterministic replay counters
+(steps, p99 TTFT/TPOT in steps, tokens/step, prefix hits, preemptions) that
+``repro.perf.gate`` diffs in CI.  Wall time is emitted but never gated.
+
+Traces and configs are identical under ``REPRO_BENCH_SMOKE=1`` — smoke only
+restricts which *scenarios* run (the mixed trace) — so smoke rows are
+bit-comparable against the committed quick-mode ``BENCH_009.json``.
+
+Asserted perf, not printed perf: the module itself asserts that the ``auto``
+row meets-or-beats every fixed triple's objective on each scenario (it runs
+the measured winner, so equality is the floor), and that auto resolution was
+counted in ``policy_counters``.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.config import ServeConfig, get_config
+from repro.perf.replay import Slo, replay, score
+from repro.perf.table import AXES, PerfTable, perf_context
+from repro.perf.trace import LengthModel, generate
+from repro.serving.engine import ServingEngine
+
+# Pinned scenarios: trace parameters, pool sizing (deliberately starved so
+# policies differentiate), and the p99 SLO targets in virtual seconds.
+# Changing ANY value here invalidates the committed BENCH_009.json baseline —
+# regenerate it in the same change (docs/perf_gate.md).
+SCENARIOS = {
+    "bursty": dict(seed=101, n_requests=12, slo=Slo(ttft_s=1.5, tpot_s=0.3)),
+    "shared-prefix": dict(seed=202, n_requests=12,
+                          slo=Slo(ttft_s=1.5, tpot_s=0.3)),
+    "long-tail": dict(seed=303, n_requests=12,
+                      slo=Slo(ttft_s=1.5, tpot_s=0.35)),
+    "mixed": dict(seed=404, n_requests=12, slo=Slo(ttft_s=1.5, tpot_s=0.3)),
+}
+TRACE_KWARGS = dict(prompt_hi=16, gen_cap=14)
+NUM_BLOCKS = 10
+MAX_BATCH = 3
+KV_BLOCK_SIZE = 8
+
+# (label, admission/preemption/eviction, spec, overlap).  The auto row runs
+# last against the table built from the fixed rows above it.
+CONFIGS = [
+    ("fcfs", ("fcfs", "latest-arrival", "lru"), "off", False),
+    ("prio", ("priority", "fewest-remaining-tokens", "hit-rate"),
+     "off", False),
+    ("edf", ("deadline-slo", "most-blocks", "refcount-aware"), "off", False),
+    ("plen", ("predicted-length", "latest-arrival", "lru"), "off", False),
+    ("ngram", ("fcfs", "latest-arrival", "lru"), "ngram", False),
+    ("overlap", ("fcfs", "latest-arrival", "lru"), "off", True),
+    ("auto", ("auto", "auto", "auto"), "off", False),
+]
+
+
+def _run_one(model, params, cfg, scenario, trace, slo, triple, spec_name,
+             overlap, *, table, length_model):
+    serve = ServeConfig(model=cfg.name, kv_block_size=KV_BLOCK_SIZE,
+                        max_batch=MAX_BATCH, spec=spec_name, spec_k=3,
+                        overlap=overlap)
+    adm, pre, evi = triple
+    with perf_context(scenario=scenario, table=table,
+                      length_model=length_model):
+        eng = ServingEngine(model, params, cfg, serve, num_blocks=NUM_BLOCKS,
+                            admission=adm, preemption=pre, eviction=evi)
+    t0 = time.time()
+    result = replay(eng, trace)
+    dt = time.time() - t0
+    report = score(result, slo)
+    return eng, result, report, dt
+
+
+def _row(scenario, label, trace, triple, spec_name, overlap, result, report):
+    adm, pre, evi = triple
+    c = result.counters()
+    period = trace.step_period
+    derived = (
+        f"scenario={scenario};admission={adm};preemption={pre};"
+        f"eviction={evi};spec={spec_name};"
+        f"overlap={'on' if overlap else 'off'};"
+        f"slo_ok={1 if report.ok else 0};"
+        f"p99_ttft_steps={c['p99_ttft_steps']};"
+        f"p99_tpot_steps={c['p99_tpot_steps']};"
+        f"p99_ttft_vs={c['p99_ttft_steps'] * period:.3f};"
+        f"p99_tpot_vs={c['p99_tpot_steps'] * period:.4f};"
+        f"att_ttft={report.attainment_ttft};"
+        f"att_tpot={report.attainment_tpot};"
+        f"steps={c['steps']};finished={c['finished']};"
+        f"out_tokens={c['out_tokens']};tok_per_step={c['tok_per_step']};"
+        f"prefix_hits={c['prefix_hits']};preempt={c['preempt']};"
+        f"idle_ff={c['idle_ff']}")
+    return f"trace_{scenario}_{label}", derived
+
+
+def run(quick: bool = True) -> None:
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    from repro.models.api import build_model
+    cfg = get_config("smollm-360m").reduced(dtype="float32")
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+
+    scenarios = ["mixed"] if smoke else list(SCENARIOS)
+    for scenario in scenarios:
+        params_s = SCENARIOS[scenario]
+        trace = generate(scenario, seed=params_s["seed"],
+                         n_requests=params_s["n_requests"],
+                         vocab_size=cfg.vocab_size, **TRACE_KWARGS)
+        slo = params_s["slo"]
+        length_model = LengthModel.fit(trace)
+        fixed_rows = []
+        for label, triple, spec_name, overlap in CONFIGS:
+            if label == "auto":
+                continue
+            eng, result, report, dt = _run_one(
+                model, params, cfg, scenario, trace, slo, triple, spec_name,
+                overlap, table=None, length_model=length_model)
+            name, derived = _row(scenario, label, trace, triple, spec_name,
+                                 overlap, result, report)
+            emit(name, dt * 1e6, derived, seed=trace.seed,
+                 policy="/".join(triple))
+            fixed_rows.append(dict([kv.split("=", 1)
+                                    for kv in derived.split(";")],
+                                   name=name))
+
+        # Consumption pass: `auto` resolves the per-scenario winner from the
+        # table just measured (the same resolution path the committed
+        # BENCH_009.json feeds at launch time).
+        table = PerfTable(fixed_rows)
+        winner = table.winner(scenario)
+        label, triple, spec_name, overlap = CONFIGS[-1]
+        eng, result, report, dt = _run_one(
+            model, params, cfg, scenario, trace, slo, triple, spec_name,
+            overlap, table=table, length_model=length_model)
+        counters = eng.metrics()["policy_counters"]
+        resolved = "/".join(winner[a] for a in AXES)
+        name, derived = _row(scenario, label, trace, triple, spec_name,
+                             overlap, result, report)
+        derived += f";resolved={resolved}"
+        emit(name, dt * 1e6, derived, seed=trace.seed,
+             policy="/".join(triple))
+
+        # Asserted perf: auto ran the measured winner, so its objective can
+        # never be worse than the best fixed triple — and resolution (not
+        # fallback) must have been counted on every axis.
+        for axis in AXES:
+            assert counters.get(f"{axis}.auto_resolved", 0) >= 1, (
+                scenario, axis, counters)
+        auto_row = dict([kv.split("=", 1) for kv in derived.split(";")])
+        auto_obj = PerfTable.objective(auto_row)
+        best_fixed = table.best_objective(scenario)
+        assert auto_obj[:4] <= best_fixed[:4], (
+            f"{scenario}: auto {auto_obj} worse than best fixed "
+            f"{best_fixed}")

@@ -343,3 +343,51 @@ def check_wallclock(ctx: LintContext) -> Iterable[Finding]:
                         message=f"{fname}(...) inside device function "
                                 f"{fn.name!r} — its value freezes at trace "
                                 f"time; hoist it to the host caller")
+
+
+def _registered_policy_names(mod: Module) -> List[Tuple[str, int]]:
+    """(policy_name, lineno) for every ``register(AXIS, "name")`` call —
+    decorator or direct — in a policy-registry module."""
+    out = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if not _unparse(node.func).endswith("register"):
+            continue
+        if len(node.args) < 2:
+            continue
+        axis, name = node.args[0], node.args[1]
+        if not isinstance(axis, (ast.Name, ast.Attribute)):
+            continue
+        if not (isinstance(name, ast.Constant)
+                and isinstance(name.value, str)):
+            continue
+        out.append((name.value, node.lineno))
+    return out
+
+
+@rule("policy-enrollment")
+def check_policy_enrollment(ctx: LintContext) -> Iterable[Finding]:
+    """Every policy registered in ``serving/policy.py`` is named in
+    ``tests/test_policy.py``.
+
+    The policy parity sweep enumerates ``policy.names(axis)`` so new
+    policies ride automatically, but its SHIPPED registry-shape check (and
+    any policy-specific behaviour test) names policies explicitly — a
+    registration that never appears in the suite is a policy nobody asserted
+    anything about.  Mirrors op-ref-parity's enrollment check.
+    """
+    text = ctx.read_test("test_policy.py")
+    if text is None:            # no tests dir to check against
+        return
+    for mod in ctx.modules:
+        if not mod.rel("serving/policy.py"):
+            continue
+        for name, line in _registered_policy_names(mod):
+            if f'"{name}"' not in text and f"'{name}'" not in text:
+                yield Finding(
+                    rule="policy-enrollment", path=mod.path, line=line,
+                    message=f"policy {name!r} registered in "
+                            f"serving/policy.py but never named in "
+                            f"test_policy.py — enroll it in the SHIPPED "
+                            f"registry-shape check")

@@ -336,9 +336,15 @@ class ServeConfig:
     # Serving-policy preferences (the config level of repro.serving.policy
     # precedence: overridden by explicit ctor args and force_policies scopes;
     # names are validated strictly — there is no capability fallback).
-    admission: str = "fcfs"        # fcfs | priority | deadline-slo
-    preemption: str = "latest-arrival"   # | fewest-remaining-tokens | most-blocks
-    eviction: str = "lru"          # lru | hit-rate | refcount-aware | tiered
+    # "auto" on any axis delegates to the per-scenario winner measured in the
+    # committed perf table (repro.perf, docs/perf_gate.md);
+    # "predicted-length" admission ranks by a trace-learned decode estimate.
+    admission: str = "fcfs"        # fcfs | priority | deadline-slo |
+    #                                predicted-length | auto
+    preemption: str = "latest-arrival"   # | fewest-remaining-tokens |
+    #                                      most-blocks | auto
+    eviction: str = "lru"          # lru | hit-rate | refcount-aware |
+    #                                tiered | auto
     # Speculative decoding (repro.serving.spec): proposer name resolved
     # through the spec registry ("off" = one token per request per step),
     # and the max draft tokens verified per request per step.
@@ -381,6 +387,12 @@ class ServeConfig:
     # BlockAllocator.check_invariants after every commit.  Counters surface
     # in metrics() as sanitize.*; violations raise SanitizeError.
     sanitize: bool = False
+    # Trace replay (repro.perf, docs/perf_gate.md): path to a Trace JSON the
+    # launcher replays in deterministic virtual time instead of the synthetic
+    # workload ("" = synthetic).  The trace's scenario keys the `auto`
+    # triple's perf-table lookup and its history fits the predicted-length
+    # cost model.
+    trace: str = ""
     parallel: ParallelConfig = field(default_factory=ParallelConfig)
     seed: int = 0
 

@@ -1,9 +1,15 @@
 """Serving launcher: continuous-batching engine with the paged BlockList
 PagedAttention (the paper's technique) — ``python -m repro.launch.serve
---arch smollm-360m --requests 8 --reduced``."""
+--arch smollm-360m --requests 8 --reduced``.
+
+``--trace path.json`` replays a recorded/synthetic trace (repro.perf) in
+deterministic virtual time instead of the synthetic workload and reports the
+SLO scorecard; ``--policy auto`` resolves the whole policy triple from the
+committed perf table for the trace's scenario (docs/perf_gate.md)."""
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -34,6 +40,20 @@ def main() -> None:
                        help=f"serving {axis} policy (repro.serving.policy); "
                             "resolved through the policy registry and "
                             "reported in metrics")
+    p.add_argument("--policy", default="",
+                   help="convenience triple: one name for all three axes "
+                        "(e.g. 'auto') or 'admission/preemption/eviction'; "
+                        "overrides the per-axis flags")
+    p.add_argument("--trace", default="",
+                   help="path to a repro.perf.trace JSON to replay in "
+                        "deterministic virtual time instead of the synthetic "
+                        "workload (docs/perf_gate.md)")
+    p.add_argument("--slo-ttft", type=float, default=1.0,
+                   help="p99 TTFT target in virtual seconds for --trace "
+                        "scoring")
+    p.add_argument("--slo-tpot", type=float, default=0.3,
+                   help="p99 TPOT target in virtual seconds for --trace "
+                        "scoring")
     from repro.serving import spec as spec_lib
     p.add_argument("--spec", default=spec_lib.OFF,
                    choices=spec_lib.names() + sorted(spec_lib.ALIASES),
@@ -79,6 +99,13 @@ def main() -> None:
                         "host LRU and promote back on prefix hit — pair "
                         "with --eviction tiered (docs/disaggregated.md)")
     args = p.parse_args()
+    if args.policy:
+        parts = args.policy.split("/")
+        if len(parts) == 1:
+            parts = parts * 3
+        if len(parts) != 3:
+            p.error("--policy takes one name or admission/preemption/eviction")
+        args.admission, args.preemption, args.eviction = parts
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -94,35 +121,72 @@ def main() -> None:
                         prefetch_depth=args.prefetch_depth,
                         q_chunk=args.q_chunk,
                         sanitize=args.sanitize == "on",
-                        roles=args.roles, host_blocks=args.host_blocks)
-    total_blocks = args.requests * (
-        -(-(args.prompt_len + args.max_new) // args.block_size) + 1)
+                        roles=args.roles, host_blocks=args.host_blocks,
+                        trace=args.trace)
+    trace = None
+    ctx = contextlib.nullcontext()
+    if serve.trace:
+        from repro.perf.table import perf_context
+        from repro.perf.trace import LengthModel, Trace
+        trace = Trace.load(serve.trace)
+        # Full-fit pool for the demo CLI; the benchmark scenarios starve the
+        # pool deliberately, the launcher shouldn't.
+        total_blocks = sum(
+            -(-(len(r.prompt) + r.max_new_tokens) // args.block_size) + 1
+            for r in trace.requests)
+        # The replay context keys the `auto` triple's perf-table lookup and
+        # feeds predicted-length's cost model; engines resolve policies at
+        # construction, so it must wrap the ctor.
+        ctx = perf_context(scenario=trace.scenario,
+                           length_model=LengthModel.fit(trace))
+    else:
+        total_blocks = args.requests * (
+            -(-(args.prompt_len + args.max_new) // args.block_size) + 1)
     # ServeConfig.devices > 1 makes the engine build the serving mesh itself
     # (repro.launch.mesh.make_serving_mesh) and run the sharded fused step.
     # ServeConfig.roles builds the disaggregated two-role frontend instead:
     # prefill and decode engines each get the full pool (equal HBM per
     # role), pinned to separate devices when the host has two or more.
-    if serve.roles:
-        from repro.serving.disagg import DisaggEngine
-        devs = jax.devices()
-        pair = (devs[0], devs[1]) if len(devs) >= 2 else None
-        engine = DisaggEngine(model, params, cfg, serve,
-                              num_blocks=total_blocks, devices=pair)
-    else:
-        engine = ServingEngine(model, params, cfg, serve,
-                               num_blocks=total_blocks)
+    with ctx:
+        if serve.roles:
+            from repro.serving.disagg import DisaggEngine
+            devs = jax.devices()
+            pair = (devs[0], devs[1]) if len(devs) >= 2 else None
+            engine = DisaggEngine(model, params, cfg, serve,
+                                  num_blocks=total_blocks, devices=pair)
+        else:
+            engine = ServingEngine(model, params, cfg, serve,
+                                   num_blocks=total_blocks)
 
-    rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        engine.submit(Request(
-            req_id=i,
-            prompt=rng.integers(0, cfg.vocab_size, (args.prompt_len,),
-                                dtype=np.int32),
-            max_new_tokens=args.max_new))
     t0 = time.time()
-    engine.run_until_done()
+    if trace is not None:
+        from repro.perf import replay as replay_lib
+        result = replay_lib.replay(engine, trace)
+        report = replay_lib.score(result, replay_lib.Slo(
+            ttft_s=args.slo_ttft, tpot_s=args.slo_tpot))
+    else:
+        rng = np.random.default_rng(0)
+        for i in range(args.requests):
+            engine.submit(Request(
+                req_id=i,
+                prompt=rng.integers(0, cfg.vocab_size, (args.prompt_len,),
+                                    dtype=np.int32),
+                max_new_tokens=args.max_new))
+        engine.run_until_done()
     dt = time.time() - t0
     m = engine.metrics()
+    if trace is not None:
+        c = result.counters()
+        print(f"replayed trace {trace.name} [{trace.scenario}] "
+              f"{len(trace.requests)} requests in {result.steps} virtual "
+              f"steps ({c['idle_ff']} idle fast-forwards)")
+        print(f"virtual TTFT p50 {report.p50_ttft_s:.2f} / p99 "
+              f"{report.p99_ttft_s:.2f} s  TPOT p50 {report.p50_tpot_s:.3f} "
+              f"/ p99 {report.p99_tpot_s:.3f} s  attainment "
+              f"ttft={report.attainment_ttft:.0%} "
+              f"tpot={report.attainment_tpot:.0%}  "
+              f"SLO {'MET' if report.ok else 'MISSED'} "
+              f"(targets {args.slo_ttft}s / {args.slo_tpot}s)")
     print(f"served {m['finished']} requests, {m['output_tokens']} tokens "
           f"in {dt:.2f}s ({m['output_tokens']/dt:.1f} tok/s) "
           f"[backend={m['backend']} devices={m['devices']} "

@@ -1,0 +1,28 @@
+"""Trace-replay and performance-attribution subsystem (docs/perf_gate.md).
+
+The paper's method is systematic microbenchmark -> end-to-end workload
+attribution; this package closes the loop so measured performance becomes an
+*input* to the serving stack instead of just an output:
+
+* :mod:`repro.perf.trace`   — the ``Trace`` format: seeded synthetic request
+  mixtures (bursty / shared-prefix / long-tail / mixed) with arrival times,
+  prompt/gen-length distributions and priority/deadline fields, JSON
+  load/save, and the prompt-length-bucketed decode-length model.
+* :mod:`repro.perf.replay`  — feeds a serving engine from trace arrivals in
+  deterministic virtual time (one engine step = one tick) and scores the
+  run against p99 TTFT/TPOT SLOs.
+* :mod:`repro.perf.table`   — the measured perf table keyed by
+  (scenario, config): per-scenario winner resolution consumed by the
+  registered ``auto`` policy triple, plus the thread-local replay context
+  (active scenario / table / length model).
+* :mod:`repro.perf.gate`    — the CI regression gate:
+  ``python -m repro.perf.gate --baseline BENCH_009.json --current new.json
+  --threshold 0.2`` diffs pinned scenarios on deterministic counters and
+  exits nonzero on regression.
+"""
+from repro.perf.table import (SCHEMA_VERSION, PerfTable, SchemaError,
+                              perf_context)
+from repro.perf.trace import LengthModel, Trace, TraceRequest, generate
+
+__all__ = ["SCHEMA_VERSION", "PerfTable", "SchemaError", "perf_context",
+           "Trace", "TraceRequest", "LengthModel", "generate"]

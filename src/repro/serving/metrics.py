@@ -9,7 +9,23 @@ from __future__ import annotations
 
 import bisect
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
+
+
+def percentile(samples: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile: smallest sample with rank >= ceil(pn).
+
+    The ONE percentile definition in the repo — :class:`LatencyTracker` and
+    the trace replayer's SLO scoring (:mod:`repro.perf.replay`) both call it,
+    so a p99 here and a p99 in a replay row mean the same statistic.  Accepts
+    any sequence (sorted or not); empty returns 0.0.
+    """
+    if not samples:
+        return 0.0
+    ordered = sorted(samples)
+    n = len(ordered)
+    i = max(-(-int(p * n) // 100) - 1, 0)         # ceil(p/100 * n) - 1
+    return ordered[min(i, n - 1)]
 
 
 @dataclass
@@ -22,12 +38,7 @@ class LatencyTracker:
         bisect.insort(self.samples, v)
 
     def percentile(self, p: float) -> float:
-        """Nearest-rank percentile: smallest sample with rank >= ceil(pn)."""
-        if not self.samples:
-            return 0.0
-        n = len(self.samples)
-        i = max(-(-int(p * n) // 100) - 1, 0)     # ceil(p/100 * n) - 1
-        return self.samples[min(i, n - 1)]
+        return percentile(self.samples, p)
 
     @property
     def mean(self) -> float:
@@ -110,9 +121,11 @@ class EngineMetrics:
             "output_tokens": self.output_tokens,
             "mean_ttft_s": self.ttft.mean,
             "p50_ttft_s": self.ttft.percentile(50),
+            "p90_ttft_s": self.ttft.percentile(90),
             "p99_ttft_s": self.ttft.percentile(99),
             "mean_tpot_s": self.tpot.mean,
             "p50_tpot_s": self.tpot.percentile(50),
+            "p90_tpot_s": self.tpot.percentile(90),
             "p99_tpot_s": self.tpot.percentile(99),
             "throughput_tok_s": self.output_tokens / dt if dt > 0 else 0.0,
             "steps": self.steps,

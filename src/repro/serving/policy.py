@@ -483,3 +483,109 @@ class TieredEviction(EvictionPolicy):
         keep = st.hits > 0 or st.peak_ref > 1
         self.count("demoted" if keep else "dropped")
         return keep
+
+# --------------------------------------------------------------------------
+# Measured-table consumption (repro.perf, docs/perf_gate.md): policies whose
+# behaviour is derived from trace-replay evidence rather than fixed heuristics.
+# The `auto` triple delegates its scoring methods to the per-scenario winner
+# from the committed perf table (BENCH_009.json); `predicted-length` admission
+# orders the queue by a decode-length cost model fit from trace history.
+# Both resolve their inputs from the thread-local replay context
+# (repro.perf.table.perf_context) at construction time — which is when the
+# engine resolves its triple — and fall back to deterministic defaults with a
+# counted reason when no context/table is active.
+# --------------------------------------------------------------------------
+class _AutoDelegate:
+    """Shared winner-resolution for the `auto` policies.
+
+    Looks up the active (scenario, perf-table) pair and instantiates the
+    winning concrete policy for this axis.  Counters land on the *auto*
+    instance (`auto_resolved`/`auto_fallback` + a readable `resolved_<name>`
+    marker); only scoring decisions are delegated, so scheduling is
+    bit-identical to running the winner triple directly.
+    """
+
+    def _resolve_delegate(self) -> Policy:
+        from repro.perf import table as perf_table  # lazy: no cycle at import
+        name = perf_table.resolve_winner(self.axis)
+        if name is None or name == self.name:
+            self.count("auto_fallback")
+            name = DEFAULTS[self.axis]
+        else:
+            self.count("auto_resolved")
+        self.count(f"resolved_{name.replace('-', '_')}")
+        self.resolved = name
+        return get(self.axis, name)()
+
+
+@register(ADMISSION, "auto")
+class AutoAdmission(AdmissionPolicy, _AutoDelegate):
+    """Admission order of the measured per-scenario winner (else fcfs)."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._impl = self._resolve_delegate()
+
+    def admission_key(self, req: Request, now: float) -> Tuple:
+        return self._impl.admission_key(req, now)
+
+
+@register(PREEMPTION, "auto")
+class AutoPreemption(PreemptionPolicy, _AutoDelegate):
+    """Victim ranking of the measured winner (else latest-arrival)."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._impl = self._resolve_delegate()
+
+    def victim_key(self, req: Request, alloc: BlockAllocator,
+                   now: float) -> Tuple:
+        return self._impl.victim_key(req, alloc, now)
+
+
+@register(EVICTION, "auto")
+class AutoEviction(EvictionPolicy, _AutoDelegate):
+    """Block scoring + demote gate of the measured winner (else lru)."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._impl = self._resolve_delegate()
+
+    def select(self, candidates: Sequence[int],
+               stats: Mapping[int, BlockStats]) -> int:
+        return self._impl.select(candidates, stats)
+
+    def demote(self, block: int, stats: Mapping[int, BlockStats]) -> bool:
+        return self._impl.demote(block, stats)
+
+
+@register(ADMISSION, "predicted-length")
+class PredictedLengthAdmission(AdmissionPolicy):
+    """Shortest-predicted-job-first via a trace-learned decode-length model.
+
+    The cost of admitting a request is its remaining work: tokens still to
+    (re)prefill plus its *predicted* remaining decode length, estimated by
+    the prompt-length-bucketed :class:`repro.perf.trace.LengthModel` from the
+    active replay context.  Without a model the declared ``max_new_tokens``
+    cap is the estimate (counted ``model_absent`` once).  Preempted requests
+    still resume first — same no-starvation rationale as fcfs.
+    """
+
+    def __init__(self) -> None:
+        super().__init__()
+        from repro.perf import table as perf_table  # lazy: no cycle at import
+        self.model = perf_table.active_length_model()
+        if self.model is None:
+            self.count("model_absent")
+
+    def admission_key(self, req: Request, now: float) -> Tuple:
+        resumed = 0 if req.state is RequestState.PREEMPTED else 1
+        done = len(req.output)
+        if self.model is not None:
+            predicted = max(self.model.predict(len(req.prompt)) - done, 0.0)
+        else:
+            predicted = float(req.max_new_tokens - done)
+        # remaining work = (re)prefill of prompt + generated-so-far, plus the
+        # predicted remaining decode
+        remaining = len(req.prompt) + done + predicted
+        return (resumed, remaining, req.arrival, req.req_id)

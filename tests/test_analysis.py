@@ -140,6 +140,51 @@ def test_op_ref_parity_requires_enrollment(tmp_path):
         "dispatch.list_ops() nor names it)"]
 
 
+_POLICY_MOD = """
+    ADMISSION = "admission"
+
+    def register(axis, name):
+        def deco(cls):
+            return cls
+        return deco
+
+    @register(ADMISSION, "fcfs")
+    class Fcfs:
+        pass
+
+    @register(ADMISSION, "ghost")
+    class Ghost:
+        pass
+"""
+
+
+def test_policy_enrollment_rule(tmp_path):
+    # "ghost" is registered but test_policy.py never names it.
+    bad = _lint_tree(tmp_path, {"pkg/serving/policy.py": _POLICY_MOD},
+                     rules=["policy-enrollment"],
+                     tests={"test_policy.py": 'SHIPPED = {"fcfs"}\n'})
+    assert [f.rule for f in bad] == ["policy-enrollment"]
+    assert "'ghost'" in bad[0].message and "SHIPPED" in bad[0].message
+    assert bad[0].path.endswith("policy.py")
+
+    # Either quote style in the suite counts as enrollment.
+    clean = _lint_tree(tmp_path, {"pkg/serving/policy.py": _POLICY_MOD},
+                       rules=["policy-enrollment"],
+                       tests={"test_policy.py":
+                              "SHIPPED = {\"fcfs\", 'ghost'}\n"})
+    assert clean == []
+
+    # Registrations elsewhere than serving/policy.py are out of scope, and
+    # without a tests dir the rule has nothing to check against.
+    elsewhere = _lint_tree(tmp_path, {"pkg/other.py": _POLICY_MOD},
+                           rules=["policy-enrollment"],
+                           tests={"test_policy.py": "SHIPPED = set()\n"})
+    assert elsewhere == []
+    no_tests = _lint_tree(tmp_path, {"pkg/serving/policy.py": _POLICY_MOD},
+                          rules=["policy-enrollment"])
+    assert no_tests == []
+
+
 _TUNABLE_CONFIG = """
     class ServeConfig:
         q_chunk: int = 16

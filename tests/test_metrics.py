@@ -2,7 +2,7 @@
 EngineMetrics rollup — pure host-side, no jax."""
 import pytest
 
-from repro.serving.metrics import EngineMetrics, LatencyTracker
+from repro.serving.metrics import EngineMetrics, LatencyTracker, percentile
 
 
 # ------------------------------------------------------------- percentiles
@@ -47,6 +47,23 @@ def test_p50_p99_on_n100_hit_exact_ranks():
     assert t.mean == pytest.approx(50.5)
 
 
+# ------------------------------------------------------- module-level helper
+def test_percentile_helper_matches_tracker():
+    """The free function is THE percentile definition — LatencyTracker and
+    the replay SLO scorer (repro.perf.replay) both delegate to it, so a
+    replayed p99 and an engine p99 over the same samples always agree."""
+    samples = [4.0, 1.0, 3.0, 2.0]
+    t = LatencyTracker()
+    for v in samples:
+        t.record(v)
+    for p in (0, 25, 50, 75, 90, 99, 100):
+        assert percentile(samples, p) == t.percentile(p)
+    assert percentile(samples, 50) == 2.0       # input order irrelevant
+    assert percentile([], 99) == 0.0
+    assert percentile([7.5], 1) == 7.5
+    assert percentile(list(range(1, 11)), 90) == 9
+
+
 # ----------------------------------------------------------- engine rollup
 def test_engine_metrics_summary_keys_and_types():
     m = EngineMetrics(backend="xla")
@@ -56,14 +73,15 @@ def test_engine_metrics_summary_keys_and_types():
                       arrival=100.5, done_at=102.0)
     s = m.summary()
     assert set(s) == {"backend", "finished", "output_tokens",
-                      "mean_ttft_s", "p50_ttft_s", "p99_ttft_s",
-                      "mean_tpot_s", "p50_tpot_s", "p99_tpot_s",
+                      "mean_ttft_s", "p50_ttft_s", "p90_ttft_s", "p99_ttft_s",
+                      "mean_tpot_s", "p50_tpot_s", "p90_tpot_s", "p99_tpot_s",
                       "throughput_tok_s", "steps", "num_idle_steps",
                       "tokens_per_step", "lane_tokens_per_step", "phase_s"}
     assert s["backend"] == "xla"
     assert s["finished"] == 2
     assert s["output_tokens"] == 10
     assert s["p50_ttft_s"] == 0.2 and s["p99_ttft_s"] == 0.4
+    assert s["p90_ttft_s"] == 0.4 and s["p90_tpot_s"] == 0.02
     # wall clock spans first arrival -> last finish
     assert m.elapsed_s == pytest.approx(2.0)
     assert s["throughput_tok_s"] == pytest.approx(10 / 2.0)

@@ -13,9 +13,11 @@ from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import Scheduler
 
 SHIPPED = {
-    "admission": {"fcfs", "priority", "deadline-slo"},
-    "preemption": {"latest-arrival", "fewest-remaining-tokens", "most-blocks"},
-    "eviction": {"lru", "hit-rate", "refcount-aware", "tiered"},
+    "admission": {"fcfs", "priority", "deadline-slo", "predicted-length",
+                  "auto"},
+    "preemption": {"latest-arrival", "fewest-remaining-tokens", "most-blocks",
+                   "auto"},
+    "eviction": {"lru", "hit-rate", "refcount-aware", "tiered", "auto"},
 }
 
 

@@ -1,0 +1,382 @@
+"""repro.perf: trace generators, virtual-time replay, the perf table behind
+`--policy auto`, and the CI regression gate.
+
+The load-bearing acceptance tests for PR 9 live here: replayed greedy
+streams are bit-identical to direct submit() of the same requests, `auto`
+resolves the measured winner (and falls back counted when no table is
+active), and the gate trips on a planted 20% counter regression."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.perf import gate
+from repro.perf.replay import (ReplayResult, RequestTiming, Slo, replay,
+                               score)
+from repro.perf.table import (AXES, SCHEMA_VERSION, PerfTable, SchemaError,
+                              check_schema, parse_derived, perf_context,
+                              resolve_winner)
+from repro.perf.trace import (SCENARIOS, LengthModel, Trace, TraceRequest,
+                              generate)
+from repro.serving import policy
+from repro.serving.request import Request, RequestState
+
+
+# ------------------------------------------------------------- generators
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_generator_deterministic_under_seed(scenario):
+    a = generate(scenario, seed=42, n_requests=9)
+    b = generate(scenario, seed=42, n_requests=9)
+    assert a.as_dict() == b.as_dict()           # bit-for-bit, prompts included
+    c = generate(scenario, seed=43, n_requests=9)
+    assert a.as_dict() != c.as_dict()
+
+
+def test_generator_invariants():
+    tr = generate("mixed", seed=1, n_requests=10, vocab_size=64, gen_cap=9)
+    assert len(tr.requests) == 10
+    arrivals = [r.arrival for r in tr.requests]
+    assert arrivals == sorted(arrivals)         # sorted on the virtual clock
+    assert [r.req_id for r in tr.requests] == list(range(10))  # renumbered
+    for r in tr.requests:
+        assert all(0 <= t < 64 for t in r.prompt)
+        assert 1 <= r.max_new_tokens <= 9 + 9 // 2   # long-tail outlier cap
+    assert tr.max_positions() == max(len(r.prompt) + r.max_new_tokens
+                                     for r in tr.requests)
+
+
+def test_generator_rejects_unknown_scenario():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        generate("steady", seed=0)
+
+
+def test_trace_save_load_round_trip(tmp_path):
+    tr = generate("shared-prefix", seed=5, n_requests=7)
+    path = str(tmp_path / "t.json")
+    tr.save(path)
+    back = Trace.load(path)
+    assert back == tr                           # dataclass equality, exact
+
+
+def test_trace_rejects_wrong_schema_version():
+    d = generate("bursty", seed=0, n_requests=2).as_dict()
+    d["trace_schema_version"] = 99
+    with pytest.raises(ValueError, match="trace schema"):
+        Trace.from_dict(d)
+
+
+def test_to_requests_offsets_arrival_and_deadline():
+    tr = Trace(name="t", scenario="bursty", seed=0, vocab_size=8,
+               requests=[TraceRequest(req_id=0, arrival=0.5, prompt=[1, 2],
+                                      max_new_tokens=3, priority=2,
+                                      deadline=1.5),
+                         TraceRequest(req_id=1, arrival=0.7, prompt=[3],
+                                      max_new_tokens=2)])
+    reqs = tr.to_requests(base=100.0)
+    assert reqs[0].arrival == 100.5 and reqs[0].deadline == 101.5
+    assert reqs[1].arrival == 100.7 and reqs[1].deadline is None
+    assert reqs[0].prompt.dtype == np.int32
+    assert reqs[0].priority == 2
+
+
+# ------------------------------------------------------------ length model
+def test_length_model_fit_and_predict():
+    tr = Trace(name="t", scenario="mixed", seed=0, vocab_size=8, requests=[
+        TraceRequest(req_id=0, arrival=0.0, prompt=[0] * 6, max_new_tokens=4),
+        TraceRequest(req_id=1, arrival=0.1, prompt=[0] * 7, max_new_tokens=6),
+        TraceRequest(req_id=2, arrival=0.2, prompt=[0] * 14,
+                     max_new_tokens=10)])
+    m = LengthModel.fit(tr)
+    assert m.buckets == {8: 5.0, 16: 10.0}      # pow2-bucketed means
+    assert m.predict(6) == 5.0                  # exact bucket hit
+    assert m.predict(30) == 10.0                # nearest bucket by log2
+    assert m.predict(1) == 5.0
+    empty = LengthModel.fit(Trace(name="e", scenario="mixed", seed=0,
+                                  vocab_size=8, requests=[]))
+    assert empty.predict(12) == empty.default == 1.0
+
+
+# -------------------------------------------------------------- slo scorer
+def _timing(rid, arrival, first, finish, out):
+    return RequestTiming(req_id=rid, arrival_step=arrival, submit_step=arrival,
+                         first_token_step=first, finish_step=finish,
+                         output_tokens=out)
+
+
+def test_slo_scorer_math_on_hand_built_timings():
+    trace = Trace(name="t", scenario="mixed", seed=0, vocab_size=8,
+                  step_period=0.1, requests=[])
+    timings = {
+        0: _timing(0, arrival=0, first=2, finish=6, out=5),   # ttft 0.2s,
+        #                                                       tpot 0.1s
+        1: _timing(1, arrival=0, first=4, finish=4, out=1),   # ttft 0.4s,
+        #                                                       tpot 0.0s
+        2: RequestTiming(req_id=2, arrival_step=3, submit_step=3),  # no token
+    }
+    result = ReplayResult(trace=trace, outputs={}, timings=timings, steps=7,
+                          idle_fastforwards=1, metrics={"prefix_hits": 3,
+                                                        "preemptions": 2})
+    assert result.ttft_virtual_s() == pytest.approx([0.2, 0.4])
+    assert result.tpot_virtual_s() == pytest.approx([0.1, 0.0])
+
+    r = score(result, Slo(ttft_s=0.4, tpot_s=0.1))
+    assert r.p50_ttft_s == pytest.approx(0.2)
+    assert r.p99_ttft_s == pytest.approx(0.4)
+    assert r.p50_tpot_s == pytest.approx(0.0)   # nearest rank over [0.0, 0.1]
+    assert r.p99_tpot_s == pytest.approx(0.1)
+    assert r.attainment_ttft == 1.0 and r.attainment_tpot == 1.0
+    assert r.ok
+    assert not score(result, Slo(ttft_s=0.3, tpot_s=0.1)).ok  # p99 ttft over
+    tight = score(result, Slo(ttft_s=0.3, tpot_s=0.05))
+    assert tight.attainment_ttft == 0.5 and tight.attainment_tpot == 0.5
+
+    c = result.counters()
+    assert c["finished"] == 2 and c["out_tokens"] == 6
+    assert c["steps"] == 7 and c["idle_ff"] == 1
+    assert c["tok_per_step"] == pytest.approx(6 / 7, abs=1e-4)
+    assert c["prefix_hits"] == 3 and c["preempt"] == 2
+    assert c["p99_ttft_steps"] == 4 and c["p99_tpot_steps"] == 1.0
+
+
+def test_score_empty_result_is_not_ok():
+    trace = Trace(name="t", scenario="mixed", seed=0, vocab_size=8,
+                  requests=[])
+    empty = ReplayResult(trace=trace, outputs={}, timings={}, steps=0,
+                         idle_fastforwards=0)
+    assert not score(empty, Slo(ttft_s=10.0, tpot_s=10.0)).ok
+
+
+# ----------------------------------------------------------- replay parity
+@pytest.fixture(scope="module")
+def tiny_serving():
+    from repro.config import ServeConfig, get_config
+    from repro.models.api import build_model
+    from repro.serving.engine import ServingEngine
+    import jax
+
+    cfg = get_config("smollm-360m").reduced(dtype="float32")
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def mk_engine(**kw):
+        serve = ServeConfig(model=cfg.name, kv_block_size=4, max_batch=3)
+        return ServingEngine(model, params, cfg, serve, num_blocks=64, **kw)
+
+    return {"cfg": cfg, "mk_engine": mk_engine}
+
+
+@pytest.mark.slow       # two engine runs on the reduced model
+def test_replay_streams_bit_identical_to_direct_submit(tiny_serving):
+    """The repo-wide invariant, extended to the replayer: arrival timing
+    changes scheduling, never tokens.  Replaying a trace on the virtual
+    clock must emit exactly the streams direct submit() emits."""
+    cfg = tiny_serving["cfg"]
+    trace = generate("mixed", seed=11, n_requests=6,
+                     vocab_size=cfg.vocab_size, prompt_hi=10, gen_cap=6)
+
+    result = replay(tiny_serving["mk_engine"](), trace)
+    assert set(result.outputs) == {r.req_id for r in trace.requests}
+    assert result.steps > 0
+    for t in result.timings.values():           # everyone finished
+        assert t.finish_step is not None
+        assert t.first_token_step >= t.submit_step
+        assert t.output_tokens == len(result.outputs[t.req_id])
+
+    direct = tiny_serving["mk_engine"]()
+    for req in trace.to_requests():
+        direct.submit(req)
+    direct.run_until_done()
+    assert all(r.state == RequestState.FINISHED for r in direct.finished)
+    assert result.outputs == {r.req_id: list(r.output)
+                              for r in direct.finished}
+
+
+# ------------------------------------------------- perf table + auto triple
+def _table_row(name, triple, *, scenario="mixed", slo_ok="1", ttft="10",
+               tpot="1.0", steps="50", spec="off", overlap="off"):
+    adm, pre, evi = triple
+    return {"name": name, "scenario": scenario, "admission": adm,
+            "preemption": pre, "eviction": evi, "spec": spec,
+            "overlap": overlap, "slo_ok": slo_ok, "p99_ttft_steps": ttft,
+            "p99_tpot_steps": tpot, "steps": steps}
+
+
+EDF = ("deadline-slo", "most-blocks", "refcount-aware")
+FCFS = ("fcfs", "latest-arrival", "lru")
+
+
+def _mixed_table():
+    return PerfTable([
+        _table_row("a", EDF, slo_ok="1", ttft="12"),
+        _table_row("b", FCFS, slo_ok="0", ttft="5"),      # SLO miss loses
+        _table_row("c", EDF, slo_ok="1", ttft="4", spec="ngram"),   # excluded
+        _table_row("d", EDF, slo_ok="1", ttft="4", overlap="on"),   # excluded
+        _table_row("e", ("auto", "auto", "auto"), ttft="1"),        # excluded
+    ])
+
+
+def test_winner_resolution_prefers_slo_then_latency():
+    table = _mixed_table()
+    assert [r["name"] for r in table.comparable_rows("mixed")] == ["a", "b"]
+    assert table.winner("mixed") == dict(zip(AXES, EDF))
+    assert table.winner("bursty") is None       # no rows for that scenario
+    # Flip the SLO verdicts: the lower-latency triple must win instead.
+    flipped = PerfTable([_table_row("a", EDF, slo_ok="0", ttft="12"),
+                         _table_row("b", FCFS, slo_ok="0", ttft="5")])
+    assert flipped.winner("mixed") == dict(zip(AXES, FCFS))
+
+
+def test_auto_triple_resolves_measured_winner():
+    with perf_context(scenario="mixed", table=_mixed_table()):
+        assert resolve_winner("admission") == "deadline-slo"
+        triple = {axis: policy.get(axis, "auto")() for axis in AXES}
+    for axis, want in zip(AXES, EDF):
+        pol = triple[axis]
+        assert pol.resolved == want
+        assert pol.counters["auto_resolved"] == 1
+        assert pol.counters[f"resolved_{want.replace('-', '_')}"] == 1
+        assert "auto_fallback" not in pol.counters
+
+
+def test_auto_triple_counted_fallback_without_table(monkeypatch):
+    monkeypatch.delenv("REPRO_PERF_SCENARIO", raising=False)
+    monkeypatch.delenv("REPRO_PERF_TABLE", raising=False)
+    # No context at all: no scenario -> defaults, counted.
+    pol = policy.get("admission", "auto")()
+    assert pol.resolved == policy.DEFAULTS["admission"]
+    assert pol.counters["auto_fallback"] == 1
+    # Scenario active but the table has nothing comparable: same fallback.
+    with perf_context(scenario="mixed", table=PerfTable([])):
+        pol = policy.get("eviction", "auto")()
+    assert pol.resolved == policy.DEFAULTS["eviction"]
+    assert pol.counters["auto_fallback"] == 1
+
+
+def test_auto_scoring_delegates_to_winner():
+    """auto's admission_key must equal the resolved policy's key, so the
+    scheduler's decisions are bit-identical to running the winner triple."""
+    req = Request(req_id=3, prompt=np.arange(4, dtype=np.int32),
+                  max_new_tokens=4, arrival=2.5, priority=1, deadline=9.0)
+    with perf_context(scenario="mixed", table=_mixed_table()):
+        auto = policy.get("admission", "auto")()
+    concrete = policy.get("admission", "deadline-slo")()
+    assert auto.admission_key(req, now=3.0) == concrete.admission_key(
+        req, now=3.0)
+
+
+def test_predicted_length_admission_orders_by_model(monkeypatch):
+    monkeypatch.delenv("REPRO_PERF_SCENARIO", raising=False)
+    monkeypatch.delenv("REPRO_PERF_TABLE", raising=False)
+    short = Request(req_id=0, prompt=np.arange(6, dtype=np.int32),
+                    max_new_tokens=12, arrival=0.0)
+    long = Request(req_id=1, prompt=np.arange(14, dtype=np.int32),
+                   max_new_tokens=2, arrival=0.0)
+    model = LengthModel(buckets={8: 2.0, 16: 20.0}, default=5.0)
+    with perf_context(length_model=model):
+        pol = policy.get("admission", "predicted-length")()
+    assert "model_absent" not in pol.counters
+    # The model predicts the short prompt finishes first despite its larger
+    # declared cap — the whole point of learned admission.
+    assert pol.admission_key(short, 0.0) < pol.admission_key(long, 0.0)
+
+    bare = policy.get("admission", "predicted-length")()
+    assert bare.counters["model_absent"] == 1
+    # Without a model the declared cap is the estimate: ordering flips.
+    assert bare.admission_key(long, 0.0) < bare.admission_key(short, 0.0)
+
+
+# ------------------------------------------------------------------- gate
+def _bench_rows(**overrides):
+    base = {"steps": 100, "p99_ttft_steps": 12, "p99_tpot_steps": 1.2,
+            "tok_per_step": 1.5, "prefix_hits": 10, "finished": 12,
+            "out_tokens": 90}
+    base.update(overrides)
+    derived = "scenario=mixed;admission=fcfs;preemption=latest-arrival;" \
+              "eviction=lru;" + ";".join(f"{k}={v}" for k, v in base.items())
+    return [{"name": "trace_mixed_fcfs", "us_per_call": 123.0,
+             "derived": derived}]
+
+
+def _bench_file(tmp_path, fname, rows, schema=SCHEMA_VERSION):
+    results = [{"module": "trace_replay", "backend": "ref",
+                "schema_version": schema, "git_commit": "abc1234",
+                "rows": rows}]
+    path = tmp_path / fname
+    path.write_text(json.dumps(results))
+    return str(path)
+
+
+def test_gate_clean_when_counters_match(tmp_path, capsys):
+    base = _bench_file(tmp_path, "base.json", _bench_rows())
+    cur = _bench_file(tmp_path, "cur.json", _bench_rows())
+    assert gate.main(["--baseline", base, "--current", cur]) == 0
+    out = capsys.readouterr().out
+    assert "compared 1 pinned rows" in out and "OK" in out
+
+
+def test_gate_trips_on_planted_20pct_regression(tmp_path, capsys):
+    """The acceptance check: a 25% step-count regression must trip the gate
+    at the default 20% threshold, and a 15% one must not."""
+    base = _bench_file(tmp_path, "base.json", _bench_rows(steps=100))
+    bad = _bench_file(tmp_path, "bad.json", _bench_rows(steps=125))
+    assert gate.main(["--baseline", base, "--current", bad,
+                      "--threshold", "0.2"]) == 1
+    err = capsys.readouterr().err
+    assert "steps 100 -> 125" in err and "+25.0%" in err
+
+    ok = _bench_file(tmp_path, "ok.json", _bench_rows(steps=115))
+    assert gate.main(["--baseline", base, "--current", ok,
+                      "--threshold", "0.2"]) == 0
+
+
+def test_gate_direction_and_noise_floor(tmp_path):
+    base = _bench_file(tmp_path, "base.json", _bench_rows())
+    # tok_per_step is a down-is-bad column: a 33% drop trips.
+    slow = _bench_file(tmp_path, "slow.json", _bench_rows(tok_per_step=1.0))
+    assert gate.main(["--baseline", base, "--current", slow]) == 1
+    # ... but an *increase* on it (or on prefix hits) is never a regression.
+    fast = _bench_file(tmp_path, "fast.json",
+                       _bench_rows(tok_per_step=9.9, prefix_hits=99))
+    assert gate.main(["--baseline", base, "--current", fast]) == 0
+    # prefix_hits has min_abs 2: a 1-hit wobble on a small base is noise.
+    wobble = _bench_file(tmp_path, "wob.json", _bench_rows(prefix_hits=9))
+    assert gate.main(["--baseline", base, "--current", wobble]) == 0
+
+
+def test_gate_exact_columns_catch_workload_drift(tmp_path, capsys):
+    base = _bench_file(tmp_path, "base.json", _bench_rows(finished=12))
+    drift = _bench_file(tmp_path, "drift.json", _bench_rows(finished=11))
+    assert gate.main(["--baseline", base, "--current", drift,
+                      "--threshold", "0.99"]) == 1   # threshold can't hide it
+    assert "finished" in capsys.readouterr().err
+
+
+def test_gate_refuses_schema_mismatch(tmp_path, capsys):
+    base = _bench_file(tmp_path, "base.json", _bench_rows())
+    alien = _bench_file(tmp_path, "alien.json", _bench_rows(), schema=99)
+    assert gate.main(["--baseline", base, "--current", alien]) == 2
+    assert "SCHEMA REFUSED" in capsys.readouterr().err
+    with pytest.raises(SchemaError):
+        check_schema({"module": "trace_replay", "schema_version": None},
+                     "x.json")
+
+
+def test_gate_fails_when_nothing_comparable(tmp_path, capsys):
+    base = _bench_file(tmp_path, "base.json", _bench_rows())
+    rows = _bench_rows()
+    rows[0]["name"] = "trace_mixed_renamed"
+    other = _bench_file(tmp_path, "other.json", rows)
+    assert gate.main(["--baseline", base, "--current", other]) == 1
+    assert "no comparable" in capsys.readouterr().err
+
+
+def test_gate_unreadable_input_is_usage_error(tmp_path):
+    base = _bench_file(tmp_path, "base.json", _bench_rows())
+    assert gate.main(["--baseline", base,
+                      "--current", str(tmp_path / "missing.json")]) == 2
+
+
+def test_parse_derived_round_trip():
+    d = parse_derived("a=1;b=x/y; c = 3 ;junk;")
+    assert d == {"a": "1", "b": "x/y", "c": "3"}
+    assert parse_derived("") == {}

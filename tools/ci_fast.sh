@@ -368,3 +368,50 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -c "from benchmarks import saturation; saturation.run(quick=True)" \
     >/dev/null
 echo "sanitized saturation smoke OK"
+
+# Trace-replay smoke + perf-regression gate (docs/perf_gate.md): the pinned
+# mixed trace through all seven sweep configs (REPRO_BENCH_SMOKE=1 restricts
+# the scenario list ONLY — traces and configs are identical to the committed
+# quick-mode baseline, so the rows are bit-comparable). The module itself
+# asserts `auto` resolved (not fell back) and met-or-beat every fixed triple;
+# the check below asserts the provenance satellite (schema_version + commit +
+# per-row seed) and the auto row's resolved= attribution, then the gate diffs
+# the fresh rows against the committed BENCH_009.json on deterministic
+# counters — a >20% scheduling/hot-path regression fails CI right here,
+# wall clock never compared.
+TRACE_SMOKE_JSON="$(mktemp /tmp/trace_smoke.XXXXXX.json)"
+trap 'rm -f "$POLICY_SMOKE_JSON" "$SPEC_SMOKE_JSON" "$DISAGG_SMOKE_JSON" \
+    "$TRACE_SMOKE_JSON"' EXIT
+REPRO_BENCH_SMOKE=1 REPRO_BACKEND=ref \
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run --only trace_replay \
+    --json "$TRACE_SMOKE_JSON" >/dev/null
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python - "$TRACE_SMOKE_JSON" <<'PY'
+import json, sys
+
+from repro.perf.table import SCHEMA_VERSION
+
+(res,) = json.load(open(sys.argv[1]))
+assert res["schema_version"] == SCHEMA_VERSION, res.get("schema_version")
+assert res.get("git_commit"), "missing git_commit provenance"
+rows = {r["name"]: r for r in res["rows"]}
+labels = ("fcfs", "prio", "edf", "plen", "ngram", "overlap", "auto")
+for lbl in labels:
+    name = f"trace_mixed_{lbl}"
+    assert name in rows, f"missing sweep row {name}"
+    d = dict(kv.split("=", 1) for kv in rows[name]["derived"].split(";"))
+    assert rows[name].get("seed") == 404, (name, rows[name].get("seed"))
+    assert d["finished"] == "12", (name, d["finished"])
+    assert rows[name]["policy"] == (
+        f"{d['admission']}/{d['preemption']}/{d['eviction']}"), name
+auto = dict(kv.split("=", 1) for kv in
+            rows["trace_mixed_auto"]["derived"].split(";"))
+assert "auto" not in auto["resolved"], auto["resolved"]  # concrete triple
+print(f"trace smoke OK: {len(labels)} configs on the pinned mixed trace, "
+      f"auto resolved {auto['resolved']}")
+PY
+REPRO_BACKEND=ref \
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.perf.gate --baseline BENCH_009.json \
+    --current "$TRACE_SMOKE_JSON" --threshold 0.2
