@@ -6,17 +6,34 @@ entry including zero-pads; the BlockList path touches only effectual blocks.
 Measured: wall time of both. Derived: the HLO gather-bytes ratio (from
 cost_analysis of both jitted programs) — the hardware-independent form of
 the paper's 7.4×/55.7× result. tests/test_benchmarks.py asserts the
-speedup grows with the padding fraction."""
+speedup grows with the padding fraction.
+
+PR 10 extends the module with the ragged-kernel sweeps (docs/ragged_kernel.md):
+
+* fused-vs-split KV layout — the SAME mixed prefill+decode workload through
+  ``paged_attention_chunked`` on split (k, v) pools and
+  ``paged_attention_ragged`` on the fused head-interleaved pool, asserted
+  bit-identical before timing;
+* a measured autotune grid over the ragged tunables per
+  ``(page_size, head_dim, backend)`` cell — every point emits a ``tune=1``
+  row and the fastest point carries ``best=1``.  The grid CONTAINS the
+  registry defaults, so the best config meets-or-beats them by construction
+  (asserted).  Committed as ``BENCH_010.json``, these rows are the table
+  ``repro.perf.autotune`` resolves at engine construction.
+"""
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro.core import dispatch
 from repro.core.attention_api import (
     paged_attention_base, paged_attention_chunked, paged_attention_opt)
-from repro.core.paged_kv import BlockAllocator
+from repro.core.paged_kv import BlockAllocator, fuse_kv_heads
 
 
 def _setup(B, seq_lens, max_blocks, NB, BS, KV, HD, H, key):
@@ -96,3 +113,116 @@ def run(quick: bool = True) -> None:
                      token_pos, iters=3)
         emit(f"paged_chunked_C{C}", us,
              f"tokens={T};us_per_token={us/max(T,1):.2f}")
+
+    # ------------------------------------------------------ ragged sweeps
+    _layout_sweep(quick, key)
+    _autotune_sweep(quick, key)
+
+
+def _ragged_setup(B, pages_per_seq, BS, KV, HD, H, key):
+    """Mixed prefill+decode workload in both metadata forms.
+
+    Even slots carry one decode lane, odd slots a 4-token prefill chunk;
+    sequence lengths are deliberately ragged (not page-aligned).  Returns the
+    split pools, the fused pool, the flat BlockList, and BOTH the chunked
+    token-lane arrays and the ragged prefix sums describing the same lanes.
+    """
+    seq_lens = [pages_per_seq * BS - (r % BS) for r in range(B)]
+    NB = B * pages_per_seq + 4
+    al = BlockAllocator(num_blocks=NB, block_size=BS)
+    al._free = np.random.RandomState(0).permutation(NB).tolist()
+    for r, L in enumerate(seq_lens):
+        al.allocate(r, L)
+    tot = sum(-(-L // BS) for L in seq_lens)
+    bl, br, bp, kv_lens = al.build_block_list(list(range(B)), max_total=tot)
+    ks = jax.random.split(key, 3)
+    pk = jax.random.normal(ks[0], (NB, BS, KV, HD), jnp.float32)
+    pv = jax.random.normal(ks[1], (NB, BS, KV, HD), jnp.float32)
+    n_q = [1 if r % 2 == 0 else min(4, seq_lens[r]) for r in range(B)]
+    T = int(sum(n_q))
+    q = jax.random.normal(ks[2], (T, H, HD), jnp.float32)
+    token_req = np.repeat(np.arange(B, dtype=np.int32), n_q)
+    token_pos = np.concatenate([np.arange(L - n, L, dtype=np.int32)
+                                for n, L in zip(n_q, seq_lens)])
+    cu_q = np.zeros((B + 1,), np.int32)
+    cu_q[1:] = np.cumsum(n_q)
+    cu_kv = np.zeros((B + 1,), np.int32)
+    cu_kv[1:] = np.cumsum(seq_lens)
+    chunked_args = (q, pk, pv, jnp.asarray(bl), jnp.asarray(br),
+                    jnp.asarray(bp), jnp.asarray(kv_lens),
+                    jnp.asarray(token_req), jnp.asarray(token_pos))
+    ragged_args = (q, fuse_kv_heads(pk, pv), jnp.asarray(bl),
+                   jnp.asarray(br), jnp.asarray(bp), jnp.asarray(cu_q),
+                   jnp.asarray(cu_kv), jnp.arange(B, dtype=jnp.int32))
+    return chunked_args, ragged_args
+
+
+def _layout_sweep(quick, key):
+    """Fused-vs-split layout + ragged-vs-chunked on identical workloads."""
+    fam = dispatch.get_op("paged_attention_ragged")
+    BS, KV, HD, H = 16, 4, 64, 8
+    sizes = [(4, 4), (8, 8)] if quick else [(4, 4), (8, 8), (16, 16)]
+    for B, pages in sizes:
+        chunked_args, ragged_args = _ragged_setup(B, pages, BS, KV, HD, H,
+                                                  key)
+        split = jax.jit(paged_attention_chunked)(*chunked_args)
+        fused = fam(*ragged_args, backend="ref")
+        assert np.array_equal(np.asarray(split), np.asarray(fused)), (
+            "fused-pool ragged result diverged from split-pool chunked")
+        us_split = time_fn(jax.jit(paged_attention_chunked), *chunked_args,
+                           iters=3)
+        us_fused = time_fn(partial(fam, backend="ref"), *ragged_args,
+                           iters=3)
+        T = chunked_args[0].shape[0]
+        emit(f"ragged_layout_B{B}_p{pages}", us_fused,
+             f"layout=fused;tokens={T};us_split={us_split:.1f};"
+             f"speedup_vs_split={us_split/max(us_fused,1e-9):.2f}")
+
+
+def _autotune_sweep(quick, key):
+    """Measure the ragged tunable grid; best point per cell gets best=1."""
+    fam = dispatch.get_op("paged_attention_ragged")
+    defaults = dict(fam.tunables)
+    KV, H = 2, 4
+    B, pages = (4, 4) if quick else (8, 8)
+    grid = sorted({(defaults["num_queries_per_block"],
+                    defaults["num_kv_pages_per_block"]),
+                   (8, 1), (8, 2), (16, 2)})
+    for BS in (8, 16):
+        for HD in (64,):
+            _, ragged_args = _ragged_setup(B, pages, BS, KV, HD, H, key)
+            for backend in ("ref", "pallas_interpret"):
+                timed = []
+                for nq, nk in grid:
+                    cfg = {"num_queries_per_block": nq,
+                           "num_kv_pages_per_block": nk,
+                           "vmem_limit_bytes": 0}
+                    us = time_fn(partial(fam, backend=backend, **cfg),
+                                 *ragged_args, iters=3)
+                    timed.append((us, cfg))
+                best_us = min(us for us, _ in timed)
+                default_us = next(
+                    us for us, cfg in timed
+                    if cfg["num_queries_per_block"]
+                    == defaults["num_queries_per_block"]
+                    and cfg["num_kv_pages_per_block"]
+                    == defaults["num_kv_pages_per_block"])
+                # The grid contains the registry defaults, so the winner can
+                # never lose to them.
+                assert best_us <= default_us, (BS, HD, backend, timed)
+                emitted_best = False
+                for us, cfg in timed:
+                    best = (not emitted_best) and us == best_us
+                    emitted_best = emitted_best or best
+                    emit(f"ragged_tune_p{BS}_h{HD}_{backend}"
+                         f"_q{cfg['num_queries_per_block']}"
+                         f"_k{cfg['num_kv_pages_per_block']}", us,
+                         "tune=1;"
+                         f"page_size={BS};head_dim={HD};backend={backend};"
+                         f"num_queries_per_block="
+                         f"{cfg['num_queries_per_block']};"
+                         f"num_kv_pages_per_block="
+                         f"{cfg['num_kv_pages_per_block']};"
+                         f"vmem_limit_bytes={cfg['vmem_limit_bytes']};"
+                         f"best={1 if best else 0};"
+                         f"vs_default={default_us/max(us,1e-9):.2f}")

@@ -4,8 +4,11 @@ Replays the pinned synthetic traces (repro.perf.trace — bursty /
 shared-prefix / long-tail / mixed, fixed seeds and sizes) through the serving
 engine under a sweep of configurations: fixed policy triples, the
 ``predicted-length`` cost-model admission, a speculative (ngram) pass, an
-overlapped-loop pass, and finally the ``auto`` triple resolved from the table
-built *in this run* from the fixed-triple rows.  Every row's ``derived``
+overlapped-loop pass, a 2-device sharded-engine pass (the ``devices`` axis —
+skipped with a note when the host has one device; its counters are asserted
+bit-identical to the single-device fcfs twin), and finally the ``auto``
+triple resolved from the table built *in this run* from the fixed-triple
+rows.  Every row's ``derived``
 string is a full (scenario, config) attribution cell — the policy triple,
 spec/overlap flags, the SLO verdict, and the deterministic replay counters
 (steps, p99 TTFT/TPOT in steps, tokens/step, prefix hits, preemptions) that
@@ -51,25 +54,38 @@ NUM_BLOCKS = 10
 MAX_BATCH = 3
 KV_BLOCK_SIZE = 8
 
-# (label, admission/preemption/eviction, spec, overlap).  The auto row runs
-# last against the table built from the fixed rows above it.
+# (label, admission/preemption/eviction, spec, overlap, devices).  The dev2
+# row runs the sharded engine on a 2-device host mesh (skipped with a note
+# when the host can't supply it — its counters must be bit-identical to the
+# fcfs row, so it never changes winner resolution and is excluded from
+# comparable_rows by its devices axis).  The auto row runs last against the
+# table built from the fixed rows above it.
 CONFIGS = [
-    ("fcfs", ("fcfs", "latest-arrival", "lru"), "off", False),
+    ("fcfs", ("fcfs", "latest-arrival", "lru"), "off", False, 1),
     ("prio", ("priority", "fewest-remaining-tokens", "hit-rate"),
-     "off", False),
-    ("edf", ("deadline-slo", "most-blocks", "refcount-aware"), "off", False),
-    ("plen", ("predicted-length", "latest-arrival", "lru"), "off", False),
-    ("ngram", ("fcfs", "latest-arrival", "lru"), "ngram", False),
-    ("overlap", ("fcfs", "latest-arrival", "lru"), "off", True),
-    ("auto", ("auto", "auto", "auto"), "off", False),
+     "off", False, 1),
+    ("edf", ("deadline-slo", "most-blocks", "refcount-aware"), "off", False,
+     1),
+    ("plen", ("predicted-length", "latest-arrival", "lru"), "off", False, 1),
+    ("ngram", ("fcfs", "latest-arrival", "lru"), "ngram", False, 1),
+    ("overlap", ("fcfs", "latest-arrival", "lru"), "off", True, 1),
+    ("dev2", ("fcfs", "latest-arrival", "lru"), "off", False, 2),
+    ("auto", ("auto", "auto", "auto"), "off", False, 1),
 ]
+
+# Replay counters that must be BIT-identical between the dev2 row and its
+# single-device fcfs twin (same triple, same trace — the sharded engine's
+# greedy streams are bit-identical, so its deterministic counters are too).
+PARITY_KEYS = ("steps", "finished", "out_tokens", "tok_per_step",
+               "prefix_hits", "preempt", "p99_ttft_steps", "p99_tpot_steps")
 
 
 def _run_one(model, params, cfg, scenario, trace, slo, triple, spec_name,
-             overlap, *, table, length_model):
+             overlap, devices, *, table, length_model):
     serve = ServeConfig(model=cfg.name, kv_block_size=KV_BLOCK_SIZE,
                         max_batch=MAX_BATCH, spec=spec_name, spec_k=3,
-                        overlap=overlap)
+                        overlap=overlap,
+                        devices=devices if devices > 1 else 0)
     adm, pre, evi = triple
     with perf_context(scenario=scenario, table=table,
                       length_model=length_model):
@@ -82,7 +98,8 @@ def _run_one(model, params, cfg, scenario, trace, slo, triple, spec_name,
     return eng, result, report, dt
 
 
-def _row(scenario, label, trace, triple, spec_name, overlap, result, report):
+def _row(scenario, label, trace, triple, spec_name, overlap, devices, result,
+         report):
     adm, pre, evi = triple
     c = result.counters()
     period = trace.step_period
@@ -90,6 +107,7 @@ def _row(scenario, label, trace, triple, spec_name, overlap, result, report):
         f"scenario={scenario};admission={adm};preemption={pre};"
         f"eviction={evi};spec={spec_name};"
         f"overlap={'on' if overlap else 'off'};"
+        f"devices={devices};"
         f"slo_ok={1 if report.ok else 0};"
         f"p99_ttft_steps={c['p99_ttft_steps']};"
         f"p99_tpot_steps={c['p99_tpot_steps']};"
@@ -120,33 +138,50 @@ def run(quick: bool = True) -> None:
         slo = params_s["slo"]
         length_model = LengthModel.fit(trace)
         fixed_rows = []
-        for label, triple, spec_name, overlap in CONFIGS:
+        by_label = {}
+        for label, triple, spec_name, overlap, devices in CONFIGS:
             if label == "auto":
+                continue
+            if devices > len(jax.devices()):
+                print(f"[trace_replay] {scenario}/{label}: skipped — needs "
+                      f"{devices} devices, host has {len(jax.devices())} "
+                      "(run under XLA_FLAGS="
+                      "--xla_force_host_platform_device_count="
+                      f"{devices})")
                 continue
             eng, result, report, dt = _run_one(
                 model, params, cfg, scenario, trace, slo, triple, spec_name,
-                overlap, table=None, length_model=length_model)
+                overlap, devices, table=None, length_model=length_model)
             name, derived = _row(scenario, label, trace, triple, spec_name,
-                                 overlap, result, report)
+                                 overlap, devices, result, report)
             emit(name, dt * 1e6, derived, seed=trace.seed,
                  policy="/".join(triple))
-            fixed_rows.append(dict([kv.split("=", 1)
-                                    for kv in derived.split(";")],
-                                   name=name))
+            row = dict([kv.split("=", 1) for kv in derived.split(";")],
+                       name=name)
+            fixed_rows.append(row)
+            by_label[label] = row
+
+        # Asserted parity: the sharded engine's greedy streams are
+        # bit-identical to single-device, so the dev2 row's deterministic
+        # counters must equal its fcfs twin exactly.
+        if "dev2" in by_label:
+            for k in PARITY_KEYS:
+                assert by_label["dev2"][k] == by_label["fcfs"][k], (
+                    scenario, k, by_label["dev2"][k], by_label["fcfs"][k])
 
         # Consumption pass: `auto` resolves the per-scenario winner from the
         # table just measured (the same resolution path the committed
         # BENCH_009.json feeds at launch time).
         table = PerfTable(fixed_rows)
         winner = table.winner(scenario)
-        label, triple, spec_name, overlap = CONFIGS[-1]
+        label, triple, spec_name, overlap, devices = CONFIGS[-1]
         eng, result, report, dt = _run_one(
             model, params, cfg, scenario, trace, slo, triple, spec_name,
-            overlap, table=table, length_model=length_model)
+            overlap, devices, table=table, length_model=length_model)
         counters = eng.metrics()["policy_counters"]
         resolved = "/".join(winner[a] for a in AXES)
         name, derived = _row(scenario, label, trace, triple, spec_name,
-                             overlap, result, report)
+                             overlap, devices, result, report)
         derived += f";resolved={resolved}"
         emit(name, dt * 1e6, derived, seed=trace.seed,
              policy="/".join(triple))

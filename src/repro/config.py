@@ -362,6 +362,20 @@ class ServeConfig:
     # Query-chunk tile rows for the chunked paged-attention kernel
     # (`q_chunk` tunable of the paged_attention_chunked op family).
     q_chunk: int = 16
+    # Which attention op family the fused step dispatches per layer:
+    # "ragged" = paged_attention_ragged (ONE launch for prefill chunks +
+    # decode lanes via cu_q_lens/cu_kv_lens metadata over the fused
+    # head-interleaved KV pool), "chunked" = the PR-6 token-lane path on
+    # split views of the same pool.  Greedy streams are bit-identical.
+    attn_impl: str = "ragged"      # ragged | chunked
+    # Ragged-kernel tunables (paged_attention_ragged op family,
+    # docs/ragged_kernel.md). 0 = consult the committed autotune table
+    # (BENCH_010.json via repro.perf.autotune, counted tuned_resolved /
+    # tuned_fallback), falling back to the registry defaults; > 0 pins the
+    # value explicitly.
+    num_queries_per_block: int = 0   # query-tile rows per ragged grid step
+    num_kv_pages_per_block: int = 0  # fused KV pages per ragged grid step
+    vmem_limit_bytes: int = 0        # VMEM cap for the fused-page DMA ring
     # Mesh-native serving (docs/sharded_serving.md): device count of the
     # serving mesh's model axis. 0/1 = single-device engine; > 1 makes
     # ``repro.launch.serve`` build a mesh (repro.launch.mesh) and the engine

@@ -236,6 +236,105 @@ def paged_attention_chunked_sharded(q, pool_k, pool_v, block_list, block_req,
     return out.reshape(T, H, HD).astype(q.dtype)
 
 
+def ragged_lane_metadata(cu_q_lens, cu_kv_lens, seq_slot, num_lanes: int,
+                         num_slots: int):
+    """Derive per-lane ``(token_req, token_pos, kv_lens)`` from ragged
+    cu_q_lens/cu_kv_lens metadata (docs/ragged_kernel.md).
+
+    The ragged contract indexes SEQUENCES in lane order: sequence ``j`` owns
+    query lanes ``[cu_q_lens[j], cu_q_lens[j+1])``, holds ``cu_kv_lens[j+1] -
+    cu_kv_lens[j]`` valid KV positions after this step's append, and lives in
+    engine slot ``seq_slot[j]`` (an out-of-range slot marks an empty padding
+    entry).  A sequence's query lanes are always its LAST ``nq`` positions —
+    true for decode lanes, prefill chunks and speculative draft lanes alike,
+    because the engine reserves this step's KV before rendering.
+
+    Returns arrays bit-identical to the engine's rendered lane metadata:
+    ``token_req``/``token_pos`` (num_lanes,) and slot-keyed ``kv_lens``
+    (num_slots,) — lanes past ``cu_q_lens[-1]`` become padding lanes
+    (owner == num_slots, every key masked).
+    """
+    nseq = seq_slot.shape[0]
+    lanes = jnp.arange(num_lanes, dtype=jnp.int32)
+    # rightmost j with cu_q_lens[j] <= lane: side="right" skips empty entries
+    j = jnp.searchsorted(cu_q_lens.astype(jnp.int32), lanes,
+                         side="right").astype(jnp.int32) - 1
+    j = jnp.clip(j, 0, nseq - 1)
+    nq = cu_q_lens[1:] - cu_q_lens[:-1]                  # (nseq,)
+    kvl = cu_kv_lens[1:] - cu_kv_lens[:-1]               # (nseq,)
+    in_range = lanes < cu_q_lens[-1]
+    token_req = jnp.where(in_range, seq_slot[j], num_slots).astype(jnp.int32)
+    token_pos = jnp.where(
+        in_range, kvl[j] - nq[j] + (lanes - cu_q_lens[j]), 0).astype(jnp.int32)
+    kv_lens = jnp.zeros((num_slots,), jnp.int32).at[seq_slot].set(
+        kvl.astype(jnp.int32), mode="drop")              # pads dropped
+    return token_req, token_pos, kv_lens
+
+
+def paged_attention_ragged(q, kv_pool, block_list, block_req, block_pos,
+                           cu_q_lens, cu_kv_lens, seq_slot,
+                           *, sm_scale: Optional[float] = None):
+    """One ragged launch for mixed prefill-chunk + decode lanes over the
+    FUSED head-interleaved KV pool (the ``ref`` oracle of the
+    ``paged_attention_ragged`` family).
+
+    q          (T, H, HD)   flat token lanes, sequences contiguous in lane
+                            order (decode lanes and prompt-chunk lanes mixed)
+    kv_pool    (NB, BS, 2*KV, HD)  fused ``[K0,V0,K1,V1,...]`` pool layer
+                            (:func:`repro.core.paged_kv.make_fused_pool`)
+    block_*    (Tb,)        flat BlockList keyed by slot id, as in
+                            :func:`paged_attention_chunked`
+    cu_q_lens  (S+1,)       prefix sums of per-sequence query-lane counts
+    cu_kv_lens (S+1,)       prefix sums of per-sequence valid-KV counts
+                            (AFTER this step's tokens were appended)
+    seq_slot   (S,)         sequence -> engine slot id (>= S ⇒ empty entry)
+
+    The lane metadata is DERIVED from the ragged prefix sums
+    (:func:`ragged_lane_metadata`) and the attention math is exactly
+    :func:`_chunked_partials` over split views of the fused pool — integer
+    derivation cannot perturb float ops, so results are bit-identical to the
+    chunked path on the same workload.
+    """
+    from repro.core import paged_kv
+
+    T, H, HD = q.shape
+    S = seq_slot.shape[0]
+    scale = sm_scale if sm_scale is not None else HD ** -0.5
+    pool_k, pool_v = paged_kv.fused_kv_views(kv_pool)
+    token_req, token_pos, kv_lens = ragged_lane_metadata(
+        cu_q_lens, cu_kv_lens, seq_slot, T, S)
+    m, l, o = _chunked_partials(q, pool_k, pool_v, block_list, block_req,
+                                block_pos, kv_lens, token_req, token_pos,
+                                scale)
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(T, H, HD).astype(q.dtype)
+
+
+def paged_attention_ragged_sharded(q, kv_pool, block_list, block_req,
+                                   block_pos, cu_q_lens, cu_kv_lens, seq_slot,
+                                   *, axis: str,
+                                   sm_scale: Optional[float] = None):
+    """Ragged attention over a sequence-sharded FUSED pool (inside shard_map).
+
+    The ragged metadata is replicated (every rank derives the same lane
+    arrays); each rank computes chunked flash partials against its pool
+    shard's LOCAL BlockList slice and the triples are log-sum-exp-combined
+    across ``axis`` — exactly :func:`paged_attention_chunked_sharded` on
+    split views of the fused shard, so the sharded ragged engine stays
+    bit-identical to the sharded chunked engine.
+    """
+    from repro.core import paged_kv
+
+    T = q.shape[0]
+    S = seq_slot.shape[0]
+    pool_k, pool_v = paged_kv.fused_kv_views(kv_pool)
+    token_req, token_pos, kv_lens = ragged_lane_metadata(
+        cu_q_lens, cu_kv_lens, seq_slot, T, S)
+    return paged_attention_chunked_sharded(
+        q, pool_k, pool_v, block_list, block_req, block_pos, kv_lens,
+        token_req, token_pos, axis=axis, sm_scale=sm_scale)
+
+
 def paged_attention(q, pool_k, pool_v, block_list, block_req, block_pos,
                     seq_lens, backend=None):
     """Decode-shape PagedAttention through the unified registry.
@@ -267,3 +366,28 @@ def paged_attention_chunked_op(q, pool_k, pool_v, block_list, block_req,
         q, pool_k, pool_v, block_list, block_req, block_pos, kv_lens,
         token_req, token_pos, q_chunk=q_chunk, prefetch_depth=prefetch_depth,
         backend=backend)
+
+
+def paged_attention_ragged_op(q, kv_pool, block_list, block_req, block_pos,
+                              cu_q_lens, cu_kv_lens, seq_slot, *,
+                              backend=None, num_queries_per_block: int = 16,
+                              num_kv_pages_per_block: int = 1,
+                              vmem_limit_bytes: int = 0):
+    """Ragged fused-pool PagedAttention through the unified registry.
+
+    Same contract as :func:`paged_attention_ragged` (the ``ref``
+    implementation); ``pallas``/``pallas_interpret`` select the ragged grid
+    kernel in ``repro.kernels.paged_attention.kernel``.  The three kwargs are
+    the family's registered tunables (docs/ragged_kernel.md):
+    ``num_queries_per_block`` is the query-tile row count,
+    ``num_kv_pages_per_block`` how many KV pages one grid step consumes from
+    the double-buffered fused-page DMA ring, and ``vmem_limit_bytes`` caps
+    the ring's VMEM footprint (0 = uncapped).  jnp backends ignore all
+    three; measured best configs per (page_size, head_dim, backend) live in
+    the committed autotune table (``repro.perf.autotune``).
+    """
+    return dispatch.get_op("paged_attention_ragged")(
+        q, kv_pool, block_list, block_req, block_pos, cu_q_lens, cu_kv_lens,
+        seq_slot, num_queries_per_block=num_queries_per_block,
+        num_kv_pages_per_block=num_kv_pages_per_block,
+        vmem_limit_bytes=vmem_limit_bytes, backend=backend)

@@ -105,14 +105,15 @@ class HostBlock:
     """One demoted KV block staged in host memory.
 
     ``data`` is filled lazily by the engine's tier drain (a device→host copy
-    of the block's (k, v) slices); ``stats`` carries the block's eviction
-    evidence across the tier round-trip so a promoted block keeps its
-    history.
+    of the block's slice per pool channel — ONE fused ``kv`` slice with the
+    head-interleaved layout, (k, v) slices with split pools); ``stats``
+    carries the block's eviction evidence across the tier round-trip so a
+    promoted block keeps its history.
     """
 
     key: bytes
     stats: BlockStats
-    data: Optional[Tuple[np.ndarray, np.ndarray]] = None   # (k, v) host copies
+    data: Optional[Tuple[np.ndarray, ...]] = None   # host copy per channel
 
 
 class HostPool:
@@ -790,6 +791,45 @@ def make_pool(num_layers: int, num_blocks: int, block_size: int,
               num_kv: int, head_dim: int, dtype=jnp.bfloat16):
     shape = (num_layers, num_blocks, block_size, num_kv, head_dim)
     return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def make_fused_pool(num_layers: int, num_blocks: int, block_size: int,
+                    num_kv: int, head_dim: int, dtype=jnp.bfloat16):
+    """ONE head-interleaved KV buffer: ``[K0, V0, K1, V1, ...]`` on the head
+    axis (docs/ragged_kernel.md).
+
+    Shape (L, NB, BS, 2*KV, HD) — K and V of each kv-head are adjacent, so
+    every whole-buffer move (CoW block copy, tier demote/promote, disagg
+    handoff, the kernel's HBM->VMEM page DMA) is ONE transfer instead of two.
+    ``fused_kv_views`` recovers (k, v) views for math written against split
+    pools; ``fuse_kv_heads`` interleaves fresh per-token K/V for the append.
+    """
+    shape = (num_layers, num_blocks, block_size, 2 * num_kv, head_dim)
+    return jnp.zeros(shape, dtype)
+
+
+def fused_kv_views(pool):
+    """Split-view shim over a fused pool: ``(..., 2*KV, HD) -> k, v``.
+
+    Pure reshape + index (no data movement until consumed), valid for any
+    leading dims — a whole layer stack, one layer, or a single VMEM page
+    tile inside a kernel.  The views hold exactly the values a split pool
+    would, so math running on them is bit-identical to the split layout.
+    """
+    *lead, kv2, hd = pool.shape
+    r = pool.reshape(*lead, kv2 // 2, 2, hd)
+    return r[..., 0, :], r[..., 1, :]
+
+
+def fuse_kv_heads(k_new, v_new):
+    """Interleave per-token K/V ``(..., KV, HD) x2 -> (..., 2*KV, HD)``.
+
+    Inverse of :func:`fused_kv_views` on the head axis: the result's head
+    order is ``[K0, V0, K1, V1, ...]``, ready for ONE ``append_to_pool``
+    scatter into a fused pool.
+    """
+    *lead, kv, hd = k_new.shape
+    return jnp.stack([k_new, v_new], axis=-2).reshape(*lead, 2 * kv, hd)
 
 
 def append_to_pool(pool_layer, kv_new, slots):

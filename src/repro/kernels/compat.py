@@ -6,10 +6,35 @@
 * ``shard_map`` graduated from ``jax.experimental.shard_map`` to the top
   level around 0.5; the sharded serving path imports it from here.
 """
+import dataclasses
+import inspect
+
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
     pltpu, "TPUCompilerParams")
+
+
+def _compiler_param_names():
+    try:
+        return {f.name for f in dataclasses.fields(CompilerParams)}
+    except TypeError:                   # pragma: no cover - version compat
+        return set(inspect.signature(CompilerParams).parameters)
+
+
+_PARAM_NAMES = _compiler_param_names()
+
+
+def compiler_params(**kwargs):
+    """``CompilerParams`` filtered to the fields this jax version accepts.
+
+    Newer knobs (``vmem_limit_bytes``) silently drop on older releases —
+    they are performance hints, never semantics — and ``None`` values are
+    treated as "unset" so callers can thread optional tunables straight
+    through.
+    """
+    return CompilerParams(**{k: v for k, v in kwargs.items()
+                             if k in _PARAM_NAMES and v is not None})
 
 try:                                    # jax >= 0.5 exposes it at top level
     from jax import shard_map

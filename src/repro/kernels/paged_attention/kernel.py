@@ -395,3 +395,182 @@ def paged_attention_chunked_pallas(q, pool_k, pool_v, block_list, block_req,
     )(block_list, block_req, block_pos, kv_lens, q, pool_k, pool_v,
       treq, tpos)
     return out[:T]
+
+
+def _ragged_kernel(
+    # scalar-prefetched
+    block_list, block_req, block_pos, kv_lens,
+    # blocked inputs (the fused pool stays in HBM/ANY — DMA'd manually)
+    q_ref, kv_hbm, treq_ref, tpos_ref,
+    # output
+    o_ref,
+    # scratch
+    acc_ref, m_ref, l_ref, kv_buf, kv_sem,
+    *, bs: int, num_kv: int, num_reqs: int, sm_scale: float, pages: int,
+    num_blocks: int,
+):
+    """Ragged grid step over the FUSED head-interleaved pool.
+
+    Grid is (num_q_tiles, num_page_groups): one step consumes ``pages``
+    BlockList entries against one ``num_queries_per_block``-row query tile.
+    The fused pool means ONE ``(bs, 2*KV, hd)`` page per DMA instead of a
+    (k, v) pair — the ring holds half as many transfers in flight for the
+    same bytes.  The ring is double-buffered over page GROUPS: group ``t+1``
+    starts before group ``t`` is waited, so a whole group's pages stream
+    behind the flash inner loop.  Pad entries fetch a real page and skip
+    only the compute, keeping every started copy waited exactly once.
+
+    The per-page math is byte-for-byte ``_chunked_flash_update`` +
+    ``_chunked_valid_mask`` on split VIEWS of the fused tile — the ragged
+    and chunked paths cannot drift.
+    """
+    t = pl.program_id(1)
+    Tg = pl.num_programs(1)
+
+    def start_group(g):
+        slot = jax.lax.rem(g, 2)
+        for j in range(pages):
+            blk = jnp.minimum(block_list[g * pages + j], num_blocks - 1)
+            pltpu.make_async_copy(kv_hbm.at[blk], kv_buf.at[slot, j],
+                                  kv_sem.at[slot, j]).start()
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        # Lanes with no valid keys (padding, empty requests) must read 0.
+        o_ref[...] = jnp.zeros_like(o_ref)
+        start_group(jnp.int32(0))                 # warm-up: fill slot 0
+
+    @pl.when(t + 1 < Tg)                          # steady state: run ahead
+    def _ahead():
+        start_group(t + 1)
+
+    slot = jax.lax.rem(t, 2)
+    for j in range(pages):                        # static small loop
+        g = t
+        blk = jnp.minimum(block_list[g * pages + j], num_blocks - 1)
+        pltpu.make_async_copy(kv_hbm.at[blk], kv_buf.at[slot, j],
+                              kv_sem.at[slot, j]).wait()
+        e = t * pages + j
+        is_pad = block_req[e] >= num_reqs
+
+        @pl.when(jnp.logical_not(is_pad))
+        def _step(e=e, j=j):
+            valid = _chunked_valid_mask(block_req, block_pos, kv_lens,
+                                        treq_ref, tpos_ref, e, bs=bs,
+                                        num_reqs=num_reqs)
+            tile = kv_buf[slot, j]                # (bs, 2*KV, hd) fused page
+            split = tile.reshape(bs, num_kv, 2, tile.shape[-1])
+            _chunked_flash_update(q_ref, split[:, :, 0, :], split[:, :, 1, :],
+                                  o_ref, acc_ref, m_ref, l_ref, valid,
+                                  num_kv=num_kv, sm_scale=sm_scale)
+
+
+def paged_attention_ragged_pallas(q, kv_pool, block_list, block_req,
+                                  block_pos, cu_q_lens, cu_kv_lens, seq_slot,
+                                  *, sm_scale=None,
+                                  num_queries_per_block: int = 16,
+                                  num_kv_pages_per_block: int = 1,
+                                  vmem_limit_bytes: int = 0,
+                                  interpret: bool = True):
+    """Ragged fused-pool PagedAttention: one launch for prefill + decode.
+
+    Same contract as ``repro.core.attention_api.paged_attention_ragged``:
+    q (T, H, hd) flat token lanes with sequences contiguous in lane order,
+    kv_pool (NB, BS, 2*KV, hd) fused head-interleaved layer, flat BlockList
+    arrays (Tb,), and cu_q_lens/cu_kv_lens/seq_slot ragged metadata.  The
+    lane arrays the grid masks against are DERIVED from the prefix sums at
+    the XLA level (``ragged_lane_metadata`` — the same integer math as the
+    jnp ref), then scalar-prefetched exactly like the chunked kernel.
+
+    Tunables (registered on the ``paged_attention_ragged`` family, measured
+    by the autotune sweep in ``benchmarks/paged_attention_bench.py``):
+
+    * ``num_queries_per_block`` — query-tile rows per grid step (the ragged
+      analogue of ``q_chunk``).
+    * ``num_kv_pages_per_block`` — fused KV pages one grid step consumes;
+      the double-buffered DMA ring holds ``2 *`` this many pages in VMEM.
+    * ``vmem_limit_bytes`` — cap on the ring's VMEM footprint: the page
+      group is clamped so the ring fits, and the limit is forwarded to the
+      Mosaic compiler when this jax version accepts it.
+    """
+    from repro.core.attention_api import ragged_lane_metadata
+
+    T, H, hd = q.shape
+    NB, BS, KV2, _ = kv_pool.shape
+    num_kv = KV2 // 2
+    B = seq_slot.shape[0]
+    Tb = block_list.shape[0]
+    scale = float(sm_scale if sm_scale is not None else hd ** -0.5)
+
+    token_req, token_pos, kv_lens = ragged_lane_metadata(
+        cu_q_lens, cu_kv_lens, seq_slot, T, B)
+
+    pages = max(int(num_kv_pages_per_block), 1)
+    if vmem_limit_bytes:
+        page_bytes = BS * KV2 * hd * jnp.dtype(kv_pool.dtype).itemsize
+        pages = max(min(pages, int(vmem_limit_bytes) // (2 * page_bytes)), 1)
+    tq = max(min(int(num_queries_per_block), T), 1)
+
+    pad = (-T) % tq
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+        # Padding lanes get an out-of-range owner so every key is masked.
+        token_req = jnp.pad(token_req, (0, pad), constant_values=B)
+        token_pos = jnp.pad(token_pos, (0, pad))
+    Tp = T + pad
+    treq = token_req.reshape(Tp, 1).astype(jnp.int32)
+    tpos = token_pos.reshape(Tp, 1).astype(jnp.int32)
+
+    bpad = (-Tb) % pages
+    if bpad:
+        # Pad entries still fetch a (clamped) real page — only compute skips.
+        block_list = jnp.pad(block_list, (0, bpad))
+        block_req = jnp.pad(block_req, (0, bpad), constant_values=B)
+        block_pos = jnp.pad(block_pos, (0, bpad))
+    Tg = (Tb + bpad) // pages
+
+    kernel = functools.partial(
+        _ragged_kernel, bs=BS, num_kv=num_kv, num_reqs=B, sm_scale=scale,
+        pages=pages, num_blocks=NB)
+
+    # index maps take (grid ids, *prefetched scalars)
+    def q_map(i, t, bl, br, bp, kvl):
+        return (i, 0, 0)
+
+    def lane_map(i, t, bl, br, bp, kvl):
+        return (i, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(Tp // tq, Tg),
+        in_specs=[
+            pl.BlockSpec((tq, H, hd), q_map),
+            # ONE buffer in HBM; the kernel rings its own fused-page DMAs.
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((tq, 1), lane_map),
+            pl.BlockSpec((tq, 1), lane_map),
+        ],
+        out_specs=pl.BlockSpec((tq, H, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((tq, H, hd), jnp.float32),
+            pltpu.VMEM((tq, H), jnp.float32),
+            pltpu.VMEM((tq, H), jnp.float32),
+            pltpu.VMEM((2, pages, BS, KV2, hd), kv_pool.dtype),
+            pltpu.SemaphoreType.DMA((2, pages)),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Tp, H, hd), q.dtype),
+        # The ring state spans grid steps of the q-tile dim too (warm-up
+        # reruns per tile), so neither dimension may be parallelized.
+        compiler_params=compat.compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary"),
+            vmem_limit_bytes=int(vmem_limit_bytes) or None),
+        interpret=interpret,
+    )(block_list, block_req, block_pos, kv_lens, q, kv_pool, treq, tpos)
+    return out[:T]

@@ -81,6 +81,25 @@ def main() -> None:
                    help="query-tile rows of the chunked paged-attention "
                         "kernel grid (the op family's q_chunk tunable; "
                         "ignored by jnp backends)")
+    p.add_argument("--attn-impl", default="ragged",
+                   choices=("ragged", "chunked"),
+                   help="attention op family for the fused step "
+                        "(docs/ragged_kernel.md): 'ragged' = ONE launch for "
+                        "prefill + decode over the fused KV pool, 'chunked' "
+                        "= the token-lane path on split views; greedy "
+                        "streams are bit-identical")
+    p.add_argument("--num-queries-per-block", type=int, default=0,
+                   help="ragged-kernel query-tile rows (0 = consult the "
+                        "committed autotune table BENCH_010.json, falling "
+                        "back to the registry default)")
+    p.add_argument("--num-kv-pages-per-block", type=int, default=0,
+                   help="fused KV pages per ragged grid step — the "
+                        "double-buffered DMA ring holds 2x this many pages "
+                        "in VMEM (0 = autotune table, then registry default)")
+    p.add_argument("--vmem-limit-bytes", type=int, default=0,
+                   help="VMEM cap for the ragged kernel's fused-page ring; "
+                        "clamps the page group and is forwarded to the "
+                        "Mosaic compiler (0 = autotune table / uncapped)")
     p.add_argument("--sanitize", default="off", choices=("on", "off"),
                    help="runtime sanitizers (docs/static_analysis.md): "
                         "retrace guard, host-sync guard around the overlap "
@@ -120,6 +139,10 @@ def main() -> None:
                         overlap=args.overlap == "on",
                         prefetch_depth=args.prefetch_depth,
                         q_chunk=args.q_chunk,
+                        attn_impl=args.attn_impl,
+                        num_queries_per_block=args.num_queries_per_block,
+                        num_kv_pages_per_block=args.num_kv_pages_per_block,
+                        vmem_limit_bytes=args.vmem_limit_bytes,
                         sanitize=args.sanitize == "on",
                         roles=args.roles, host_blocks=args.host_blocks,
                         trace=args.trace)
@@ -192,6 +215,10 @@ def main() -> None:
           f"[backend={m['backend']} devices={m['devices']} "
           f"mesh={m['mesh_shape']} overlap={m['overlap']} "
           f"prefetch_depth={m['prefetch_depth']} q_chunk={m['q_chunk']}]")
+    print(f"attn {m['attn_impl']}  "
+          f"num_queries_per_block={m['num_queries_per_block']}  "
+          f"num_kv_pages_per_block={m['num_kv_pages_per_block']}  "
+          f"vmem_limit_bytes={m['vmem_limit_bytes']}")
     print(f"TTFT p50 {m['p50_ttft_s']*1e3:.1f} / p99 {m['p99_ttft_s']*1e3:.1f} ms  "
           f"TPOT p50 {m['p50_tpot_s']*1e3:.1f} / p99 {m['p99_tpot_s']*1e3:.1f} ms")
     print(f"preemptions {m['preemptions']}  "

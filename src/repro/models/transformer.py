@@ -275,62 +275,84 @@ class TransformerLM:
         logits = unembed(params.get("head", params["embed"]), x)[:, 0]
         return logits, {"k": pk, "v": pv}
 
-    def _sharded_append_attend(self, mesh, axis, q, k_new, v_new, pk, pv,
-                               lists):
+    def _sharded_append_attend(self, mesh, axis, q, k_new, v_new, pkv,
+                               lists, attn_impl="ragged"):
         """One layer's pool append + attention under shard_map (mesh path).
 
-        ``pk``/``pv`` are sequence-sharded on their block dimension over
-        ``axis``; ``block_list``/``block_req``/``block_pos`` are the (S, M)
-        per-shard LOCAL BlockLists from
-        ``BlockAllocator.build_sharded_block_lists``.  Each rank translates
-        the global write slots to local indices (non-owned lanes get an
-        out-of-bounds sentinel the scatter drops), appends its lanes'
-        KV to its pool shard, computes chunked flash partials against its
-        local list, and the log-sum-exp combine
-        (:func:`attention_api.paged_attention_chunked_sharded`) reduces
+        ``pkv`` is the FUSED head-interleaved pool layer, sequence-sharded
+        on its block dimension over ``axis``;
+        ``block_list``/``block_req``/``block_pos`` are the (S, M) per-shard
+        LOCAL BlockLists from ``BlockAllocator.build_sharded_block_lists``.
+        Each rank translates the global write slots to local indices
+        (non-owned lanes get an out-of-bounds sentinel the scatter drops),
+        appends its lanes' interleaved KV to its pool shard in ONE scatter,
+        computes flash partials against its local list, and the log-sum-exp
+        combine (``paged_attention_ragged_sharded`` /
+        ``paged_attention_chunked_sharded`` per ``attn_impl``; the ragged
+        form derives its lanes from the replicated cu prefix sums) reduces
         across ``axis`` — the KV never leaves its shard.
         """
         from jax.sharding import PartitionSpec as P
 
         from repro.kernels.compat import shard_map
 
-        def local(q, k_new, v_new, pk, pv, bl, br, bp, kv_lens, token_req,
-                  token_pos, slots):
+        ragged = attn_impl == "ragged"
+
+        def local(q, k_new, v_new, pkv, bl, br, bp, kv_lens, token_req,
+                  token_pos, cu_q, cu_kv, seq_slot, slots):
             s = jax.lax.axis_index(axis)
-            per = pk.shape[0]                       # local blocks per shard
+            per = pkv.shape[0]                      # local blocks per shard
             blk = slots[:, 0]
             # Non-owned lanes -> index == per: out of local bounds, dropped.
             local_blk = jnp.where(blk // per == s, blk - s * per, per)
             lslots = jnp.stack([local_blk, slots[:, 1]], axis=-1)
-            pk = paged_kv.append_to_pool(pk, k_new, lslots)
-            pv = paged_kv.append_to_pool(pv, v_new, lslots)
-            ctx = attention_api.paged_attention_chunked_sharded(
-                q, pk, pv, bl[0], br[0], bp[0], kv_lens, token_req,
-                token_pos, axis=axis)
-            return pk, pv, ctx
+            pkv = paged_kv.append_to_pool(
+                pkv, paged_kv.fuse_kv_heads(k_new, v_new), lslots)
+            if ragged:
+                ctx = attention_api.paged_attention_ragged_sharded(
+                    q, pkv, bl[0], br[0], bp[0], cu_q, cu_kv, seq_slot,
+                    axis=axis)
+            else:
+                pk, pv = paged_kv.fused_kv_views(pkv)
+                ctx = attention_api.paged_attention_chunked_sharded(
+                    q, pk, pv, bl[0], br[0], bp[0], kv_lens, token_req,
+                    token_pos, axis=axis)
+            return pkv, ctx
 
         fn = shard_map(
             local, mesh=mesh,
             in_specs=(P(), P(), P(), P(axis), P(axis), P(axis), P(axis),
-                      P(axis), P(), P(), P(), P()),
-            out_specs=(P(axis), P(axis), P()), check_rep=False)
-        return fn(q, k_new, v_new, pk, pv, lists["block_list"],
+                      P(), P(), P(), P(), P(), P(), P()),
+            out_specs=(P(axis), P()), check_rep=False)
+        return fn(q, k_new, v_new, pkv, lists["block_list"],
                   lists["block_req"], lists["block_pos"], lists["kv_lens"],
-                  lists["token_req"], lists["token_pos"], lists["slots"])
+                  lists["token_req"], lists["token_pos"],
+                  lists["cu_q_lens"], lists["cu_kv_lens"],
+                  lists["seq_slot"], lists["slots"])
 
     def decode_tokens_paged(self, params, pools, lists, tokens, *,
                             attn_backend: Optional[str] = None,
                             q_chunk: int = 16,
                             prefetch_depth: int = 0,
+                            attn_impl: str = "ragged",
+                            num_queries_per_block: int = 16,
+                            num_kv_pages_per_block: int = 1,
+                            vmem_limit_bytes: int = 0,
                             mesh=None, axis: Optional[str] = None):
         """Fused chunked-prefill + decode over flat token lanes.
 
         The serving engine's single compiled program: each lane of ``tokens``
         (T,) is one token of some request — a decode token (one lane per
         decoding request) or one token of a prompt chunk (several lanes per
-        prefilling request). Per layer the lane KV is appended to the paged
-        pool, then every lane attends causally to its request's blocks
-        (:func:`attention_api.paged_attention_chunked`).
+        prefilling request). Per layer the lane KV is appended to the FUSED
+        head-interleaved pool (``pools["kv"]``, one scatter per layer), then
+        every lane attends causally to its request's blocks through the op
+        family ``attn_impl`` picks: ``"ragged"`` =
+        :func:`attention_api.paged_attention_ragged_op` consuming the cu
+        prefix sums in ONE launch, ``"chunked"`` = the token-lane op on
+        split views of the same pool.  Greedy outputs are bit-identical
+        either way (both reduce to the same flash update on the same
+        values).
 
         lists:
           block_list/block_req/block_pos   flat BlockList keyed by slot id —
@@ -339,6 +361,9 @@ class TransformerLM:
           kv_lens   (B,)  valid KV per slot after this step's append
           token_req (T,)  owning slot of each lane (>= B ⇒ padding lane)
           token_pos (T,)  absolute position of each lane's token
+          cu_q_lens (B+1,) lane-count prefix sums per committed sequence
+          cu_kv_lens (B+1,) post-append KV-length prefix sums, same order
+          seq_slot  (B,)  slot id per committed sequence (B ⇒ unused entry)
           slots     (T, 2) pool (block, offset) where each lane's KV lands
           last_lane (B,)  lane index holding each slot's last valid token
           logit_lanes (B, R)  [optional] lane indices to unembed per slot —
@@ -347,10 +372,10 @@ class TransformerLM:
                           tokens, and needs a logit row per lane to judge
                           every draft in this ONE forward
 
-        ``q_chunk`` and ``prefetch_depth`` are forwarded to the
-        chunked-attention op: ``q_chunk`` is the kernel's query-tile rows;
-        ``prefetch_depth`` >= 2 enables the Pallas kernel's multi-buffered
-        KV-page DMA ring (jnp backends ignore both).
+        ``q_chunk``/``prefetch_depth`` tune the chunked op;
+        ``num_queries_per_block``/``num_kv_pages_per_block``/
+        ``vmem_limit_bytes`` tune the ragged op (autotuned — see
+        docs/ragged_kernel.md; jnp backends ignore all of them).
 
         ``mesh``/``axis`` set ⇒ the mesh-native serving path: the pool is
         sequence-sharded on its block dimension over ``axis`` and each
@@ -365,28 +390,44 @@ class TransformerLM:
         cfg = self.cfg
         a = cfg.attention
         token_pos = lists["token_pos"]
+        if attn_impl not in ("ragged", "chunked"):
+            raise ValueError(
+                f"attn_impl {attn_impl!r}: expected 'ragged' or 'chunked'")
+        ragged = attn_impl == "ragged"
         x = embed(params["embed"], tokens)                 # (T, D)
 
         def body(x, inp):
-            lp, pk, pv = inp
+            lp, pkv = inp
             h = rmsnorm(lp["ln1"], x[:, None], cfg.norm_eps)
             q, k_new, v_new = attn_lib.project_qkv(lp["attn"], h, a,
                                                    token_pos[:, None])
             if mesh is not None:
-                pk, pv, ctx = self._sharded_append_attend(
+                pkv, ctx = self._sharded_append_attend(
                     mesh, axis or "model", q[:, 0], k_new[:, 0],
-                    v_new[:, 0], pk, pv, lists)
+                    v_new[:, 0], pkv, lists, attn_impl)
             else:
                 # Padding lanes carry out-of-bounds slots -> scatter drops
                 # them.
-                pk = paged_kv.append_to_pool(pk, k_new[:, 0], lists["slots"])
-                pv = paged_kv.append_to_pool(pv, v_new[:, 0], lists["slots"])
-                ctx = attention_api.paged_attention_chunked_op(
-                    q[:, 0], pk, pv, lists["block_list"],
-                    lists["block_req"], lists["block_pos"],
-                    lists["kv_lens"], lists["token_req"], token_pos,
-                    backend=attn_backend, q_chunk=q_chunk,
-                    prefetch_depth=prefetch_depth)
+                pkv = paged_kv.append_to_pool(
+                    pkv, paged_kv.fuse_kv_heads(k_new[:, 0], v_new[:, 0]),
+                    lists["slots"])
+                if ragged:
+                    ctx = attention_api.paged_attention_ragged_op(
+                        q[:, 0], pkv, lists["block_list"],
+                        lists["block_req"], lists["block_pos"],
+                        lists["cu_q_lens"], lists["cu_kv_lens"],
+                        lists["seq_slot"], backend=attn_backend,
+                        num_queries_per_block=num_queries_per_block,
+                        num_kv_pages_per_block=num_kv_pages_per_block,
+                        vmem_limit_bytes=vmem_limit_bytes)
+                else:
+                    pk, pv = paged_kv.fused_kv_views(pkv)
+                    ctx = attention_api.paged_attention_chunked_op(
+                        q[:, 0], pk, pv, lists["block_list"],
+                        lists["block_req"], lists["block_pos"],
+                        lists["kv_lens"], lists["token_req"], token_pos,
+                        backend=attn_backend, q_chunk=q_chunk,
+                        prefetch_depth=prefetch_depth)
             x = x + jnp.einsum("be,ed->bd", ctx.reshape(x.shape[0], -1),
                                lp["attn"]["wo"])
             h = rmsnorm(lp["ln2"], x[:, None], cfg.norm_eps)
@@ -397,21 +438,20 @@ class TransformerLM:
                                          groups=self.moe_groups)
             else:
                 o = mlp_apply(lp["mlp"], h, cfg.act)
-            return x + o[:, 0], (pk, pv)
+            return x + o[:, 0], pkv
 
-        x, (pk, pv) = jax.lax.scan(body, x, (params["layers"], pools["k"],
-                                             pools["v"]))
+        x, pkv = jax.lax.scan(body, x, (params["layers"], pools["kv"]))
         if "logit_lanes" in lists:
             # Speculative verify: a row per (slot, lane) pair, (B, R, V).
             x_sel = jnp.take(x, lists["logit_lanes"], axis=0)   # (B, R, D)
             x_sel = rmsnorm(params["final_norm"], x_sel, cfg.norm_eps)
             return (unembed(params.get("head", params["embed"]), x_sel),
-                    {"k": pk, "v": pv})
+                    {"kv": pkv})
         # Unembed only each slot's last valid lane: (B, D) -> (B, V).
         x_last = jnp.take(x, lists["last_lane"], axis=0)
         x_last = rmsnorm(params["final_norm"], x_last[:, None], cfg.norm_eps)
         logits = unembed(params.get("head", params["embed"]), x_last)[:, 0]
-        return logits, {"k": pk, "v": pv}
+        return logits, {"kv": pkv}
 
     # ---------------------------------------------------------------- loss
     def loss(self, params, batch):

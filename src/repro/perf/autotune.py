@@ -1,0 +1,123 @@
+"""The measured kernel-tunable table keyed by (page_size, head_dim, backend).
+
+``benchmarks/paged_attention_bench.py`` sweeps the ``paged_attention_ragged``
+tunables (``num_queries_per_block``, ``num_kv_pages_per_block``,
+``vmem_limit_bytes``) over a grid that always includes the registry defaults,
+times each configuration on the same workload, and emits one row per point
+with ``tune=1`` attribution in the derived string; the fastest point per
+``(page_size, head_dim, backend)`` cell additionally carries ``best=1``.
+Committed as ``BENCH_010.json``, those rows are the table this module parses
+back out — the kernel-layer mirror of :mod:`repro.perf.table`'s policy
+winners.
+
+The serving engine consults :func:`resolve_tunables` at construction for any
+tunable the config leaves at 0 (counted ``tuned_resolved`` on a hit,
+``tuned_fallback`` to the registry defaults on any miss — mirroring PR 9's
+``auto_resolved``/``auto_fallback``).  Because the sweep grid contains the
+defaults, the resolved config meets-or-beats the hand-picked values by
+construction on every swept scenario.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+from repro.perf.table import check_schema, parse_derived
+
+__all__ = ["TUNABLE_KEYS", "TuneTable", "default_tune_table_path",
+           "active_tune_table", "resolve_tunables"]
+
+TUNABLE_KEYS = ("num_queries_per_block", "num_kv_pages_per_block",
+                "vmem_limit_bytes")
+
+DEFAULT_TUNE_TABLE_NAME = "BENCH_010.json"
+_ENV_TUNE_TABLE = "REPRO_TUNE_TABLE"
+
+Key = Tuple[int, int, str]
+
+
+class TuneTable:
+    """Best measured tunable config per (page_size, head_dim, backend)."""
+
+    def __init__(self, best: Dict[Key, Dict[str, int]]):
+        self.best = best
+
+    @classmethod
+    def from_results(cls, results: List[Dict], *,
+                     origin: str = "<in-memory>") -> "TuneTable":
+        """Build from benchmark-JSON results (the list ``run.py`` writes)."""
+        best: Dict[Key, Dict[str, int]] = {}
+        for result in results:
+            if result.get("module") != "paged_attention_bench":
+                continue
+            check_schema(result, origin)
+            for row in result.get("rows", []):
+                d = parse_derived(row.get("derived", ""))
+                if d.get("tune") != "1" or d.get("best") != "1":
+                    continue
+                try:
+                    key = (int(d["page_size"]), int(d["head_dim"]),
+                           d["backend"])
+                    cfg = {k: int(d[k]) for k in TUNABLE_KEYS}
+                except (KeyError, ValueError):
+                    continue          # malformed row — never half-resolve
+                best[key] = cfg
+        return cls(best)
+
+    @classmethod
+    def load(cls, path: str) -> "TuneTable":
+        with open(path) as f:
+            results = json.load(f)
+        return cls.from_results(results, origin=path)
+
+    def lookup(self, page_size: int, head_dim: int,
+               backend: str) -> Optional[Dict[str, int]]:
+        return self.best.get((int(page_size), int(head_dim), str(backend)))
+
+
+def default_tune_table_path() -> Optional[str]:
+    """Committed-table lookup: env override, cwd, then the repo checkout."""
+    env = os.environ.get(_ENV_TUNE_TABLE)
+    if env:
+        return env
+    cwd_path = os.path.join(os.getcwd(), DEFAULT_TUNE_TABLE_NAME)
+    if os.path.exists(cwd_path):
+        return cwd_path
+    here = os.path.dirname(os.path.abspath(__file__))
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(here)))
+    repo_path = os.path.join(repo, DEFAULT_TUNE_TABLE_NAME)
+    if os.path.exists(repo_path):
+        return repo_path
+    return None
+
+
+_TABLE_CACHE: Dict[Tuple[str, float], TuneTable] = {}
+
+
+def active_tune_table(path: Optional[str] = None) -> Optional[TuneTable]:
+    """The committed tune table (None on any miss — caller falls back)."""
+    path = path or default_tune_table_path()
+    if path is None:
+        return None
+    try:
+        key = (path, os.path.getmtime(path))
+        if key not in _TABLE_CACHE:
+            _TABLE_CACHE[key] = TuneTable.load(path)
+        return _TABLE_CACHE[key]
+    except (OSError, ValueError):  # unreadable/incompatible file = no table
+        return None
+
+
+def resolve_tunables(page_size: int, head_dim: int, backend: str,
+                     path: Optional[str] = None) -> Optional[Dict[str, int]]:
+    """Measured-best tunables for this cell, or None on any miss.
+
+    The caller (the engine) counts a hit as ``tuned_resolved`` and a miss as
+    ``tuned_fallback`` to the registry defaults; this function never raises
+    for an absent or unreadable table.
+    """
+    table = active_tune_table(path)
+    if table is None:
+        return None
+    return table.lookup(page_size, head_dim, backend)

@@ -113,13 +113,15 @@ class PerfTable:
     def comparable_rows(self, scenario: str) -> List[Dict[str, str]]:
         """Fixed-triple rows for ``scenario`` at the baseline config.
 
-        Spec/overlap variants and ``auto`` rows are excluded: the winner must
-        be a concrete triple measured under the same config ``auto`` runs at.
+        Spec/overlap/multi-device variants and ``auto`` rows are excluded:
+        the winner must be a concrete triple measured under the same config
+        ``auto`` runs at.
         """
         return [r for r in self.rows
                 if r.get("scenario") == scenario
                 and r.get("spec", "off") == "off"
                 and r.get("overlap", "off") == "off"
+                and r.get("devices", "1") == "1"
                 and "auto" not in tuple(r.get(a) for a in AXES)]
 
     def winner(self, scenario: str) -> Optional[Dict[str, str]]:

@@ -94,7 +94,7 @@ def copy_block_tokens(dst_pools, src_pools, src_slots: np.ndarray,
     sb, so = np.asarray(src_slots[:, 0]), np.asarray(src_slots[:, 1])
     db, do = jnp.asarray(dst_slots[:, 0]), jnp.asarray(dst_slots[:, 1])
     out = dict(dst_pools)
-    for c in ("k", "v"):
+    for c in dst_pools:          # ONE fused kv channel with the fused pool
         # documented host roundtrip — declared to the host-sync sanitizer
         vals = sanitize_lib.host_read(src_pools[c][:, sb, so],
                                       reason="disagg-handoff")  # (L, n, ...)

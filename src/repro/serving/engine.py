@@ -66,7 +66,8 @@ from repro.analysis import sanitize as sanitize_lib
 from repro.config import ModelConfig, ServeConfig
 from repro.core import dispatch
 from repro.core.paged_kv import (
-    BlockAllocator, HostPool, copy_pool_blocks, make_pool)
+    BlockAllocator, HostPool, copy_pool_blocks, make_fused_pool)
+from repro.perf import autotune as autotune_lib
 from repro.serving import policy as policy_lib
 from repro.serving import sampling as sampling_lib
 from repro.serving import spec as spec_lib
@@ -194,9 +195,13 @@ class ServingEngine:
                     "promote block copies assume single-device block slices)")
             self.host_pool = HostPool(serve.host_blocks)
             self.alloc.host_pool = self.host_pool
-        pk, pv = make_pool(cfg.num_layers, nb, bs, a.num_kv_heads, a.head_dim,
-                           jnp.dtype(cfg.dtype))
-        self.pools = {"k": pk, "v": pv}
+        # ONE fused head-interleaved buffer ([K0, V0, K1, V1, ...] on the
+        # head axis): the allocator, CoW drain, tier demote/promote and the
+        # disagg handoff each move a single pool; the chunked path reads it
+        # through split views (repro.core.paged_kv.fused_kv_views).
+        self.pools = {"kv": make_fused_pool(
+            cfg.num_layers, nb, bs, a.num_kv_heads, a.head_dim,
+            jnp.dtype(cfg.dtype))}
         if mesh is not None:
             from jax.sharding import NamedSharding
             from jax.sharding import PartitionSpec as P
@@ -226,14 +231,21 @@ class ServingEngine:
         # the CallSpec carries the mesh as the capability evidence): the
         # per-layer combine is not a preference a config hint can override,
         # it is what makes the sequence-sharded pool computable at all.
+        self.attn_impl = str(serve.attn_impl)
+        if self.attn_impl not in ("ragged", "chunked"):
+            raise ValueError(
+                f"attn_impl {serve.attn_impl!r}: expected 'ragged' or "
+                "'chunked'")
+        fam = ("paged_attention_ragged" if self.attn_impl == "ragged"
+               else "paged_attention_chunked")
         if mesh is not None:
             self.attn_backend = dispatch.resolve(
-                "paged_attention_chunked", dispatch.SHARDED,
+                fam, dispatch.SHARDED,
                 spec=dispatch.CallSpec(platform=jax.default_backend(),
                                        kwargs={"mesh": mesh})).backend
         else:
             self.attn_backend = dispatch.resolve(
-                "paged_attention_chunked", config=serve.backend).backend
+                fam, config=serve.backend).backend
         self._metrics = EngineMetrics(backend=self.attn_backend)
         self._key = jax.random.PRNGKey(seed)
         self._step_count = 0
@@ -246,6 +258,28 @@ class ServingEngine:
         self.overlap = bool(serve.overlap)
         self.prefetch_depth = int(serve.prefetch_depth)
         self.q_chunk = int(serve.q_chunk)
+        # Ragged-kernel tunables: explicit config value (> 0) wins; fields
+        # left at 0 consult the committed autotune table for this
+        # (page_size, head_dim, backend) cell (repro.perf.autotune,
+        # BENCH_010.json — counted tuned_resolved / tuned_fallback, the
+        # kernel-layer mirror of the `auto` policy triple), falling back to
+        # the registry defaults on any miss.
+        defaults = dict(dispatch.get_op("paged_attention_ragged").tunables)
+        self._tune_counters = {"tuned_resolved": 0, "tuned_fallback": 0}
+        explicit = {k: int(getattr(serve, k)) for k in
+                    autotune_lib.TUNABLE_KEYS}
+        if self.attn_impl == "ragged" and any(
+                v == 0 for v in explicit.values()):
+            tuned = autotune_lib.resolve_tunables(bs, a.head_dim,
+                                                  self.attn_backend)
+            if tuned is not None:
+                defaults.update(tuned)
+                self._tune_counters["tuned_resolved"] = 1
+            else:
+                self._tune_counters["tuned_fallback"] = 1
+        self.attn_tunables = {k: (explicit[k] if explicit[k] > 0
+                                  else int(defaults[k]))
+                              for k in autotune_lib.TUNABLE_KEYS}
         # Runtime sanitizers (repro.analysis.sanitize): retrace guard on
         # the step dispatch, host-sync guard around the build half, and
         # allocator invariant checks after every commit reconciliation.
@@ -264,6 +298,8 @@ class ServingEngine:
         mesh_axis = self.mesh_axis if mesh is not None else None
         prefetch_depth = self.prefetch_depth
         q_chunk = self.q_chunk
+        attn_impl = self.attn_impl
+        attn_tunables = dict(self.attn_tunables)
 
         def fused(params, pools, lists, tokens, tok_src, nxt_prev, key,
                   temps, top_ks, top_ps):
@@ -276,7 +312,7 @@ class ServingEngine:
             logits, pools = model.decode_tokens_paged(
                 params, pools, lists, tokens, attn_backend=attn_backend,
                 q_chunk=q_chunk, prefetch_depth=prefetch_depth, mesh=mesh,
-                axis=mesh_axis)
+                axis=mesh_axis, attn_impl=attn_impl, **attn_tunables)
             nxt = sampling_lib.sample_batched(key, logits, temps, top_ks,
                                               top_ps)
             return nxt, pools
@@ -316,7 +352,8 @@ class ServingEngine:
                 logits, pools = model.decode_tokens_paged(
                     params, pools, lists, tokens, attn_backend=attn_backend,
                     q_chunk=q_chunk, prefetch_depth=prefetch_depth,
-                    mesh=mesh, axis=mesh_axis)
+                    mesh=mesh, axis=mesh_axis, attn_impl=attn_impl,
+                    **attn_tunables)
                 out, acc = spec_lib.verify_batched(
                     key, logits, drafts, draft_lens, temps, top_ks, top_ps)
                 return out, acc, pools
@@ -458,11 +495,31 @@ class ServingEngine:
                 br[cursor:cursor + n] = req.slot
                 bp[cursor:cursor + n] = np.arange(n)
                 cursor += n
+        # Ragged metadata: each committed entry is one contiguous lane run
+        # (decode entries first, then prefill chunks — exactly the order the
+        # lanes were rendered above), so the prefix sums + slot map describe
+        # the same (token_req, token_pos, kv_lens) lanes the chunked path
+        # reads directly.  Bs-bucketed like every slot-keyed array, so the
+        # ragged program compiles per (T, Bs) bucket — no extra retraces.
+        q_lens = np.zeros((Bs,), np.int64)
+        kv_l = np.zeros((Bs,), np.int64)
+        seq_slot = np.full((Bs,), Bs, np.int32)         # Bs == dropped slot
+        for j, (req, n, pos0) in enumerate(committed):
+            seq_slot[j] = req.slot
+            q_lens[j] = n
+            kv_l[j] = pos0 + n
+        cu_q = np.zeros((Bs + 1,), np.int32)
+        cu_kv = np.zeros((Bs + 1,), np.int32)
+        cu_q[1:] = np.cumsum(q_lens)
+        cu_kv[1:] = np.cumsum(kv_l)
         lists = {
             "block_list": jnp.asarray(bl), "block_req": jnp.asarray(br),
             "block_pos": jnp.asarray(bp), "kv_lens": jnp.asarray(kv_lens),
             "token_req": jnp.asarray(token_req),
             "token_pos": jnp.asarray(token_pos),
+            "cu_q_lens": jnp.asarray(cu_q),
+            "cu_kv_lens": jnp.asarray(cu_kv),
+            "seq_slot": jnp.asarray(seq_slot),
             "slots": jnp.asarray(slots),
             "last_lane": jnp.asarray(last_lane),
         }
@@ -618,13 +675,15 @@ class ServingEngine:
     def _drain_tier(self) -> None:
         """Apply queued host-tier traffic to the device pools, IN ORDER.
 
-        A demote reads its block's (k, v) slices to host BEFORE any same-step
-        reuse overwrites them (the slice is a data dependency on the in-flight
-        program, so in-flight writes land first and the read content is the
-        committed content); a promote scatters a previously saved host copy
-        into its fresh block.  Runs before the CoW drain: CoW destinations
-        are fresh pops that may be demoted blocks being reused.
+        A demote reads its block's per-channel pool slices (ONE fused kv
+        slice) to host BEFORE any same-step reuse overwrites them (the slice
+        is a data dependency on the in-flight program, so in-flight writes
+        land first and the read content is the committed content); a promote
+        scatters a previously saved host copy into its fresh block.  Runs
+        before the CoW drain: CoW destinations are fresh pops that may be
+        demoted blocks being reused.
         """
+        channels = sorted(self.pools)
         ops = self.alloc.drain_tier_ops()
         for kind, entry, blk in ops:
             if kind == "demote":
@@ -633,10 +692,10 @@ class ServingEngine:
                 entry.data = tuple(
                     sanitize_lib.host_read(self.pools[c][:, blk],
                                            reason="tier-drain")
-                    for c in ("k", "v"))
+                    for c in channels)
             else:
                 assert entry.data is not None, "promote before demote copy"
-                for c, val in zip(("k", "v"), entry.data):
+                for c, val in zip(channels, entry.data):
                     self.pools[c] = self.pools[c].at[:, blk].set(
                         jnp.asarray(val, self.pools[c].dtype))
 
@@ -950,6 +1009,12 @@ class ServingEngine:
             "overlap": self.overlap,
             "prefetch_depth": self.prefetch_depth,
             "q_chunk": self.q_chunk,
+            # Ragged-kernel attribution: which attention family the fused
+            # step dispatched and the resolved tunables (explicit config,
+            # autotune-table hit, or registry defaults — the
+            # tuned_resolved/tuned_fallback counters below say which).
+            "attn_impl": self.attn_impl,
+            **self.attn_tunables,
             "blocks_free": self.alloc.num_free,
             "preemptions": self.scheduler.num_preemptions,
             "slot_compactions": self.scheduler.num_slot_compactions,
@@ -1006,6 +1071,8 @@ class ServingEngine:
         }
         m["policy_counters"].update(
             {f"tier.{k}": v for k, v in sorted(tier_counters.items())})
+        m["policy_counters"].update(
+            {f"tune.{k}": v for k, v in sorted(self._tune_counters.items())})
         # Sanitizer attribution (docs/static_analysis.md): whether the run
         # was guarded plus the guard counters, ALSO flattened next to the
         # policy counters so benchmark rows carry them the same way.  A

@@ -370,10 +370,12 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 echo "sanitized saturation smoke OK"
 
 # Trace-replay smoke + perf-regression gate (docs/perf_gate.md): the pinned
-# mixed trace through all seven sweep configs (REPRO_BENCH_SMOKE=1 restricts
+# mixed trace through all eight sweep configs (REPRO_BENCH_SMOKE=1 restricts
 # the scenario list ONLY — traces and configs are identical to the committed
-# quick-mode baseline, so the rows are bit-comparable). The module itself
-# asserts `auto` resolved (not fell back) and met-or-beat every fixed triple;
+# quick-mode baseline, so the rows are bit-comparable). XLA_FLAGS forces the
+# 2 host devices the pinned `dev2` sharded row needs; the module asserts its
+# deterministic counters bit-identical to the single-device fcfs twin, and
+# that `auto` resolved (not fell back) and met-or-beat every fixed triple;
 # the check below asserts the provenance satellite (schema_version + commit +
 # per-row seed) and the auto row's resolved= attribution, then the gate diffs
 # the fresh rows against the committed BENCH_009.json on deterministic
@@ -382,6 +384,7 @@ echo "sanitized saturation smoke OK"
 TRACE_SMOKE_JSON="$(mktemp /tmp/trace_smoke.XXXXXX.json)"
 trap 'rm -f "$POLICY_SMOKE_JSON" "$SPEC_SMOKE_JSON" "$DISAGG_SMOKE_JSON" \
     "$TRACE_SMOKE_JSON"' EXIT
+XLA_FLAGS="--xla_force_host_platform_device_count=2" \
 REPRO_BENCH_SMOKE=1 REPRO_BACKEND=ref \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.run --only trace_replay \
@@ -396,7 +399,7 @@ from repro.perf.table import SCHEMA_VERSION
 assert res["schema_version"] == SCHEMA_VERSION, res.get("schema_version")
 assert res.get("git_commit"), "missing git_commit provenance"
 rows = {r["name"]: r for r in res["rows"]}
-labels = ("fcfs", "prio", "edf", "plen", "ngram", "overlap", "auto")
+labels = ("fcfs", "prio", "edf", "plen", "ngram", "overlap", "dev2", "auto")
 for lbl in labels:
     name = f"trace_mixed_{lbl}"
     assert name in rows, f"missing sweep row {name}"
@@ -415,3 +418,68 @@ REPRO_BACKEND=ref \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m repro.perf.gate --baseline BENCH_009.json \
     --current "$TRACE_SMOKE_JSON" --threshold 0.2
+
+# Ragged-kernel + autotune-cache smoke (docs/ragged_kernel.md): the same
+# deterministic greedy workload through `attn_impl=ragged` (the default —
+# one ragged launch per layer over the fused head-interleaved KV pool) and
+# `attn_impl=chunked` (the split-view drift oracle). Asserts BIT-IDENTICAL
+# streams, the fused-pool shape (one "kv" channel, 2*num_kv_heads), the
+# metrics attribution contract for the three kernel tunables, and the
+# measured-autotune cache: the committed BENCH_010.json must resolve a
+# tuned config for a swept (page_size, head_dim, backend) cell while an
+# unknown cell falls back to the registry defaults (counted, never an
+# error) — exactly the resolve path the engine runs at construction.
+REPRO_BACKEND=ref \
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python - <<'PY'
+import numpy as np, jax
+from repro.config import ServeConfig, get_config
+from repro.core import dispatch
+from repro.models.api import build_model
+from repro.perf import autotune
+from repro.serving.engine import Request, ServingEngine
+
+cfg = get_config("smollm-360m").reduced(dtype="float32")
+model = build_model(cfg, remat=False)
+params = model.init(jax.random.PRNGKey(0))
+
+def run(attn_impl):
+    serve = ServeConfig(model=cfg.name, kv_block_size=8, max_batch=2,
+                        attn_impl=attn_impl)
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(model, params, cfg, serve, num_blocks=64)
+    for i in range(3):
+        eng.submit(Request(
+            req_id=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                (int(rng.integers(4, 10)),), dtype=np.int32),
+            max_new_tokens=5))
+    eng.run_until_done()
+    a = cfg.attention
+    assert set(eng.pools) == {"kv"}, sorted(eng.pools)
+    assert eng.pools["kv"].shape[3] == 2 * a.num_kv_heads, (
+        eng.pools["kv"].shape)
+    return {r.req_id: list(r.output) for r in eng.finished}, eng.metrics()
+
+ragged, mr = run("ragged")
+chunked, mc = run("chunked")
+assert ragged == chunked, (ragged, chunked)
+assert mr["attn_impl"] == "ragged" and mc["attn_impl"] == "chunked"
+for k in autotune.TUNABLE_KEYS:
+    assert k in mr, (k, sorted(mr))
+pc = mr["policy_counters"]
+assert pc["tune.tuned_resolved"] + pc["tune.tuned_fallback"] == 1, pc
+
+# committed-table resolve: every swept cell in BENCH_010.json must answer
+# with a full tunable assignment; an unknown cell must miss (-> defaults)
+table = autotune.active_tune_table()
+assert table is not None and table.best, "BENCH_010.json missing/empty"
+(ps, hd, backend) = sorted(table.best)[0]
+tuned = autotune.resolve_tunables(ps, hd, backend)
+assert tuned is not None and set(tuned) == set(autotune.TUNABLE_KEYS), tuned
+assert autotune.resolve_tunables(3, hd, backend) is None  # unknown cell
+defaults = dispatch.get_op("paged_attention_ragged").tunables
+assert set(defaults) == set(autotune.TUNABLE_KEYS), defaults
+print(f"ragged smoke OK: bit-identical vs chunked; autotune table "
+      f"{len(table.best)} cells, p{ps}/h{hd}/{backend} -> {tuned}")
+PY
